@@ -1,0 +1,95 @@
+"""Shared benchmark utilities: realistic tensor sources + CSV emission.
+
+Weights are synthesized per-layer from the arch configs (random init — the
+exponent statistics match trained checkpoints, see DESIGN §1 calibration);
+activations/caches come from actually RUNNING the reduced models on the
+synthetic pipeline, so the profiled streams are real model intermediates.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Iterable, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, make_reduced
+from repro.configs.base import MeshConfig, RunConfig
+from repro.models import lm, params as PM
+
+RNG = np.random.default_rng(0)
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def timeit(fn, *args, iters: int = 5) -> float:
+    fn(*args)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out) if hasattr(out, "block_until_ready") else None
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def weight_stream(arch: str, max_elems: int = 2_000_000) -> np.ndarray:
+    """Concatenated sample of the arch's (reduced) weight tensors, bf16-f32."""
+    cfg = make_reduced(get_config(arch))
+    table = lm.lm_table(cfg, MeshConfig(1, 1, 1), RunConfig())
+    params = PM.init_params(table, jax.random.key(1))
+    parts: List[np.ndarray] = []
+    tot = 0
+    for leaf in jax.tree_util.tree_leaves(params):
+        if leaf.dtype == jnp.bfloat16 and leaf.size > 256:
+            a = np.asarray(leaf.astype(jnp.float32)).reshape(-1)
+            parts.append(a)
+            tot += a.size
+            if tot >= max_elems:
+                break
+    return np.concatenate(parts)[:max_elems]
+
+
+def activation_streams(arch: str, batch: int = 2, seq: int = 64
+                       ) -> Dict[str, np.ndarray]:
+    """Run the reduced model and capture real hidden-state/cache streams."""
+    from jax.sharding import PartitionSpec as P
+    from repro.core import collectives as cl
+    cfg = make_reduced(get_config(arch))
+    mesh_cfg = MeshConfig(1, 1, 1)
+    run = RunConfig()
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    table = lm.lm_table(cfg, mesh_cfg, run)
+    dims = lm.lm_fsdp_dims(table)
+    params = PM.init_params(table, jax.random.key(1))
+    pspecs = PM.param_pspecs(table)
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab_size, (batch, seq)),
+                       jnp.int32)
+    kwargs = {}
+    if cfg.frontend == "vision_stub":
+        kwargs["front_embeds"] = jnp.asarray(
+            RNG.normal(0, 1, (batch, cfg.n_frontend_tokens, cfg.d_model)),
+            jnp.bfloat16)
+    if cfg.encdec:
+        kwargs["enc_embeds"] = jnp.asarray(
+            RNG.normal(0, 1, (batch, seq, cfg.d_model)), jnp.bfloat16)
+
+    def fwd(pp, t, kw):
+        x, caches, _ = lm.lm_forward(cfg, run, pp, t, 1, dims=dims,
+                                     want_cache=True, **kw)
+        return x, caches
+
+    kspecs = {k: P(None) for k in kwargs}
+    f = jax.jit(cl.shmap(fwd, mesh, (pspecs, P(None), kspecs),
+                         (P(None), P(None))))
+    x, caches = f(params, toks, kwargs)
+    out = {"activations": np.asarray(x.astype(jnp.float32)).reshape(-1)}
+    if caches:
+        flat = [np.asarray(l.astype(jnp.float32)).reshape(-1)
+                for l in jax.tree_util.tree_leaves(caches)
+                if hasattr(l, "dtype") and l.dtype in (jnp.bfloat16,)]
+        if flat:
+            out["cache"] = np.concatenate(flat)
+    return out

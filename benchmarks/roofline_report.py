@@ -1,0 +1,52 @@
+"""Render dry-run JSON results as the EXPERIMENTS.md roofline table.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report results/*.json
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt(v, unit=""):
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        if v == 0:
+            return "0"
+        for s, n in (("T", 1e12), ("G", 1e9), ("M", 1e6), ("k", 1e3)):
+            if abs(v) >= n:
+                return f"{v / n:.2f}{s}{unit}"
+        return f"{v:.3g}{unit}"
+    return str(v)
+
+
+def render(paths):
+    rows = []
+    for p in paths:
+        rows.extend(json.load(open(p)))
+    hdr = ("| arch | shape | mesh | dom | compute_s | memory_s | coll_s | "
+           "ideal_s | roofline | useful | note |")
+    sep = "|" + "---|" * 11
+    print(hdr)
+    print(sep)
+    for r in rows:
+        if r["status"] == "skipped":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | skip | - | "
+                  f"- | - | - | - | - | {r['reason'][:40]}... |")
+            continue
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR | - "
+                  f"| - | - | - | - | - | {r.get('error', '')[:40]} |")
+            continue
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+              f"{r['dominant'][:4]} | {r['compute_s']:.2e} | "
+              f"{r['memory_s']:.2e} | {r['collective_s']:.2e} | "
+              f"{r['ideal_s']:.2e} | {r['roofline_fraction']:.3f} | "
+              f"{r['useful_flops_ratio']:.2f} | "
+              f"compile {r['compile_s']:.0f}s |")
+
+
+if __name__ == "__main__":
+    render(sys.argv[1:])

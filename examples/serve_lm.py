@@ -1,0 +1,94 @@
+"""Batched serving with LEXI on every transport: compressed-at-rest weights,
+compressed block KV cache, compressed activation collectives.
+
+    PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python examples/serve_lm.py --arch gemma2-9b --mesh 2x4
+
+Prints per-transport compression accounting alongside throughput.
+"""
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, make_reduced
+from repro.configs.base import MeshConfig, RunConfig
+from repro.core import collectives as cl
+from repro.core import weights as W
+from repro.core.collectives import CodecConfig
+from repro.core.fixed import wire_ratio
+from repro.launch.mesh import make_mesh_from_config
+from repro.models import cache as cache_mod
+from repro.models import lm, params as PM
+from repro.serve import engine
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-9b")
+    ap.add_argument("--mesh", default="2x4")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    d, m = (int(x) for x in args.mesh.split("x"))
+    mesh_cfg = MeshConfig(data=d, model=m, pod=1)
+    mesh = make_mesh_from_config(mesh_cfg)
+    run = RunConfig(codec=CodecConfig(cache_block=32))
+    cfg = make_reduced(get_config(args.arch), tp=m)
+    table = lm.lm_table(cfg, mesh_cfg, run)
+    dims = lm.lm_fsdp_dims(table)
+    params = PM.init_params(table, jax.random.key(0))
+    pspecs = PM.param_pspecs(table)
+    tp = m
+    B, S, N = args.batch, args.prompt_len, args.new_tokens
+
+    # --- compression accounting ---------------------------------------
+    cp = W.compress_params(params, run.codec)
+    raw = W.param_bytes(params)
+    stored = W.stored_bytes(cp)
+    kvw = cache_mod.kv_width(cfg)
+    cache_raw = B * (S + N) * kvw * 2 * cfg.n_layers
+    print(f"[serve] weights at rest : {raw / 1e6:.1f} MB -> "
+          f"{stored / 1e6:.1f} MB ({raw / stored:.2f}x, LEXI-FW)")
+    print(f"[serve] KV cache (raw {cache_raw / 1e6:.2f} MB) stored packed "
+          f"at ~{wire_ratio(run.codec.k):.2f}x")
+    print(f"[serve] ICI activations packed at ~{wire_ratio(run.codec.k):.2f}x "
+          f"on every all_gather/all_to_all")
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+
+    def serve(pp, toks):
+        logits, st = engine.prefill(cfg, run, pp, dims, toks,
+                                    S + N + run.codec.cache_block, tp)
+        tok = engine.greedy_token(cfg, logits, tp)
+        outs = [tok]
+        for _ in range(N):
+            logits, st = engine.decode_step(cfg, run, pp, dims, st, tok, tp)
+            tok = engine.greedy_token(cfg, logits, tp)
+            outs.append(tok)
+        return jnp.concatenate(outs, axis=1)
+
+    f = jax.jit(cl.shmap(serve, mesh, (pspecs, P("data")), P("data")))
+    out = np.asarray(f(params, prompts))          # compile + run
+    t0 = time.time()
+    out = np.asarray(f(params, prompts))
+    dt = time.time() - t0
+    print(f"[serve] {B} x ({S}+{N}) tokens, steady state "
+          f"{B * N / dt:.1f} tok/s on CPU-interpret")
+    print(f"[serve] continuations[0][:10] = {out[0, :10].tolist()}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

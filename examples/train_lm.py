@@ -1,0 +1,63 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps
+with the full LEXI stack (compressed FSDP weight gathers, compressed
+gradient sync, compressed checkpoints) and fault-tolerant checkpointing.
+
+    PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python examples/train_lm.py --steps 300 --mesh 2x4
+
+The model is a qwen-style dense transformer sized to ~100M params
+(d=512, 12L, vocab 32k).  On one CPU this takes ~1s/step at seq 256.
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.base import MeshConfig, ModelConfig, RunConfig, ShapeConfig
+from repro.core.collectives import CodecConfig
+from repro.launch.train import train_loop
+from repro.train import fault
+
+CFG_100M = ModelConfig(
+    name="lexi-100m", family="dense", n_layers=12, d_model=512,
+    n_heads=8, n_kv_heads=4, d_ff=1536, vocab_size=32_768, head_dim=64,
+    qk_norm=True,
+)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--mesh", default="2x4")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/lexi_100m_ckpt")
+    ap.add_argument("--codec", default="full", choices=["full", "off"])
+    args = ap.parse_args()
+
+    d, m = (int(x) for x in args.mesh.split("x"))
+    n = CFG_100M.param_count()
+    print(f"[example] model: {n / 1e6:.0f}M params, mesh {d}x{m}, "
+          f"codec={args.codec}")
+    run = RunConfig(
+        codec=CodecConfig() if args.codec == "full" else CodecConfig.off(),
+        warmup_steps=max(args.steps // 10, 10), lr=6e-4)
+    shape = ShapeConfig("example", args.seq, args.batch, "train")
+
+    def once():
+        return train_loop(CFG_100M, shape, MeshConfig(d, m, 1), run,
+                          steps=args.steps, ckpt_dir=args.ckpt_dir,
+                          ckpt_every=max(args.steps // 5, 1), resume=True)
+
+    out = fault.run_with_restarts(once, max_restarts=2)
+    print(f"[example] loss {out['first_loss']:.3f} -> "
+          f"{out['final_loss']:.3f} over {args.steps} steps "
+          f"(restarts={out['restarts']}, "
+          f"stragglers={len(out['stragglers'])})")
+    return 0 if out["final_loss"] < out["first_loss"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,9 @@
+"""LEXI reproduction: lossless BF16 exponent coding as a first-class feature
+of a multi-pod JAX training/serving framework.
+
+Subpackages: core (the paper's codec + compressed collectives), kernels
+(Pallas TPU), models (manual-SPMD zoo), configs, sharding, train, serve,
+data, hw (paper's hardware models), roofline, launch.  See DESIGN.md.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,20 @@
+"""LEXI core: lossless BF16 exponent coding (the paper's contribution).
+
+Public surface:
+  entropy   -- field extraction + Shannon profiling (paper section 3)
+  huffman   -- length-limited canonical Huffman codebooks (LEXI-H)
+  bitstream -- bit-exact encode/decode + container format (LEXI-H)
+  fixed     -- static-shape deployment codec (LEXI-FW, TPU adaptation)
+  packing   -- bit-plane pack/unpack primitives
+  baselines -- RLE / BDI comparison codecs (Table 2)
+  codec     -- high-level API + CR measurement
+  collectives -- LEXI-compressed ICI collectives (shard_map)
+  weights   -- compressed-at-rest parameter store
+"""
+
+from . import baselines, bitstream, codec, entropy, fixed, huffman, packing
+
+__all__ = [
+    "baselines", "bitstream", "codec", "entropy", "fixed", "huffman",
+    "packing",
+]

@@ -1,0 +1,169 @@
+"""BF16 field extraction and exponent-stream entropy profiling (paper §3).
+
+The paper's observation: BF16 exponent streams of LLM weights, activations
+and hybrid caches carry < 3 bits of Shannon entropy and concentrate on < 32
+distinct values, while mantissas are ~7-bit incompressible.  These utilities
+extract the {sign, exponent, mantissa} fields and compute the statistics that
+drive both the codec design and the Fig-1 reproduction.
+
+Both numpy (host-side profiling, benchmarks) and jnp (in-graph, jit-able)
+variants are provided.  BF16 layout: [sign(1) | exponent(8) | mantissa(7)].
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+
+BF16_EXP_BITS = 8
+BF16_MAN_BITS = 7
+EXP_ALPHABET = 256  # 8-bit exponent field
+
+
+# ---------------------------------------------------------------------------
+# numpy (host) variants
+# ---------------------------------------------------------------------------
+
+def to_bf16_u16(x: np.ndarray) -> np.ndarray:
+    """View an array as BF16 bit patterns (uint16), rounding from wider types.
+
+    Uses round-to-nearest-even via ml_dtypes so host profiling matches what a
+    TPU would hold in HBM.
+    """
+    if x.dtype == np.uint16:
+        return x
+    if x.dtype == ml_dtypes.bfloat16:
+        return x.view(np.uint16)
+    return x.astype(ml_dtypes.bfloat16).view(np.uint16)
+
+
+def split_fields(u16: np.ndarray) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(sign, exponent, mantissa) uint8 arrays from BF16 bit patterns."""
+    sign = (u16 >> 15).astype(np.uint8)
+    exp = ((u16 >> 7) & 0xFF).astype(np.uint8)
+    man = (u16 & 0x7F).astype(np.uint8)
+    return sign, exp, man
+
+
+def signman_byte(u16: np.ndarray) -> np.ndarray:
+    """Pack {sign, mantissa} into one byte: sign<<7 | mantissa."""
+    sign, _, man = split_fields(u16)
+    return ((sign << 7) | man).astype(np.uint8)
+
+
+def combine_fields(sign: np.ndarray, exp: np.ndarray, man: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`split_fields` -> uint16 BF16 bit patterns."""
+    return (
+        (sign.astype(np.uint16) << 15)
+        | (exp.astype(np.uint16) << 7)
+        | man.astype(np.uint16)
+    )
+
+
+def exponent_histogram(exp: np.ndarray) -> np.ndarray:
+    """256-bin histogram of the exponent stream (float64 counts)."""
+    return np.bincount(exp.reshape(-1), minlength=EXP_ALPHABET).astype(np.float64)
+
+
+def shannon_entropy(hist: np.ndarray) -> float:
+    """Shannon entropy (bits/symbol) of a histogram."""
+    total = hist.sum()
+    if total == 0:
+        return 0.0
+    p = hist[hist > 0] / total
+    return float(-(p * np.log2(p)).sum())
+
+
+@dataclasses.dataclass(frozen=True)
+class ExponentStats:
+    """Fig-1-style profile of one tensor/stream."""
+
+    n: int
+    exp_entropy_bits: float
+    man_entropy_bits: float
+    distinct_exponents: int
+    top32_coverage: float      # fraction of values covered by the 32 most
+                               # frequent exponents (paper: ~1.0)
+    huffman_bits_per_exp: float  # optimal prefix-code cost (filled by codec)
+
+    @property
+    def exp_cr(self) -> float:
+        """Exponent-only compression ratio at the Huffman code cost."""
+        return BF16_EXP_BITS / max(self.huffman_bits_per_exp, 1e-9)
+
+    @property
+    def overall_cr(self) -> float:
+        """Whole-BF16-value CR: sign+mantissa travel verbatim (8 bits)."""
+        return 16.0 / (8.0 + max(self.huffman_bits_per_exp, 1e-9))
+
+
+def profile_exponents(x: np.ndarray) -> ExponentStats:
+    """Profile a tensor per paper §3.1 (entropy, distinct count, coverage)."""
+    from . import huffman  # local import to avoid cycle
+
+    u16 = to_bf16_u16(np.asarray(x))
+    _, exp, man = split_fields(u16)
+    hist = exponent_histogram(exp)
+    man_hist = np.bincount(man.reshape(-1), minlength=128).astype(np.float64)
+    order = np.argsort(-hist, kind="stable")
+    top32 = hist[order[:32]].sum() / max(hist.sum(), 1.0)
+    lengths = huffman.length_limited_lengths(hist, max_len=huffman.MAX_CODE_LEN)
+    code_bits = sum(hist[s] * l for s, l in lengths.items())
+    return ExponentStats(
+        n=int(hist.sum()),
+        exp_entropy_bits=shannon_entropy(hist),
+        man_entropy_bits=shannon_entropy(man_hist),
+        distinct_exponents=int((hist > 0).sum()),
+        top32_coverage=float(top32),
+        huffman_bits_per_exp=float(code_bits / max(hist.sum(), 1.0)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# jnp (in-graph) variants — used by the deployment codec and kernels' refs
+# ---------------------------------------------------------------------------
+
+def jnp_to_u16(x: jax.Array) -> jax.Array:
+    """Bitcast a bf16 array to uint16 (casts other floats to bf16 first)."""
+    if x.dtype != jnp.bfloat16:
+        x = x.astype(jnp.bfloat16)
+    return jax.lax.bitcast_convert_type(x, jnp.uint16)
+
+
+def jnp_from_u16(u16: jax.Array) -> jax.Array:
+    return jax.lax.bitcast_convert_type(u16.astype(jnp.uint16), jnp.bfloat16)
+
+
+def jnp_split_fields(u16: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    sign = (u16 >> 15).astype(jnp.uint8)
+    exp = ((u16 >> 7) & 0xFF).astype(jnp.uint8)
+    man = (u16 & 0x7F).astype(jnp.uint8)
+    return sign, exp, man
+
+
+def jnp_signman(u16: jax.Array) -> jax.Array:
+    sign, _, man = jnp_split_fields(u16)
+    return ((sign << 7) | man).astype(jnp.uint8)
+
+
+def jnp_combine(signman: jax.Array, exp: jax.Array) -> jax.Array:
+    """Rebuild uint16 BF16 patterns from a signman byte + exponent byte."""
+    sm = signman.astype(jnp.uint16)
+    return ((sm & 0x80) << 8) | (exp.astype(jnp.uint16) << 7) | (sm & 0x7F)
+
+
+def jnp_exponent_histogram(exp: jax.Array) -> jax.Array:
+    """256-bin histogram, int32, jit/vmap-friendly (scatter-add)."""
+    flat = exp.reshape(-1).astype(jnp.int32)
+    return jnp.zeros((EXP_ALPHABET,), jnp.int32).at[flat].add(1)
+
+
+def jnp_entropy(hist: jax.Array) -> jax.Array:
+    total = jnp.maximum(hist.sum(), 1).astype(jnp.float32)
+    p = hist.astype(jnp.float32) / total
+    return -jnp.sum(jnp.where(p > 0, p * jnp.log2(jnp.where(p > 0, p, 1.0)), 0.0))

@@ -1,0 +1,48 @@
+"""Bit-plane packing of k-bit exponent codes into uint32 lanes (pure jnp).
+
+The deployment codec stores each element's k-bit dictionary index "bit-plane
+transposed": lane j of plane b holds bit b of element 32*i + j.  This layout
+is fully vectorizable on the VPU (shift/and/sum — no horizontal dependencies),
+is trivially tileable for Pallas BlockSpecs, and wastes zero bits:
+
+    codes (..., N) uint32, N % 32 == 0   ->   planes (..., k, N // 32) uint32
+
+The same functions are used by the pure-JAX deployment path, the Pallas
+kernel references, and tests.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+LANES = 32
+
+
+def pad_to_lanes(n: int) -> int:
+    """Smallest multiple of 32 >= n."""
+    return (n + LANES - 1) // LANES * LANES
+
+
+def bitplane_pack(codes: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Pack k-bit codes (last dim divisible by 32) into uint32 planes."""
+    assert codes.shape[-1] % LANES == 0, codes.shape
+    x = codes.astype(jnp.uint32).reshape(*codes.shape[:-1], -1, LANES)
+    lane = jnp.arange(LANES, dtype=jnp.uint32)
+    planes = [
+        jnp.sum(((x >> jnp.uint32(b)) & jnp.uint32(1)) << lane,
+                axis=-1, dtype=jnp.uint32)
+        for b in range(k)
+    ]
+    return jnp.stack(planes, axis=-2)  # (..., k, N/32)
+
+
+def bitplane_unpack(planes: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Inverse of :func:`bitplane_pack` -> (..., N) uint32 codes."""
+    assert planes.shape[-2] == k, planes.shape
+    lane = jnp.arange(LANES, dtype=jnp.uint32)
+    # (..., k, W, 32): bit b of element (w, j)
+    bits = (planes[..., None] >> lane) & jnp.uint32(1)
+    weights = (jnp.uint32(1) << jnp.arange(k, dtype=jnp.uint32))
+    codes = jnp.sum(bits * weights[..., :, None, None], axis=-3,
+                    dtype=jnp.uint32)
+    return codes.reshape(*planes.shape[:-2], -1)

@@ -1,0 +1,112 @@
+"""Compressed-at-rest parameter store (paper path (i): offline weights).
+
+Weights are compressed once (offline / at load), live in HBM as LEXI-FW
+packed buffers, and are decompressed just-in-time near compute — either by
+the pure-JAX path here (dry-run friendly) or by the fused
+``decompress_matmul`` Pallas kernel on real hardware.
+
+Small leaves (norm scales, biases, scalars) stay raw: packing them would cost
+more in dictionary/escape overhead than it saves, exactly like the paper only
+compresses the bulk streams.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import fixed
+from .collectives import CodecConfig
+
+MIN_COMPRESS_SIZE = 1 << 12   # leaves below 4096 elements stay raw
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class MaybeCompressed:
+    """A leaf that is either raw or a :class:`fixed.Compressed`."""
+
+    value: Any           # jax.Array | fixed.Compressed
+    compressed: bool
+
+    def tree_flatten(self):
+        return (self.value,), (self.compressed,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux[0])
+
+
+def _should_compress(x: jax.Array) -> bool:
+    return (x.ndim >= 1 and x.size >= MIN_COMPRESS_SIZE
+            and x.dtype in (jnp.bfloat16, jnp.float32))
+
+
+def compress_params(params: Any, cfg: CodecConfig) -> Any:
+    """Pytree of arrays -> pytree of MaybeCompressed."""
+
+    def one(x):
+        if cfg.weights and _should_compress(x):
+            return MaybeCompressed(
+                fixed.compress(x.astype(jnp.bfloat16), k=cfg.k,
+                               esc_capacity=cfg.esc_capacity(x.size)),
+                True)
+        return MaybeCompressed(x, False)
+
+    return jax.tree_util.tree_map(one, params)
+
+
+def decompress_params(cparams: Any) -> Any:
+    """Inverse of :func:`compress_params` (exact for the compressed leaves)."""
+
+    def one(leaf: MaybeCompressed):
+        return fixed.decompress(leaf.value) if leaf.compressed else leaf.value
+
+    return jax.tree_util.tree_map(
+        one, cparams, is_leaf=lambda l: isinstance(l, MaybeCompressed))
+
+
+def stored_bytes(cparams: Any) -> int:
+    """HBM bytes of the compressed store (the paper's Fig-1b metric)."""
+    total = 0
+
+    def one(leaf: MaybeCompressed):
+        nonlocal total
+        if leaf.compressed:
+            total += leaf.value.wire_bytes()
+        else:
+            total += leaf.value.size * leaf.value.dtype.itemsize
+        return leaf
+
+    jax.tree_util.tree_map(one, cparams,
+                           is_leaf=lambda l: isinstance(l, MaybeCompressed))
+    return total
+
+
+def param_bytes(params: Any) -> int:
+    return sum(l.size * l.dtype.itemsize for l in jax.tree_util.tree_leaves(params))
+
+
+def fsdp_gather_params(cparams: Any, axis_name: str,
+                       cfg: CodecConfig) -> Any:
+    """FSDP-style per-layer weight all-gather with packed wire format.
+
+    Parameters live sharded *and* compressed; gathering for use moves packed
+    bytes over ICI (the paper's "transmit weights in compact lossless form"),
+    decompressing only at the consumer.  Call inside shard_map with leaves
+    pre-sharded along their first axis.
+    """
+
+    def one(leaf: MaybeCompressed):
+        if leaf.compressed:
+            gathered = jax.lax.all_gather(leaf.value, axis_name, axis=0,
+                                          tiled=False)
+            parts = jax.vmap(fixed.decompress)(gathered)
+            return parts.reshape((-1,) + parts.shape[2:])
+        return jax.lax.all_gather(leaf.value, axis_name, axis=0, tiled=True)
+
+    return jax.tree_util.tree_map(
+        one, cparams, is_leaf=lambda l: isinstance(l, MaybeCompressed))

@@ -1,0 +1,2 @@
+"""Data substrate: deterministic synthetic token pipeline."""
+from . import pipeline  # noqa: F401

@@ -1,0 +1,71 @@
+"""Deterministic synthetic token pipeline (host-sharded, resumable).
+
+Real WikiText-2/C4 are unavailable offline (DESIGN §7); this pipeline
+generates a reproducible token stream whose *statistics* (Zipfian token
+distribution -> bell-shaped activations after embedding) match what the
+LEXI profiling needs.  Every batch is a pure function of (seed, step,
+host_slice), so training resumes exactly after restart and every data shard
+is independent — the properties a production loader must have.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    """Zipf-distributed LM batches with next-token labels."""
+
+    vocab_size: int
+    global_batch: int
+    seq_len: int
+    seed: int = 0
+    zipf_a: float = 1.2
+    # multimodal extras
+    d_model: int = 0
+    n_front_tokens: int = 0       # vision stub
+    enc_embeds: bool = False      # audio stub (encoder frame embeddings)
+
+    def batch_at(self, step: int) -> Dict[str, jnp.ndarray]:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step]))
+        # Zipf via inverse-CDF on a truncated power law (fast, vectorized)
+        u = rng.random((self.global_batch, self.seq_len + 1))
+        ranks = np.floor(
+            (u * (self.vocab_size ** (1 - self.zipf_a) - 1) + 1)
+            ** (1 / (1 - self.zipf_a))).astype(np.int64)
+        toks = np.clip(ranks - 1, 0, self.vocab_size - 1).astype(np.int32)
+        out: Dict[str, jnp.ndarray] = {
+            "tokens": jnp.asarray(toks[:, :-1]),
+            "labels": jnp.asarray(toks[:, 1:]),
+        }
+        if self.n_front_tokens:
+            out["front_embeds"] = jnp.asarray(
+                rng.normal(0, 1, (self.global_batch, self.n_front_tokens,
+                                  self.d_model)), jnp.bfloat16)
+        if self.enc_embeds:
+            out["enc_embeds"] = jnp.asarray(
+                rng.normal(0, 1, (self.global_batch, self.seq_len,
+                                  self.d_model)), jnp.bfloat16)
+        return out
+
+    def iterate(self, start_step: int = 0) -> Iterator[Dict]:
+        step = start_step
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+def for_config(cfg, shape, seed: int = 0) -> SyntheticLM:
+    return SyntheticLM(
+        vocab_size=cfg.vocab_size, global_batch=shape.global_batch,
+        seq_len=shape.seq_len, seed=seed, d_model=cfg.d_model,
+        n_front_tokens=(cfg.n_frontend_tokens
+                        if cfg.frontend == "vision_stub" else 0),
+        enc_embeds=cfg.encdec)

@@ -1,0 +1,2 @@
+"""Hardware models of the paper's codec + chiplet platform (sections 4-5)."""
+from . import area, lanecache, lut_decoder, noc  # noqa: F401

@@ -1,0 +1,70 @@
+"""GF 22 nm area/power accounting (paper §5.4, Table 4) + node scaling.
+
+The numbers below are the paper's post-synthesis results for the selected
+configuration (10 lanes × 8-entry caches, 10 encode LUTs, one global
+histogram + codebook generator, 10 four-stage decode LUTs).  The model
+exposes them parametrically so the DSE benchmarks can sweep lanes/depths,
+and scales 22 nm → 16 nm with the Stillmaker-Baas area factor the paper
+uses for the Simba comparison.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+# paper Table 4 (per-unit, GF 22 nm, 1 GHz)
+LOCAL_CACHE_UM2 = 9.85
+LOCAL_CACHE_MW = 0.25
+GLOBAL_HIST_UM2 = 13_113.0
+GLOBAL_HIST_MW = 5.23
+ENC_LUT_UM2 = 79.87
+ENC_LUT_MW = 1.74
+DEC_LUT_UM2 = 98.5
+DEC_LUT_MW = 2.03
+
+# Stillmaker & Baas scaling, 22 nm -> 16 nm (paper: 14995.2 -> 5452.8 um^2)
+AREA_SCALE_22_TO_16 = 5452.8 / 14995.2
+SIMBA_CHIPLET_MM2 = 6.0
+
+
+@dataclasses.dataclass
+class LexiArea:
+    lanes: int = 10
+    cache_depth: int = 8
+    dec_lanes: int = 10
+
+    def breakdown_um2(self) -> Dict[str, float]:
+        depth_scale = self.cache_depth / 8.0
+        return {
+            "local_caches": self.lanes * LOCAL_CACHE_UM2 * depth_scale,
+            "global_hist_codegen": GLOBAL_HIST_UM2,
+            "enc_luts": self.lanes * ENC_LUT_UM2,
+            "dec_luts": self.dec_lanes * DEC_LUT_UM2,
+        }
+
+    def breakdown_mw(self) -> Dict[str, float]:
+        depth_scale = self.cache_depth / 8.0
+        return {
+            "local_caches": self.lanes * LOCAL_CACHE_MW * depth_scale,
+            "global_hist_codegen": GLOBAL_HIST_MW,
+            "enc_luts": self.lanes * ENC_LUT_MW,
+            "dec_luts": self.dec_lanes * DEC_LUT_MW,
+        }
+
+    @property
+    def total_um2(self) -> float:
+        return sum(self.breakdown_um2().values())
+
+    @property
+    def total_mw(self) -> float:
+        return sum(self.breakdown_mw().values())
+
+    @property
+    def total_um2_16nm(self) -> float:
+        return self.total_um2 * AREA_SCALE_22_TO_16
+
+    @property
+    def chiplet_overhead(self) -> float:
+        """Fraction of a 6 mm^2 Simba chiplet (paper: 0.09 %)."""
+        return self.total_um2_16nm / (SIMBA_CHIPLET_MM2 * 1e6)

@@ -1,0 +1,108 @@
+"""Multi-stage LUT Huffman decoder model (paper §4.4, Figs 3b/6).
+
+Stage k consumes a prefix of B_k bits (8/16/24/32 by default); short,
+frequent codes resolve in stage 1 (one cycle); rarer codes traverse deeper
+stages; the reserved escape resolves in the final stage.  The model decodes
+a real bitstream produced by ``core.bitstream`` (bit-exact against the
+canonical decoder) and reports per-symbol stage counts → average latency,
+plus an area estimate per configuration for the Fig-6 trade-off.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import bitstream, huffman
+
+DEFAULT_STAGES = (8, 16, 24, 32)
+CYCLE_NS = 1.0                      # 1 GHz
+# area model calibrated to the paper's points: a 4-stage 8-entry design
+# occupies 98.5 um^2; a single 32-bit flat LUT costs 157.6 um^2.
+AREA_PER_ENTRY_UM2 = 98.5 / (4 * 8)
+FLAT_LUT_AREA_UM2 = 157.6
+
+
+@dataclasses.dataclass
+class DecodeTrace:
+    symbols: np.ndarray
+    stage_hits: List[int]           # per-stage resolution counts
+
+    @property
+    def avg_cycles(self) -> float:
+        total = sum(self.stage_hits)
+        if not total:
+            return 0.0
+        return sum((i + 1) * h for i, h in enumerate(self.stage_hits)) / total
+
+    def latency_ns_for(self, n_symbols: int, lanes: int = 10) -> float:
+        """Average latency to decode ``n_symbols`` across ``lanes`` lanes."""
+        per_lane = -(-n_symbols // lanes)
+        return per_lane * self.avg_cycles * CYCLE_NS
+
+
+def decode_staged(stream: bitstream.EncodedStream,
+                  stages: Sequence[int] = DEFAULT_STAGES) -> DecodeTrace:
+    """Decode via staged prefix tables; asserts bit-exactness."""
+    book = stream.book
+    first_code, first_index, symbols = book.decode_tables()
+    max_l = int(book.lengths.max())
+    counts = np.bincount(book.lengths, minlength=max_l + 2)
+    bits = np.unpackbits(np.frombuffer(stream.payload, dtype=np.uint8))
+    out = np.empty(stream.n_symbols, dtype=np.uint8)
+    stage_hits = [0] * len(stages)
+    p = 0
+    for i in range(stream.n_symbols):
+        code = 0
+        l = 0
+        sym = None
+        for s_i, b_k in enumerate(stages):
+            # consume bits up to this stage's cumulative width
+            while l < min(b_k, max_l):
+                code = (code << 1) | int(bits[p + l])
+                l += 1
+                idx = code - int(first_code[l])
+                if counts[l] > 0 and 0 <= idx < counts[l]:
+                    sym = int(symbols[int(first_index[l]) + idx])
+                    break
+            if sym is not None:
+                stage_hits[s_i] += 1
+                break
+        assert sym is not None, "staged decode failed"
+        p += l
+        if sym == huffman.ESCAPE:
+            raw = 0
+            for _ in range(huffman.RAW_EXP_BITS):
+                raw = (raw << 1) | int(bits[p])
+                p += 1
+            out[i] = raw
+        else:
+            out[i] = sym
+    assert p == stream.total_bits
+    return DecodeTrace(symbols=out, stage_hits=stage_hits)
+
+
+def decoder_area_um2(stages: Sequence[int] = DEFAULT_STAGES,
+                     entries_per_stage: int = 8) -> float:
+    """Area model: entries scale linearly; a flat L_max LUT is the paper's
+    157.6 um^2 comparison point."""
+    if len(stages) == 1:
+        return FLAT_LUT_AREA_UM2
+    return len(stages) * entries_per_stage * AREA_PER_ENTRY_UM2
+
+
+def dse_points(exp_stream: np.ndarray,
+               configs: Sequence[Sequence[int]] = (
+                   (32,), (8, 32), (8, 16, 32), (8, 16, 24, 32),
+                   (4, 8, 16, 24, 32))) -> List[Tuple[str, float, float]]:
+    """Fig-6 style (config, latency_ns per 10 exponents, area) points."""
+    st = bitstream.encode(np.asarray(exp_stream, dtype=np.uint8))
+    rows = []
+    for stages in configs:
+        tr = decode_staged(st, stages)
+        name = "/".join(str(s) for s in stages)
+        rows.append((name, tr.latency_ns_for(10, lanes=1),
+                     decoder_area_um2(stages)))
+    return rows

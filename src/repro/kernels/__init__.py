@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for LEXI's compute hot-spots.
+
+  lexi_pack         -- egress exponent encoder (VPU LUT + bit-plane pack)
+  lexi_unpack       -- ingress decoder (bit-plane unpack + dict select-sum)
+  exp_histogram     -- 256-bin exponent histogram via one MXU matmul
+  decompress_matmul -- fused JIT weight decompression + MXU matmul
+
+``ops`` holds the jit'd public wrappers (auto interpret=True off-TPU);
+``ref`` holds the pure-jnp oracles every kernel is tested against.
+"""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: decode attention over a LEXI-compressed KV cache.
+
+The paper's decode-phase story fused into one kernel: each grid step streams
+ONE compressed cache block HBM→VMEM ({sign·mantissa bytes, bit-plane packed
+exponent codes, 32-entry dictionary}), decodes it on the VPU, and runs one
+online-softmax attention step on the MXU — the decompressed block never
+touches HBM, so cache bandwidth is the packed size (the −16 % §Perf decode
+win executes HERE on real hardware).
+
+    q        (B, H, hd)                      one decode token, full heads
+    signman  (nblk, B, blk, W) u8            W = 2*Hkv*hd (K‖V interleaved)
+    planes   (nblk, k, B*blk*W/32) u32
+    dicts    (nblk, 2^k) u8
+    valid    (nblk, blk) bool                live-slot mask (positions/window)
+    -> out   (B, H, hd) f32 unnormalized, m (B, H), l (B, H)
+
+Grid iterates cache blocks; the (out, m, l) partials accumulate in the
+output refs exactly like ``models.cache.attend_cache`` does in pure JAX —
+that function is this kernel's oracle (``ref.decode_attend_ref``).
+GQA mapping uses a static per-q-head kv index table (one-hot select-sum,
+no dynamic gather on the TPU path).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+LANES = 32
+NEG_INF = -2.0e38
+
+
+def _kernel(q_ref, sm_ref, planes_ref, dict_ref, valid_ref,
+            out_ref, m_ref, l_ref, *, k: int, hkv: int, hd: int,
+            kv_idx: tuple, scale: float):
+    b, h, _ = q_ref.shape
+    blk = valid_ref.shape[-1]
+    w = 2 * hkv * hd
+
+    # ---- decode the block: planes -> codes -> exponents -> bf16 ----------
+    words = planes_ref[0]                               # (k, n/32) u32
+    lane = jnp.arange(LANES, dtype=jnp.uint32)
+    codes = jnp.zeros(words.shape[1:] + (LANES,), jnp.uint32)
+    for bit in range(k):                                # unrolled
+        bits = (words[bit][:, None] >> lane) & jnp.uint32(1)
+        codes = codes | (bits << jnp.uint32(bit))
+    codes = codes.reshape(b, blk, w)
+    d = dict_ref[0]
+    exp = jnp.zeros((b, blk, w), jnp.uint16)
+    for j in range(d.shape[0]):                         # unrolled 2^k selects
+        exp = jnp.where(codes == jnp.uint32(j), jnp.uint16(0) + d[j], exp)
+    smu = sm_ref[0].astype(jnp.uint16)                  # (b, blk, w)
+    u16 = ((smu & jnp.uint16(0x80)) << 8) | (exp << 7) | (smu & jnp.uint16(0x7F))
+    kv = jax.lax.bitcast_convert_type(u16, jnp.bfloat16)
+    kv = kv.reshape(b, blk, hkv, 2, hd)
+    kmat = kv[:, :, :, 0]                               # (b, blk, hkv, hd)
+    vmat = kv[:, :, :, 1]
+
+    # ---- per-query-head kv select (static table, one-hot sum) ------------
+    # k_sel/v_sel: (b, blk, h, hd)
+    k_sel = jnp.zeros((b, blk, h, hd), jnp.bfloat16)
+    v_sel = jnp.zeros((b, blk, h, hd), jnp.bfloat16)
+    for qh, kh in enumerate(kv_idx):                    # unrolled h selects
+        k_sel = k_sel.at[:, :, qh].set(kmat[:, :, kh])
+        v_sel = v_sel.at[:, :, qh].set(vmat[:, :, kh])
+
+    # ---- one online-softmax step over this block --------------------------
+    qv = q_ref[...]                                     # (b, h, hd)
+    s = jnp.einsum("bhd,bnhd->bhn", qv, k_sel,
+                   preferred_element_type=jnp.float32) * scale
+    ok = valid_ref[0]                                   # (b, blk)
+    s = jnp.where(ok[:, None, :], s, NEG_INF)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    m_old = m_ref[...]
+    m_new = jnp.maximum(m_old, s.max(-1))
+    p = jnp.exp(s - m_new[..., None])
+    p = jnp.where(ok[:, None, :], p, 0.0)
+    alpha = jnp.exp(m_old - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(-1)
+    pv = jnp.einsum("bhn,bnhd->bhd", p, v_sel.astype(jnp.float32),
+                    preferred_element_type=jnp.float32)
+    out_ref[...] = out_ref[...] * alpha[..., None] + pv
+    m_ref[...] = m_new
+
+
+@functools.partial(jax.jit, static_argnames=("k", "hkv", "hd", "kv_idx",
+                                             "scale", "interpret"))
+def decode_attend(q, signman, planes, dicts, valid, *, k: int, hkv: int,
+                  hd: int, kv_idx: tuple, scale: float,
+                  interpret: bool = True):
+    """Returns (out (B,H,hd) f32 unnormalized, m (B,H), l (B,H)) —
+    merge across shards with ``layers.merge_partials`` as usual."""
+    nblk, b, blk, w = signman.shape
+    h = q.shape[1]
+    return pl.pallas_call(
+        functools.partial(_kernel, k=k, hkv=hkv, hd=hd, kv_idx=kv_idx,
+                          scale=scale),
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((b, h, hd), lambda i: (0, 0, 0)),
+            pl.BlockSpec((1, b, blk, w), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, k, planes.shape[-1]), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, dicts.shape[-1]), lambda i: (i, 0)),
+            pl.BlockSpec((1, b, blk), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, h, hd), lambda i: (0, 0, 0)),
+            pl.BlockSpec((b, h), lambda i: (0, 0)),
+            pl.BlockSpec((b, h), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, signman, planes, dicts, valid)

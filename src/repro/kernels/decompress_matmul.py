@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: fused JIT weight decompression + matmul.
+
+The paper stores weights compressed in DRAM/HBM and decompresses them
+just-in-time "near compute".  On TPU, "near compute" is VMEM: this kernel
+streams packed weight tiles HBM→VMEM, decodes them on the VPU, and feeds the
+MXU — HBM weight traffic is the *packed* size, and the decompressed tile
+never round-trips to HBM.  This is the memory-roofline payoff of LEXI for
+the decode phase (weight-bandwidth-bound).
+
+    out (M,N) f32 = x (M,K) bf16 @ W_packed (K,N)
+
+W_packed = (signman (K,N) u8, planes (k,K,N/32) u32, dict (2^k,) u8), as
+produced by ``ref.compress_weight_2d``.  Escape-free tiles only (k=6 at-rest
+weights never escape in practice; ``ops.decompress_matmul`` verifies).
+
+Block shapes are MXU-aligned (bm, bk, bn multiples of 128 for the dot dims;
+bn additionally a multiple of 32 for the planes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 32
+
+
+def _dm_kernel(x_ref, sm_ref, planes_ref, dict_ref, out_ref, *, k: int):
+    # --- decode W tile (bk, bn) from packed fields ---------------------------
+    sm = sm_ref[...]                                  # (bk, bn) uint8
+    words = planes_ref[...]                           # (k, bk, bn/32) uint32
+    lane = jnp.arange(LANES, dtype=jnp.uint32)
+    codes = jnp.zeros(words.shape[1:] + (LANES,), jnp.uint32)
+    for b in range(k):                                # (bk, bn/32, 32)
+        bits = (words[b][..., None] >> lane) & jnp.uint32(1)
+        codes = codes | (bits << jnp.uint32(b))
+    codes = codes.reshape(sm.shape)                   # (bk, bn)
+    d = dict_ref[...]
+    exp = jnp.zeros(sm.shape, jnp.uint16)
+    for j in range(d.shape[0]):                       # unrolled select-sum
+        exp = jnp.where(codes == jnp.uint32(j), jnp.uint16(0) + d[j], exp)
+    smu = sm.astype(jnp.uint16)
+    u16 = ((smu & jnp.uint16(0x80)) << 8) | (exp << 7) | (smu & jnp.uint16(0x7F))
+    w = jax.lax.bitcast_convert_type(u16, jnp.bfloat16)
+
+    # --- MXU matmul with K-accumulation --------------------------------------
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jnp.dot(x_ref[...], w,
+                            preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "bm", "bk", "bn", "interpret"))
+def decompress_matmul(x: jax.Array, signman: jax.Array, planes: jax.Array,
+                      dict_syms: jax.Array, *, k: int = 6, bm: int = 128,
+                      bk: int = 128, bn: int = 256,
+                      interpret: bool = True) -> jax.Array:
+    """x (M,K) bf16 @ packed W (K,N) -> (M,N) f32."""
+    m, kk = x.shape
+    _, n = signman.shape
+    bm, bk, bn = min(bm, m), min(bk, kk), min(bn, n)
+    assert m % bm == 0 and kk % bk == 0 and n % bn == 0 and bn % LANES == 0
+    grid = (m // bm, n // bn, kk // bk)
+    return pl.pallas_call(
+        functools.partial(_dm_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+            pl.BlockSpec((k, bk, bn // LANES), lambda i, j, l: (0, l, j)),
+            pl.BlockSpec((dict_syms.shape[0],), lambda i, j, l: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, signman, planes, dict_syms)

@@ -1,0 +1,129 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These are the entry points models/benchmarks use; each wrapper
+
+* reshapes arbitrary tensors into the kernels' (G, B) block layout,
+* auto-selects ``interpret=True`` off-TPU (this container is CPU-only; the
+  kernels are written for TPU and validated in interpret mode),
+* round-trips escapes through the jnp side channel so the overall semantics
+  match ``repro.core.fixed`` exactly.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import entropy as E
+from repro.core import fixed
+from . import ref
+from .decompress_matmul import decompress_matmul as _dm
+from .exp_histogram import exp_histogram as _hist
+from .lexi_pack import lexi_pack as _pack
+from .lexi_unpack import lexi_unpack as _unpack
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return not on_tpu()
+
+
+def _blockify(x: jax.Array, block: int) -> Tuple[jax.Array, int]:
+    """Flatten + zero-pad to (G, block)."""
+    flat = x.reshape(-1)
+    n = flat.size
+    pad = (-n) % block
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, block), n
+
+
+def histogram(x: jax.Array, *, block: int = ref.BLOCK_ELEMS) -> jax.Array:
+    """256-bin exponent histogram of any bf16 tensor (Pallas).
+
+    Zero-padding adds counts to bin 0 (exponent of +0.0); the wrapper
+    subtracts them so the result matches ``ref.histogram_ref`` exactly.
+    """
+    xb, n = _blockify(x.astype(jnp.bfloat16), block)
+    hist = _hist(xb, interpret=_interpret())
+    pad = xb.size - n
+    return hist.at[0].add(-pad)
+
+
+def pack(x: jax.Array, *, k: int = fixed.DEFAULT_K,
+         esc_capacity: int | None = None,
+         block: int = ref.BLOCK_ELEMS) -> fixed.Compressed:
+    """Kernel-backed equivalent of ``fixed.compress`` (same Compressed)."""
+    shape = tuple(x.shape)
+    x = x.astype(jnp.bfloat16)
+    n = x.size
+    c = esc_capacity if esc_capacity is not None else max(
+        n // fixed.DEFAULT_ESC_FRAC, 8)
+    hist = histogram(x, block=block)
+    dict_syms, enc_lut = fixed.build_dictionary(hist, k)
+    xb, _ = _blockify(x, block)
+    sm_b, planes_b = _pack(xb, enc_lut, k=k, block=block,
+                           interpret=_interpret())
+    g = xb.shape[0]
+    signman = sm_b.reshape(-1)[:n]
+    # (G, k, B/32) -> (k, G*B/32): grid-major plane order == flat group order.
+    planes = jnp.moveaxis(planes_b, 1, 0).reshape(k, -1)
+    # escape side channel (host-of-graph jnp; rare path)
+    esc = fixed.esc_index(k)
+    u16 = E.jnp_to_u16(x).reshape(-1)
+    exp = ((u16 >> 7) & 0xFF).astype(jnp.int32)
+    codes = enc_lut[exp]
+    esc_mask = codes == esc
+    slot = jnp.cumsum(esc_mask.astype(jnp.int32)) - 1
+    n_escapes = jnp.sum(esc_mask.astype(jnp.int32))
+    write_slot = jnp.where(esc_mask & (slot < c), slot, c)
+    np_ = xb.size
+    esc_pos = jnp.full((c + 1,), np_, jnp.int32).at[write_slot].set(
+        jnp.arange(n, dtype=jnp.int32), mode="drop")[:c]
+    esc_raw = jnp.zeros((c + 1,), jnp.uint8).at[write_slot].set(
+        exp.astype(jnp.uint8), mode="drop")[:c]
+    return fixed.Compressed(signman=signman, planes=planes,
+                            dict_syms=dict_syms, esc_pos=esc_pos,
+                            esc_raw=esc_raw, n_escapes=n_escapes,
+                            shape=shape, k=k)
+
+
+def unpack(ct: fixed.Compressed, *, block: int = ref.BLOCK_ELEMS) -> jax.Array:
+    """Kernel-backed equivalent of ``fixed.decompress``."""
+    n = ct.n
+    k = ct.k
+    w = ct.planes.shape[-1]                      # total words
+    bw = block // 32
+    g = w // bw
+    planes_b = jnp.moveaxis(ct.planes.reshape(k, g, bw), 0, 1)  # (G,k,bw)
+    sm = jnp.pad(ct.signman, (0, g * block - n))
+    sm_b = sm.reshape(g, block)
+    xb = _unpack(sm_b, planes_b, ct.dict_syms, k=k, interpret=_interpret())
+    out = xb.reshape(-1)[:n]
+    # patch escapes: rebuild full bf16 values at the <=C escape positions
+    # (gather signman clip-safe; sentinel positions drop at the scatter)
+    pos = jnp.minimum(ct.esc_pos, n - 1)
+    smv = ct.signman[pos].astype(jnp.uint16)
+    fix_u16 = ((smv & 0x80) << 8) | (ct.esc_raw.astype(jnp.uint16) << 7) \
+        | (smv & 0x7F)
+    fix_val = jax.lax.bitcast_convert_type(fix_u16, jnp.bfloat16)
+    out = out.at[ct.esc_pos].set(fix_val, mode="drop")
+    return out.reshape(ct.shape)
+
+
+def compress_weight(w: jax.Array, *, k: int = 6):
+    """(K,N) bf16 -> packed fields for ``matmul_compressed``."""
+    return ref.compress_weight_2d(w.astype(jnp.bfloat16), k=k)
+
+
+def matmul_compressed(x: jax.Array, signman: jax.Array, planes: jax.Array,
+                      dict_syms: jax.Array, *, k: int = 6,
+                      bm: int = 128, bk: int = 128, bn: int = 256) -> jax.Array:
+    """Fused just-in-time-decompress matmul (paper's near-compute decode)."""
+    return _dm(x.astype(jnp.bfloat16), signman, planes, dict_syms, k=k,
+               bm=bm, bk=bk, bn=bn, interpret=_interpret())

@@ -1,0 +1,121 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Layout contract shared by kernels and oracles (and bit-compatible with
+``repro.core.fixed`` / ``repro.core.packing``):
+
+* tensors are processed as (G, B) row-major blocks of a flattened stream,
+  B = BLOCK_ELEMS (default 32*128 = 4096, MXU/VPU aligned);
+* exponent codes are bit-plane packed in flat groups of 32 consecutive
+  elements: planes[(g,) b, w] holds bit b of elements 32*w .. 32*w+31 of
+  block g;
+* the encode LUT maps the 8-bit exponent to a k-bit dictionary index with
+  ESCAPE = 2^k - 1; the decode dictionary maps index -> exponent byte.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import entropy as E
+from repro.core import packing
+
+BLOCK_ROWS = 32
+BLOCK_COLS = 128
+BLOCK_ELEMS = BLOCK_ROWS * BLOCK_COLS
+
+
+def pack_ref(x: jax.Array, enc_lut: jax.Array, k: int):
+    """Oracle for ``lexi_pack``: (G, B) bf16 -> (signman (G,B) u8,
+    planes (G,k,B/32) u32)."""
+    g, b = x.shape
+    u16 = E.jnp_to_u16(x)
+    signman = E.jnp_signman(u16)
+    exp = ((u16 >> 7) & 0xFF).astype(jnp.int32)
+    codes = enc_lut[exp]                              # (G, B) uint32
+    planes = packing.bitplane_pack(codes, k)          # (G, k, B/32)
+    return signman, planes
+
+
+def unpack_ref(signman: jax.Array, planes: jax.Array, dict_syms: jax.Array,
+               k: int) -> jax.Array:
+    """Oracle for ``lexi_unpack``: inverse of pack_ref (escapes handled by
+    the caller via the side channel)."""
+    codes = packing.bitplane_unpack(planes, k)        # (G, B)
+    exp = dict_syms[codes.astype(jnp.int32)]          # (G, B) uint8
+    u16 = E.jnp_combine(signman, exp)
+    return E.jnp_from_u16(u16)
+
+
+def histogram_ref(x: jax.Array) -> jax.Array:
+    """Oracle for ``exp_histogram``: 256-bin exponent histogram (int32)."""
+    u16 = E.jnp_to_u16(x)
+    exp = ((u16 >> 7) & 0xFF).astype(jnp.int32).reshape(-1)
+    return jnp.zeros((256,), jnp.int32).at[exp].add(1)
+
+
+def decompress_matmul_ref(x: jax.Array, signman: jax.Array, planes: jax.Array,
+                          dict_syms: jax.Array, k: int) -> jax.Array:
+    """Oracle for ``decompress_matmul``: x (M,K) bf16 @ packed W (K,N).
+
+    ``planes`` is (k, K, N/32): row i's exponent codes are packed along N in
+    flat groups of 32 (so W tiles cleanly along both axes).
+    """
+    kk, n = signman.shape
+    codes = packing.bitplane_unpack(jnp.moveaxis(planes, 0, -2), k)  # (K, N)
+    exp = dict_syms[codes.astype(jnp.int32)]
+    u16 = E.jnp_combine(signman, exp)
+    w = E.jnp_from_u16(u16)
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def compress_weight_2d(w: jax.Array, k: int = 6):
+    """Host-side packer for matmul weights: (K,N) bf16 ->
+    (signman (K,N) u8, planes (k,K,N/32) u32, dict (2^k,) u8, n_escapes).
+
+    k defaults to 6 for at-rest weights: a 63-symbol dictionary empirically
+    covers every exponent of real weight tensors (distinct ~23), so the
+    fused kernel never sees an escape; ``n_escapes`` lets callers verify.
+    """
+    from repro.core import fixed
+    kk, n = w.shape
+    assert n % 32 == 0, "N must be a multiple of 32"
+    u16 = E.jnp_to_u16(w)
+    signman = E.jnp_signman(u16)
+    exp = ((u16 >> 7) & 0xFF).astype(jnp.int32)
+    hist = jnp.zeros((256,), jnp.int32).at[exp.reshape(-1)].add(1)
+    dict_syms, enc_lut = fixed.build_dictionary(hist, k)
+    codes = enc_lut[exp]                              # (K, N)
+    esc = fixed.esc_index(k)
+    n_escapes = jnp.sum((codes == esc).astype(jnp.int32))
+    planes = packing.bitplane_pack(codes, k)          # (K, k, N/32)
+    planes = jnp.moveaxis(planes, -2, 0)              # (k, K, N/32)
+    return signman, planes, dict_syms, n_escapes
+
+
+def decode_attend_ref(q, blocks_bf16, valid, kv_idx, scale):
+    """Oracle for ``decode_attend``: q (B,H,hd); blocks (nblk,B,blk,2*Hkv*hd)
+    decompressed bf16; valid (nblk,blk).  Returns (out f32 unnorm, m, l)."""
+    nblk, b, blk, w = blocks_bf16.shape
+    h = q.shape[1]
+    hd = q.shape[-1]
+    hkv = w // (2 * hd)
+    kv = blocks_bf16.reshape(nblk, b, blk, hkv, 2, hd)
+    kidx = jnp.asarray(kv_idx)
+    k = jnp.take(kv[:, :, :, :, 0], kidx, axis=3)   # (nblk,b,blk,h,hd)
+    v = jnp.take(kv[:, :, :, :, 1], kidx, axis=3)
+    s = jnp.einsum("bhd,nbkhd->nbhk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid[:, :, None, :], s, -2.0e38)
+    s2 = jnp.moveaxis(s, 0, 2).reshape(b, h, -1)    # (b,h,nblk*blk)
+    m = s2.max(-1)
+    p = jnp.exp(s2 - m[..., None])
+    msk = jnp.moveaxis(jnp.broadcast_to(valid[:, :, None, :],
+                                        (nblk, b, h, blk)), 0, 2
+                       ).reshape(b, h, -1)
+    p = jnp.where(msk, p, 0.0)
+    l = p.sum(-1)
+    v2 = jnp.moveaxis(v, 0, 1).reshape(b, -1, h, hd)   # (b, nblk*blk, h, hd)
+    out = jnp.einsum("bhk,bkhd->bhd", p, v2.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return out, m, l

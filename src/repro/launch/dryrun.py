@@ -1,0 +1,227 @@
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh)
+cell on the production mesh and extract memory / cost / collective stats.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] \
+        --codec full --out results/dryrun.json
+
+Success of ``.lower().compile()`` for a cell is the deliverable; the recorded
+cost/memory/collective numbers feed EXPERIMENTS.md §Dry-run and §Roofline.
+"""
+
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# The two lines above MUST run before any other import (jax locks the device
+# count on first initialization) — do not move them below.
+# (No `from __future__ import annotations` here: it would have to precede
+# the XLA_FLAGS lines, which must stay first.)
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import (ASSIGNED_ARCHS, SHAPES, batch_axes, get_config,
+                           input_specs, shape_applicable)
+from repro.configs.base import MeshConfig, RunConfig, ShapeConfig
+from repro.core import collectives as cl
+from repro.core.collectives import CodecConfig
+from repro.launch.mesh import make_mesh_from_config, mesh_config
+from repro.models import lm, params as PM
+from repro.roofline import analysis as RA
+from repro.serve import engine
+from repro.train import optimizer as opt_mod
+from repro.train import train_step as TS
+
+
+def codec_variant(name: str) -> CodecConfig:
+    return {"full": CodecConfig(), "weights": CodecConfig.weights_only(),
+            "off": CodecConfig.off()}[name]
+
+
+def abstract_train_state(table):
+    params = PM.abstract_params(table)
+    f32 = lambda l: jax.ShapeDtypeStruct(l.shape, jnp.float32)
+    return TS.TrainState(
+        params=params,
+        opt=opt_mod.OptState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                             master=jax.tree_util.tree_map(f32, params),
+                             m=jax.tree_util.tree_map(f32, params),
+                             v=jax.tree_util.tree_map(f32, params)))
+
+
+def build_lowerable(arch: str, shape_name: str, mesh_cfg: MeshConfig,
+                    run: RunConfig, mesh):
+    """Returns (jitted_fn, example_args) ready for .lower()."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    tp = mesh_cfg.model
+    table = lm.lm_table(cfg, mesh_cfg, run)
+    dims = lm.lm_fsdp_dims(table)
+    pspecs = PM.param_pspecs(table)
+    specs_in = input_specs(cfg, shape, mesh_cfg, run)
+    ba = batch_axes(mesh_cfg)
+    bspec = ba[0] if len(ba) == 1 else tuple(ba)
+    nbatch = mesh_cfg.data * mesh_cfg.pod
+    shardable = shape.global_batch % nbatch == 0
+    tok_spec = P(bspec) if shardable else P(None)
+
+    if shape.kind == "train":
+        f = TS.make_shard_mapped_step(cfg, run, mesh_cfg, table, mesh)
+        state = abstract_train_state(table)
+        batch = specs_in
+        return f, (state, batch)
+
+    if shape.kind == "prefill":
+        sstate, sspecs = engine.global_state_struct(
+            cfg, run, shape.global_batch, shape.seq_len,
+            {"pod": mesh_cfg.pod, "data": mesh_cfg.data,
+             "model": mesh_cfg.model})
+
+        def pre(params, batch):
+            return engine.prefill(cfg, run, params, dims, batch["tokens"],
+                                  shape.seq_len, tp,
+                                  front_embeds=batch.get("front_embeds"),
+                                  enc_embeds=batch.get("enc_embeds"))
+
+        in_bspecs = {k: tok_spec for k in specs_in}
+        f = jax.jit(cl.shmap(pre, mesh, (pspecs, in_bspecs),
+                             (P(tok_spec[0] if shardable else None, None,
+                                "model"), sspecs)))
+        return f, (PM.abstract_params(table), specs_in)
+
+    # decode: serve_step over a seq_len-long cache
+    sstate, sspecs = engine.global_state_struct(
+        cfg, run, shape.global_batch, shape.seq_len,
+        {"pod": mesh_cfg.pod, "data": mesh_cfg.data, "model": mesh_cfg.model})
+
+    def step(params, state, tokens):
+        return engine.decode_step(cfg, run, params, dims, state, tokens, tp)
+
+    f = jax.jit(cl.shmap(
+        step, mesh, (pspecs, sspecs, tok_spec),
+        (P(tok_spec[0] if shardable else None, None, "model"), sspecs)))
+    return f, (PM.abstract_params(table), sstate, specs_in["tokens"])
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, codec: str,
+             strategy: str = "megatron", fsdp: bool = True,
+             verbose: bool = True) -> Dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skipped", "reason": reason}
+    mesh_cfg = mesh_config(multi_pod=multi_pod)
+    run = RunConfig(codec=codec_variant(codec), tp_strategy=strategy,
+                    fsdp=fsdp)
+    mesh = make_mesh_from_config(mesh_cfg)
+    t0 = time.time()
+    f, args = build_lowerable(arch, shape_name, mesh_cfg, run, mesh)
+    # exact per-chip accounting from the jaxpr (scan trip counts preserved;
+    # avals inside shard_map are per-shard) — see roofline.analysis.
+    axis_sizes = {"data": mesh_cfg.data, "model": mesh_cfg.model,
+                  "pod": mesh_cfg.pod}
+    jstats = RA.analyze_jaxpr(jax.make_jaxpr(f)(*args), axis_sizes)
+    lowered = f.lower(*args)
+    t_lower = time.time() - t0
+    t1 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t1
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    membytes = RA.analytic_memory_bytes(cfg, shape, mesh_cfg, run)
+    rl = RA.Roofline(
+        arch=arch, shape=shape_name,
+        mesh="2x16x16" if multi_pod else "16x16", chips=mesh_cfg.chips,
+        hlo_flops=jstats.flops * mesh_cfg.chips,  # per-shard jaxpr x chips
+        hlo_bytes=membytes["total"] * mesh_cfg.chips,
+        collective_bytes=jstats.collective_wire_bytes,  # per-chip ICI wire
+        model_flops=RA.model_flops_for(cfg, shape),
+        min_bytes=sum(membytes.get(k, 0.0) for k in
+                      ("params", "kv_cache", "ssm_state"))).finalize()
+    rec = {
+        "status": "ok", **rl.to_dict(),
+        "codec": codec, "strategy": strategy, "fsdp": fsdp,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "collective_counts": {k: int(v) for k, v
+                              in jstats.coll_counts.items()},
+        "collective_op_bytes": {k: float(v) for k, v
+                                in jstats.coll_bytes.items()},
+        "collective_wire_bytes": {k: float(v) for k, v
+                                  in jstats.wire_bytes.items()},
+        "memory_model": {k: float(v) for k, v in membytes.items()},
+        "xla_cost_raw": {"flops": float(cost.get("flops", 0.0)),
+                         "bytes_accessed":
+                             float(cost.get("bytes accessed", 0.0))},
+        "memory_analysis": {
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+    }
+    if verbose:
+        print(f"[{arch} × {shape_name} × {rec['mesh']} codec={codec}] "
+              f"lower {t_lower:.0f}s compile {t_compile:.0f}s  "
+              f"flops/chip={jstats.flops:.3g} "
+              f"mem/chip={membytes['total']:.3g}B "
+              f"coll/chip={jstats.collective_wire_bytes:.3g}B(wire)  "
+              f"dominant={rl.dominant} "
+              f"roofline_frac={rl.roofline_fraction:.3f}")
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--codec", default="full",
+                    choices=["full", "weights", "off"])
+    ap.add_argument("--strategy", default="megatron",
+                    choices=["megatron", "fsdp"])
+    ap.add_argument("--no-fsdp", dest="fsdp", action="store_false")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    cells = []
+    archs = ASSIGNED_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    failures = 0
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                try:
+                    rec = run_cell(a, s, multi_pod=mp, codec=args.codec,
+                                   strategy=args.strategy, fsdp=args.fsdp)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    traceback.print_exc()
+                    rec = {"arch": a, "shape": s,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "error", "error": repr(e)}
+                    failures += 1
+                results.append(rec)
+                if args.out:
+                    with open(args.out, "w") as fh:
+                        json.dump(results, fh, indent=1)
+    print(f"\n{len(results)} cells, {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,29 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before any jax initialization).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The assignment's production mesh: 16x16 per pod, 2 pods multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_config(*, multi_pod: bool = False) -> MeshConfig:
+    return MeshConfig(data=16, model=16, pod=2 if multi_pod else 1)
+
+
+def make_mesh_from_config(mc: MeshConfig):
+    if mc.pod > 1:
+        return jax.make_mesh((mc.pod, mc.data, mc.model),
+                             ("pod", "data", "model"))
+    return jax.make_mesh((mc.data, mc.model), ("data", "model"))

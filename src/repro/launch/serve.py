@@ -1,0 +1,99 @@
+"""Batched serving demo: prefill a prompt batch, decode greedily with
+LEXI-compressed weights/activations/caches.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b --reduced \
+        --batch 4 --prompt-len 64 --new-tokens 32 --mesh 1x4
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, make_reduced
+from repro.configs.base import MeshConfig, RunConfig
+from repro.core import collectives as cl
+from repro.core.collectives import CodecConfig
+from repro.launch.mesh import make_mesh_from_config
+from repro.models import lm, params as PM
+from repro.serve import engine
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--mesh", default="1x4")
+    ap.add_argument("--codec", default="full",
+                    choices=["full", "weights", "off"])
+    args = ap.parse_args(argv)
+
+    d, m = (int(x) for x in args.mesh.split("x"))
+    mesh_cfg = MeshConfig(data=d, model=m, pod=1)
+    mesh = make_mesh_from_config(mesh_cfg)
+    codec = {"full": CodecConfig(cache_block=32),
+             "weights": CodecConfig.weights_only(),
+             "off": CodecConfig.off()}[args.codec]
+    run = RunConfig(codec=codec)
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = make_reduced(cfg, tp=m)
+
+    table = lm.lm_table(cfg, mesh_cfg, run)
+    dims = lm.lm_fsdp_dims(table)
+    params = PM.init_params(table, jax.random.key(run.seed))
+    pspecs = PM.param_pspecs(table)
+    tp = mesh_cfg.model
+    B, S, N = args.batch, args.prompt_len, args.new_tokens
+    maxlen = S + N + codec.cache_block
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    extras = {}
+    if cfg.frontend == "vision_stub":
+        extras["front_embeds"] = jnp.asarray(
+            rng.normal(0, 1, (B, cfg.n_frontend_tokens, cfg.d_model)),
+            jnp.bfloat16)
+    if cfg.encdec:
+        extras["enc_embeds"] = jnp.asarray(
+            rng.normal(0, 1, (B, S, cfg.d_model)), jnp.bfloat16)
+
+    def serve(pp, toks, extra):
+        logits, st = engine.prefill(cfg, run, pp, dims, toks, maxlen, tp,
+                                    front_embeds=extra.get("front_embeds"),
+                                    enc_embeds=extra.get("enc_embeds"))
+        outs = []
+        tok = engine.greedy_token(cfg, logits, tp)
+        for _ in range(N):
+            outs.append(tok)
+            logits, st = engine.decode_step(cfg, run, pp, dims, st, tok, tp)
+            tok = engine.greedy_token(cfg, logits, tp)
+        outs.append(tok)
+        return jnp.concatenate(outs, axis=1)
+
+    espec = {k: P("data") for k in extras}
+    f = jax.jit(cl.shmap(serve, mesh,
+                         (pspecs, P("data"), espec), P("data")))
+    t0 = time.time()
+    out = np.asarray(f(params, prompts, extras))
+    dt = time.time() - t0
+    print(f"[serve] {B} seqs x ({S} prompt + {N} new) in {dt:.1f}s "
+          f"({B * N / dt:.1f} tok/s incl. compile)")
+    t0 = time.time()
+    out = np.asarray(f(params, prompts, extras))
+    dt = time.time() - t0
+    print(f"[serve] steady-state: {B * N / dt:.1f} tok/s")
+    print("[serve] sample continuations:", out[:2, :12].tolist())
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -1,0 +1,3 @@
+"""Model zoo: manual-SPMD transformers / SSMs / hybrids with LEXI hooks."""
+
+from . import attention, blocks, cache, layers, lm, moe, params, ssm  # noqa: F401

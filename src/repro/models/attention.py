@@ -1,0 +1,359 @@
+"""Attention blocks (manual-SPMD): GQA, MLA, local/global, decode partials.
+
+Head-parallel TP with three projection regimes (chosen statically per arch):
+
+  (a) ``n_kv_heads % tp == 0`` — classic: kv heads column-sharded, query
+      heads grouped per kv head (query heads padded to a multiple of both
+      tp and n_kv; pad heads have zero-init weights).
+  (b) ``n_kv_heads % tp != 0`` (e.g. hymba kv=5, qwen2.5 kv=8 < tp=16) —
+      kv projections are ROW-parallel (input dim sharded) + one psum so every
+      shard holds all kv heads with no duplicated parameters or FLOPs; each
+      shard's query heads then dynamically select their kv head.
+  MLA — the latent c_kv (kv_lora + rope) is row-parallel like (b); per-head
+      up-projections and queries are column-sharded.
+
+Decode uses the sequence-sharded cache: every shard holds S/tp cache slots
+for ALL heads and computes a partial attention merged with one tiny psum
+(``layers.merge_partials``) — no head-divisibility constraint, balanced
+memory, and the cache itself is LEXI-block-compressed (models/cache.py).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.core import collectives as cl
+from . import layers
+from .layers import AttnSpec, apply_rope, pdot, rope_tables
+from .params import PDef
+
+
+GLOBAL_WINDOW = 1 << 30   # "no window" sentinel for traced per-layer windows
+
+
+def kv_mode(cfg: ModelConfig, tp: int) -> str:
+    return "col" if cfg.n_kv_heads % tp == 0 else "row"
+
+
+def layer_windows(cfg: ModelConfig):
+    """Per-layer window sizes as data (int32 (L,)) so heterogeneous layers
+    share a single scan.  None if the arch has no local-attention layers."""
+    import numpy as np
+    if cfg.attn_layout == "full" or cfg.window is None:
+        return None
+    w = np.full((cfg.n_layers,), GLOBAL_WINDOW, np.int32)
+    if cfg.attn_layout == "alternating_local":
+        w[0::2] = cfg.window
+    elif cfg.attn_layout == "hymba_3global":
+        w[:] = cfg.window
+        for i in (0, cfg.n_layers // 2, cfg.n_layers - 1):
+            w[i] = GLOBAL_WINDOW
+    return w
+
+
+def base_attn_spec(cfg: ModelConfig) -> AttnSpec:
+    return AttnSpec(causal=True, softcap=cfg.attn_softcap,
+                    windowed=layer_windows(cfg) is not None)
+
+
+# ---------------------------------------------------------------------------
+# parameter tables
+# ---------------------------------------------------------------------------
+
+def attn_table(cfg: ModelConfig, tp: int) -> Dict[str, PDef]:
+    d, hd = cfg.d_model, cfg.head_dim
+    hq = cfg.padded_heads(tp)
+    t: Dict[str, PDef] = {}
+    if cfg.mla is not None:
+        m = cfg.mla
+        t["wq"] = PDef((d, hq * (m.qk_nope_dim + m.qk_rope_dim)),
+                       (None, "model"))
+        t["w_dkv"] = PDef((d, m.kv_lora_rank + m.qk_rope_dim), ("model", None))
+        t["kv_norm"] = PDef((m.kv_lora_rank,), (None,), "ones")
+        t["w_uk"] = PDef((m.kv_lora_rank, hq * m.qk_nope_dim), (None, "model"))
+        t["w_uv"] = PDef((m.kv_lora_rank, hq * m.v_dim), (None, "model"))
+        t["wo"] = PDef((hq * m.v_dim, d), ("model", None))
+        return t
+    mode = kv_mode(cfg, tp)
+    nkv = cfg.n_kv_heads
+    t["wq"] = PDef((d, hq * hd), (None, "model"))
+    if mode == "col":
+        t["wk"] = PDef((d, nkv * hd), (None, "model"))
+        t["wv"] = PDef((d, nkv * hd), (None, "model"))
+    else:
+        t["wk"] = PDef((d, nkv * hd), ("model", None))
+        t["wv"] = PDef((d, nkv * hd), ("model", None))
+    t["wo"] = PDef((hq * hd, d), ("model", None))
+    if cfg.qkv_bias:
+        t["bq"] = PDef((hq * hd,), ("model",), "zeros")
+        t["bk"] = PDef((nkv * hd,), ("model",) if mode == "col" else (None,),
+                       "zeros")
+        t["bv"] = PDef((nkv * hd,), ("model",) if mode == "col" else (None,),
+                       "zeros")
+    if cfg.qk_norm:
+        t["q_norm"] = PDef((hd,), (None,), "ones")
+        t["k_norm"] = PDef((hd,), (None,), "ones")
+    return t
+
+
+# ---------------------------------------------------------------------------
+# shared projection helpers
+# ---------------------------------------------------------------------------
+
+class QKV(NamedTuple):
+    q: jax.Array          # (B, Hq_loc, S, hd)  local query heads
+    k: jax.Array          # (B, Hkv_eff, S, hd) kv heads used by this shard's q
+    v: jax.Array
+    g: int                # query heads per kv head in the flash call
+    k_cache: jax.Array | None = None   # raw kv heads for the decode cache
+    v_cache: jax.Array | None = None   # (col: local shard; row: full)
+
+
+def _heads(x: jax.Array, n: int, hd: int) -> jax.Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, hd).transpose(0, 2, 1, 3)
+
+
+def project_qkv(cfg: ModelConfig, p, xg: jax.Array, positions: jax.Array,
+                tp: int) -> QKV:
+    """xg (B,S,D) full-seq; returns rope'd local q and shard-visible k/v."""
+    hd = cfg.head_dim
+    hq = cfg.padded_heads(tp)
+    hq_loc = hq // tp
+    nkv = cfg.n_kv_heads
+    mode = kv_mode(cfg, tp)
+
+    q = pdot(xg, p["wq"], p.get("bq"))
+    q = _heads(q, hq_loc, hd)
+    if mode == "col":
+        k = _heads(pdot(xg, p["wk"], p.get("bk")), nkv // tp, hd)
+        v = _heads(pdot(xg, p["wv"], p.get("bv")), nkv // tp, hd)
+    else:
+        # row-parallel: xg column slice x sharded weight rows, then psum.
+        dsh = cfg.d_model // tp
+        i = jax.lax.axis_index("model") * dsh
+        xs = jax.lax.dynamic_slice_in_dim(xg, i, dsh, axis=-1)
+        k = jax.lax.psum(jnp.einsum(
+            "bsk,kn->bsn", xs, p["wk"],
+            preferred_element_type=jnp.float32), "model")
+        v = jax.lax.psum(jnp.einsum(
+            "bsk,kn->bsn", xs, p["wv"],
+            preferred_element_type=jnp.float32), "model")
+        if cfg.qkv_bias:
+            k, v = k + p["bk"].astype(jnp.float32), v + p["bv"].astype(jnp.float32)
+        k = _heads(k.astype(jnp.bfloat16), nkv, hd)
+        v = _heads(v.astype(jnp.bfloat16), nkv, hd)
+
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = layers.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    cos, sin = rope_tables(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    if mode == "col":
+        g = hq_loc // (nkv // tp)
+        return QKV(q, k, v, g, k_cache=k, v_cache=v)
+    # select this shard's kv head per local query head (g=1 flash)
+    g_real = max(cfg.n_heads // max(nkv, 1), 1)
+    ti = jax.lax.axis_index("model")
+    qidx = ti * hq_loc + jnp.arange(hq_loc)
+    kv_idx = jnp.clip(qidx // g_real, 0, nkv - 1)
+    k_sel = jnp.take(k, kv_idx, axis=1)
+    v_sel = jnp.take(v, kv_idx, axis=1)
+    return QKV(q, k_sel, v_sel, 1, k_cache=k, v_cache=v)
+
+
+def project_qkv_mla(cfg: ModelConfig, p, xg: jax.Array,
+                    positions: jax.Array, tp: int
+                    ) -> Tuple[QKV, jax.Array]:
+    """MLA projections.  Returns (QKV with g=1, latent (B,S,lora+rope)).
+
+    The latent (c_kv + rope key) is what the decode cache stores — LEXI
+    compresses the *latent* stream (double compression synergy, DESIGN §4).
+    """
+    m = cfg.mla
+    hq = cfg.padded_heads(tp)
+    hq_loc = hq // tp
+    dn, dr, dv = m.qk_nope_dim, m.qk_rope_dim, m.v_dim
+
+    q = pdot(xg, p["wq"])
+    b, s, _ = q.shape
+    q = q.reshape(b, s, hq_loc, dn + dr).transpose(0, 2, 1, 3)
+
+    # latent: row-parallel + psum (shared across heads); local at tp=1
+    if tp == 1:
+        lat = jnp.einsum("bsk,kn->bsn", xg, p["w_dkv"],
+                         preferred_element_type=jnp.float32
+                         ).astype(jnp.bfloat16)
+    else:
+        dsh = cfg.d_model // tp
+        i = jax.lax.axis_index("model") * dsh
+        xs = jax.lax.dynamic_slice_in_dim(xg, i, dsh, axis=-1)
+        lat = jax.lax.psum(jnp.einsum("bsk,kn->bsn", xs, p["w_dkv"],
+                                      preferred_element_type=jnp.float32),
+                           "model").astype(jnp.bfloat16)
+    c_kv = layers.rms_norm(lat[..., :m.kv_lora_rank], p["kv_norm"],
+                           cfg.norm_eps)
+    k_rope = lat[..., m.kv_lora_rank:]                 # (B,S,dr)
+    latent = jnp.concatenate([c_kv, k_rope], axis=-1)
+
+    cos, sin = rope_tables(positions, dr, cfg.rope_theta)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope[:, None], cos, sin)     # (B,1,S,dr)
+
+    k_nope = _heads(pdot(c_kv, p["w_uk"]), hq_loc, dn)
+    v = _heads(pdot(c_kv, p["w_uv"]), hq_loc, dv)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, k_nope[..., :dr].shape)], axis=-1)
+    return QKV(q_full, k_full, v, 1), latent
+
+
+# ---------------------------------------------------------------------------
+# train / prefill forward
+# ---------------------------------------------------------------------------
+
+def attn_forward(cfg: ModelConfig, run: RunConfig, p, xg: jax.Array,
+                 positions: jax.Array, spec: AttnSpec, tp: int,
+                 window=None, want_cache: bool = False):
+    """Full-sequence attention.  Input xg (B,S,D) gathered; output is the
+    *partial* o-projection (caller psum_scatters back to seq-sharded).
+
+    ``window`` is an optional traced per-layer window size (see
+    ``layer_windows``).  ``want_cache`` additionally returns this shard's
+    head-visible KV (or MLA latent) for the prefill→decode transition.
+    """
+    hd_v = cfg.mla.v_dim if cfg.mla is not None else cfg.head_dim
+    if cfg.mla is not None:
+        qkv, latent = project_qkv_mla(cfg, p, xg, positions, tp)
+        aspec = spec._replace(
+            scale=(cfg.mla.qk_nope_dim + cfg.mla.qk_rope_dim) ** -0.5)
+        cache = latent if want_cache else None
+    else:
+        qkv = project_qkv(cfg, p, xg, positions, tp)
+        aspec = spec
+        cache = (qkv.k_cache, qkv.v_cache) if want_cache else None
+
+    b, hq_loc, s, _ = qkv.q.shape
+    out = layers.flash_attention(
+        qkv.q, qkv.k, qkv.v, positions, positions, aspec, window=window,
+        chunk_q=run.attn_chunk_q, chunk_kv=run.attn_chunk_kv)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, hq_loc * hd_v)
+    o = jnp.einsum("bsk,kn->bsn", out, p["wo"],
+                   preferred_element_type=jnp.float32)   # partial over model
+    return o, cache
+
+
+# ---------------------------------------------------------------------------
+# decode-phase projections (sequence-sharded cache; q gathered to full heads)
+# ---------------------------------------------------------------------------
+
+def decode_qkv(cfg: ModelConfig, p, h: jax.Array, pos, tp: int):
+    """h (B,1,D) replicated -> (q_full (B,Hq,1,hd), new_vals (B,W)).
+
+    q is all-gathered to FULL heads (tiny at S=1) because decode attention is
+    context-parallel over the cache; the new token's K/V (or MLA latent) is
+    returned full-width for the cache append.
+    """
+    hd = cfg.head_dim
+    hq = cfg.padded_heads(tp)
+    hq_loc = hq // tp
+    b = h.shape[0]
+    posv = jnp.asarray(pos, jnp.int32).reshape(1)
+
+    if cfg.mla is not None:
+        m = cfg.mla
+        dn, dr = m.qk_nope_dim, m.qk_rope_dim
+        q = pdot(h, p["wq"]).reshape(b, 1, hq_loc, dn + dr) \
+            .transpose(0, 2, 1, 3)                       # (B,hq_loc,1,dn+dr)
+        # latent for the new token (row-parallel psum, like prefill)
+        dsh = cfg.d_model // tp
+        i = jax.lax.axis_index("model") * dsh
+        hs = jax.lax.dynamic_slice_in_dim(h, i, dsh, axis=-1)
+        lat = jax.lax.psum(jnp.einsum("bsk,kn->bsn", hs, p["w_dkv"],
+                                      preferred_element_type=jnp.float32),
+                           "model").astype(jnp.bfloat16)[:, 0]      # (B, lora+dr)
+        c_kv = layers.rms_norm(lat[..., :m.kv_lora_rank], p["kv_norm"],
+                               cfg.norm_eps)
+        cos, sin = rope_tables(posv, dr, cfg.rope_theta)
+        k_rope = apply_rope(lat[:, None, None, m.kv_lora_rank:], cos, sin
+                            )[:, 0, 0]                   # (B, dr)
+        new_vals = jnp.concatenate([c_kv, k_rope], axis=-1)
+        # absorbed query: q_lat = [q_nope @ W_uk(head), q_rope]
+        q_nope, q_rope = q[..., :dn], q[..., dn:]
+        q_rope = apply_rope(q_rope, cos, sin)
+        w_uk = p["w_uk"].reshape(m.kv_lora_rank, hq_loc, dn)
+        q_lat = jnp.einsum("bhsd,lhd->bhsl", q_nope.astype(jnp.float32),
+                           w_uk.astype(jnp.float32)).astype(jnp.bfloat16)
+        q_full = jnp.concatenate([q_lat, q_rope], axis=-1)  # (B,hq_loc,1,lora+dr)
+        q_full = jax.lax.all_gather(q_full, "model", axis=1, tiled=True)
+        return q_full, new_vals
+
+    nkv = cfg.n_kv_heads
+    mode = kv_mode(cfg, tp)
+    q = pdot(h, p["wq"], p.get("bq")).reshape(b, 1, hq_loc, hd) \
+        .transpose(0, 2, 1, 3)
+    if mode == "col":
+        k = pdot(h, p["wk"], p.get("bk")).reshape(b, 1, nkv // tp, hd) \
+            .transpose(0, 2, 1, 3)
+        v = pdot(h, p["wv"], p.get("bv")).reshape(b, 1, nkv // tp, hd) \
+            .transpose(0, 2, 1, 3)
+    else:
+        dsh = cfg.d_model // tp
+        i = jax.lax.axis_index("model") * dsh
+        hs = jax.lax.dynamic_slice_in_dim(h, i, dsh, axis=-1)
+        k = jax.lax.psum(jnp.einsum("bsk,kn->bsn", hs, p["wk"],
+                                    preferred_element_type=jnp.float32),
+                         "model")
+        v = jax.lax.psum(jnp.einsum("bsk,kn->bsn", hs, p["wv"],
+                                    preferred_element_type=jnp.float32),
+                         "model")
+        if cfg.qkv_bias:
+            k, v = k + p["bk"].astype(jnp.float32), v + p["bv"].astype(jnp.float32)
+        k = k.astype(jnp.bfloat16).reshape(b, 1, nkv, hd).transpose(0, 2, 1, 3)
+        v = v.astype(jnp.bfloat16).reshape(b, 1, nkv, hd).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = layers.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    cos, sin = rope_tables(posv, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    q_full = jax.lax.all_gather(q, "model", axis=1, tiled=True)  # (B,Hq,1,hd)
+    if mode == "col":
+        k = jax.lax.all_gather(k, "model", axis=1, tiled=True)
+        v = jax.lax.all_gather(v, "model", axis=1, tiled=True)
+        # collapse kv replication when tp > nkv is impossible in col mode
+    new_vals = jnp.stack([k[:, :, 0], v[:, :, 0]], axis=2)  # (B,Hkv,2,hd)
+    new_vals = new_vals.reshape(b, -1)                       # (B, 2*Hkv*hd)
+    return q_full, new_vals
+
+
+def decode_out(cfg: ModelConfig, p, merged: jax.Array, tp: int) -> jax.Array:
+    """merged (B,Hq,1,hd_v) full heads -> PARTIAL o-projection (B,1,D) f32.
+
+    Each shard slices its own heads and applies its wo rows; the block sums
+    partials (attn + ssm for hybrids) and psums once.
+    """
+    b, hq, _, _ = merged.shape
+    hq_loc = hq // tp
+    ti = jax.lax.axis_index("model")
+    loc = jax.lax.dynamic_slice_in_dim(merged, ti * hq_loc, hq_loc, axis=1)
+    if cfg.mla is not None:
+        m = cfg.mla
+        w_uv = p["w_uv"].reshape(m.kv_lora_rank, hq_loc, m.v_dim)
+        loc = jnp.einsum("bhsl,lhv->bhsv", loc.astype(jnp.float32),
+                         w_uv.astype(jnp.float32)).astype(jnp.bfloat16)
+    loc = loc.transpose(0, 2, 1, 3).reshape(b, 1, -1)
+    return jnp.einsum("bsk,kn->bsn", loc, p["wo"],
+                      preferred_element_type=jnp.float32)
+
+
+def new_vals_width_matches(cfg: ModelConfig) -> int:
+    from .cache import kv_width
+    return kv_width(cfg)

@@ -1,0 +1,237 @@
+"""Transformer / SSM / hybrid blocks and the layer-scan driver.
+
+A "block" is one residual layer.  Block families:
+
+  dense   : attn + (SwiGLU) MLP
+  moe     : attn + MoE FFN (EP dispatch)
+  ssm     : Mamba2 mixer only (mamba2-370m)
+  hybrid  : attn ∥ Mamba2 in parallel on the same input (hymba) + MLP
+
+All blocks keep boundary activations sequence-sharded (B, S_loc, D) and use
+
+  lexi_all_gather  (compressed)  at entry to full-sequence mixers,
+  psum_scatter     (raw — it sums) back to the boundary layout,
+
+which is precisely the paper's egress-compress / ingress-decompress placement
+mapped onto Megatron-SP transition points.
+
+Layers are scanned (one compiled block regardless of depth); per-layer
+heterogeneity (gemma2 local/global windows, hymba global layers) travels as
+scan *data* (traced window sizes), not structure.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.core import collectives as cl
+from . import attention, layers, moe as moe_mod, ssm as ssm_mod
+from .params import PDef, fsdp_dims, is_pdef
+
+
+# ---------------------------------------------------------------------------
+# tables
+# ---------------------------------------------------------------------------
+
+def mlp_table(cfg: ModelConfig, tp: int) -> Dict[str, PDef]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": PDef((d, f), (None, "model")),
+        "w_up": PDef((d, f), (None, "model")),
+        "w_down": PDef((f, d), ("model", None)),
+    }
+
+
+def block_table(cfg: ModelConfig, tp: int, cross: bool = False
+                ) -> Dict[str, PDef]:
+    """Parameter table for ONE layer (unstacked)."""
+    d = cfg.d_model
+    t: Dict[str, PDef] = {"ln1": PDef((d,), (None,), "ones")}
+    has_attn = cfg.n_heads > 0
+    has_ssm = cfg.ssm is not None
+    if has_attn:
+        t["attn"] = attention.attn_table(cfg, tp)
+    if has_ssm:
+        t["ssm"] = ssm_mod.ssm_table(cfg, tp)
+    if cfg.post_norm:
+        t["ln1b"] = PDef((d,), (None,), "ones")
+    if cross:
+        t["ln_x"] = PDef((d,), (None,), "ones")
+        t["xattn"] = attention.attn_table(cfg, tp)
+    # FFN (dense archs + hymba; pure-ssm has none; moe has its own)
+    if cfg.moe is not None:
+        t["ln2"] = PDef((d,), (None,), "ones")
+        t["moe"] = moe_mod.moe_table(cfg, tp)
+    elif cfg.d_ff and (has_attn or not has_ssm):
+        t["ln2"] = PDef((d,), (None,), "ones")
+        t["mlp"] = mlp_table(cfg, tp)
+        if cfg.post_norm:
+            t["ln2b"] = PDef((d,), (None,), "ones")
+    return t
+
+
+# ---------------------------------------------------------------------------
+# FSDP gather inside the scan body
+# ---------------------------------------------------------------------------
+
+def fsdp_axes(run: RunConfig):
+    """Mesh axes parameter shards live on (and are gathered over)."""
+    return ("data", "model") if run.tp_strategy == "fsdp" else ("data",)
+
+
+def gather_fsdp(params, dims, run: RunConfig, in_scan: bool = True):
+    """All-gather (LEXI-compressed when codec.weights) the leaves that were
+    FSDP-sharded.  ``dims`` indexes the *stacked* table, so a leaf sliced by
+    scan shifts down by one.  With tp_strategy="fsdp" the gather spans
+    ("data","model") — this is the paper's "transmit weights in compact
+    lossless form" applied to ZeRO-3 traffic."""
+    axes = fsdp_axes(run)
+
+    def one(w, d):
+        if d is None:
+            return w
+        ax = d - 1 if in_scan else d
+        if run.codec.weights and w.dtype == jnp.bfloat16:
+            return cl.lexi_all_gather(w, axes, run.codec, gather_axis=ax)
+        return jax.lax.all_gather(w, axes, axis=ax, tiled=True)
+
+    return jax.tree_util.tree_map(one, params, dims)
+
+
+# ---------------------------------------------------------------------------
+# single block forward (train/prefill)
+# ---------------------------------------------------------------------------
+
+def block_forward(cfg: ModelConfig, run: RunConfig, p, x: jax.Array,
+                  positions_full: jax.Array, spec: layers.AttnSpec,
+                  tp: int, window=None, memory: Optional[jax.Array] = None,
+                  mem_positions: Optional[jax.Array] = None,
+                  want_cache: bool = False, local: bool = False):
+    """x (B,S_loc,D) seq-sharded -> (x', cache_bits, aux_loss).
+
+    ``memory`` (B,Sm,D full, gathered once by the caller) enables the
+    cross-attention path for encoder-decoder configs.  ``local=True``
+    (tp_strategy="fsdp") means x is already the full sequence of this
+    shard's batch slice and ALL model-axis collectives are skipped — the
+    caller passed tp=1 and gathered the weights instead.
+    """
+    aux = jnp.zeros((), jnp.float32)
+    cache = {}
+    has_attn = cfg.n_heads > 0
+    has_ssm = cfg.ssm is not None
+
+    # ---- mixer(s) --------------------------------------------------------
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if has_attn or has_ssm:
+        hg = h if local else cl.lexi_all_gather(h, "model", run.codec,
+                                                gather_axis=1)
+        partial = jnp.zeros(hg.shape, jnp.float32)
+        if has_attn:
+            o, kv = attention.attn_forward(cfg, run, p["attn"], hg,
+                                           positions_full, spec, tp,
+                                           window=window,
+                                           want_cache=want_cache)
+            partial = partial + o
+            if want_cache:
+                cache["kv"] = kv
+        if has_ssm:
+            o, st = ssm_mod.ssm_forward(cfg, run, p["ssm"], hg, tp,
+                                        want_state=want_cache)
+            partial = partial + o
+            if want_cache:
+                cache["ssm"] = st
+        # reduce in bf16: halves RS wire bytes (industry-standard TP sum)
+        out = (partial.astype(jnp.bfloat16) if local else
+               jax.lax.psum_scatter(partial.astype(jnp.bfloat16), "model",
+                                    scatter_dimension=1, tiled=True))
+        if cfg.post_norm:
+            out = layers.rms_norm(out, p["ln1b"], cfg.norm_eps)
+        x = x + out
+
+    # ---- cross attention (enc-dec decoder) -------------------------------
+    if memory is not None:
+        h = layers.rms_norm(x, p["ln_x"], cfg.norm_eps)
+        hg = h if local else cl.lexi_all_gather(h, "model", run.codec,
+                                                gather_axis=1)
+        xspec = layers.AttnSpec(causal=False, softcap=None)
+        o, xkv = cross_attn_forward(cfg, run, p["xattn"], hg, memory,
+                                    positions_full, mem_positions, xspec,
+                                    tp, want_cache=want_cache)
+        out = (o.astype(jnp.bfloat16) if local else
+               jax.lax.psum_scatter(o.astype(jnp.bfloat16), "model",
+                                    scatter_dimension=1, tiled=True))
+        x = x + out
+        if want_cache:
+            cache["xkv"] = xkv
+
+    # ---- FFN --------------------------------------------------------------
+    if "moe" in p:
+        h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+        y, aux = moe_mod.moe_forward(cfg, run, p["moe"], h, tp)
+        x = x + y
+    elif "mlp" in p:
+        h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+        hg = h if local else cl.lexi_all_gather(h, "model", run.codec,
+                                                gather_axis=1)
+        m = p["mlp"]
+        act = layers.swiglu(layers.pdot(hg, m["w_gate"]),
+                            layers.pdot(hg, m["w_up"]))
+        y = jnp.einsum("bsk,kn->bsn", act, m["w_down"],
+                       preferred_element_type=jnp.float32)
+        y = (y.astype(jnp.bfloat16) if local else
+             jax.lax.psum_scatter(y.astype(jnp.bfloat16), "model",
+                                  scatter_dimension=1, tiled=True))
+        if cfg.post_norm:
+            y = layers.rms_norm(y, p["ln2b"], cfg.norm_eps)
+        x = x + y
+    return x, cache, aux
+
+
+def cross_attn_forward(cfg: ModelConfig, run: RunConfig, p, xg: jax.Array,
+                       memory: jax.Array, q_pos, kv_pos,
+                       spec: layers.AttnSpec, tp: int,
+                       want_cache: bool = False):
+    """Cross-attention: queries from xg, K/V from encoder memory."""
+    hd = cfg.head_dim
+    hq = cfg.padded_heads(tp)
+    hq_loc = hq // tp
+    nkv = cfg.n_kv_heads
+    mode = attention.kv_mode(cfg, tp)
+    q = layers.pdot(xg, p["wq"], p.get("bq"))
+    b, s, _ = q.shape
+    q = q.reshape(b, s, hq_loc, hd).transpose(0, 2, 1, 3)
+    if mode == "col":
+        k = layers.pdot(memory, p["wk"]).reshape(
+            b, memory.shape[1], nkv // tp, hd).transpose(0, 2, 1, 3)
+        v = layers.pdot(memory, p["wv"]).reshape(
+            b, memory.shape[1], nkv // tp, hd).transpose(0, 2, 1, 3)
+    else:
+        dsh = cfg.d_model // tp
+        i = jax.lax.axis_index("model") * dsh
+        ms = jax.lax.dynamic_slice_in_dim(memory, i, dsh, axis=-1)
+        k = jax.lax.psum(jnp.einsum("bsk,kn->bsn", ms, p["wk"],
+                                    preferred_element_type=jnp.float32),
+                         "model").astype(jnp.bfloat16)
+        v = jax.lax.psum(jnp.einsum("bsk,kn->bsn", ms, p["wv"],
+                                    preferred_element_type=jnp.float32),
+                         "model").astype(jnp.bfloat16)
+        k = k.reshape(b, -1, nkv, hd).transpose(0, 2, 1, 3)
+        v = v.reshape(b, -1, nkv, hd).transpose(0, 2, 1, 3)
+        ti = jax.lax.axis_index("model")
+        g_real = max(cfg.n_heads // max(nkv, 1), 1)
+        qidx = ti * hq_loc + jnp.arange(hq_loc)
+        kv_idx = jnp.clip(qidx // g_real, 0, nkv - 1)
+        k = jnp.take(k, kv_idx, axis=1)
+        v = jnp.take(v, kv_idx, axis=1)
+    out = layers.flash_attention(q, k, v, q_pos, kv_pos, spec,
+                                 chunk_q=run.attn_chunk_q,
+                                 chunk_kv=run.attn_chunk_kv)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, hq_loc * hd)
+    o = jnp.einsum("bsk,kn->bsn", out, p["wo"],
+                   preferred_element_type=jnp.float32)
+    return o, ((k, v) if want_cache else None)

@@ -1,0 +1,276 @@
+"""Hybrid caches (attention KV + SSM state), LEXI-block-compressed.
+
+This is the paper's "hybrid cache" path: caches are compressed block-by-block
+when written back to memory and decompressed just before use (§4.1).  The TPU
+layout:
+
+* the KV cache is **sequence-sharded over "model", interleaved**: shard t
+  owns global positions {p : p % tp == t}.  Writes round-robin across shards
+  (balanced), every shard holds ~len/tp live slots, and decode attention is
+  a partial attention per shard merged with one tiny psum
+  (``layers.merge_partials``) — no head-divisibility constraints ever.
+* each full block of ``block`` owned slots is stored as a LEXI-FW
+  ``Compressed`` (K and V of the block packed together); a bf16 ring buffer
+  holds the in-flight block.  HBM-side cache traffic is the packed size.
+* the decode step streams compressed blocks through a scan, decompressing
+  one block at a time (the VMEM-sized working set of a fused kernel) with
+  online-softmax accumulation.
+* MLA caches the *latent* (c_kv ‖ k_rope) instead of K/V — LEXI compresses
+  the latent stream (already 4-8x smaller than full KV: double win).
+* the SSM state cache is the fixed-size recurrent state (f32 master for
+  recurrence stability — see note at bottom).
+
+With ``CodecConfig.cache=False`` blocks are stored raw bf16 with identical
+structure, giving the A/B for the roofline.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.core import fixed, packing
+from repro.core.collectives import CodecConfig
+from . import layers
+from .ssm import SSMState
+
+
+class KVBlocks(NamedTuple):
+    """Per-layer, per-shard compressed KV block store.
+
+    Payload width W = kv_width(cfg): 2*Hkv*hd for plain attention (K‖V),
+    kv_lora+rope for MLA.  Block value shape: (B, block, W).
+    """
+    signman: Optional[jax.Array]    # (nblk, N) u8, N = B*block*W
+    planes: Optional[jax.Array]     # (nblk, k, Npad/32) u32
+    dict_syms: Optional[jax.Array]  # (nblk, 2^k) u8
+    esc_pos: Optional[jax.Array]    # (nblk, C) i32
+    esc_raw: Optional[jax.Array]    # (nblk, C) u8
+    raw_blocks: Optional[jax.Array] # (nblk, B, block, W) bf16 when codec off
+    ring: jax.Array                 # (B, block, W) bf16 in-flight block
+    length: jax.Array               # () i32 global tokens written (all shards)
+
+
+def kv_width(cfg: ModelConfig) -> int:
+    if cfg.mla is not None:
+        return cfg.mla.kv_lora_rank + cfg.mla.qk_rope_dim
+    return 2 * cfg.n_kv_heads * cfg.head_dim
+
+
+def n_blocks(cfg: ModelConfig, run: RunConfig, max_len: int, tp: int) -> int:
+    """Capacity in blocks per shard (prefill length + decode growth room)."""
+    slots = max_len // tp
+    return slots // run.codec.cache_block + 2
+
+
+def empty_kv(cfg: ModelConfig, run: RunConfig, batch_loc: int, max_len: int,
+             tp: int) -> KVBlocks:
+    w = kv_width(cfg)
+    blk = run.codec.cache_block
+    nblk = n_blocks(cfg, run, max_len, tp)
+    n = batch_loc * blk * w
+    npad = packing.pad_to_lanes(n)
+    c = run.codec.esc_capacity(n)
+    k = run.codec.k
+    if run.codec.cache:
+        return KVBlocks(
+            signman=jnp.zeros((nblk, n), jnp.uint8),
+            planes=jnp.zeros((nblk, k, npad // 32), jnp.uint32),
+            dict_syms=jnp.zeros((nblk, 1 << k), jnp.uint8),
+            esc_pos=jnp.full((nblk, c), npad, jnp.int32),
+            esc_raw=jnp.zeros((nblk, c), jnp.uint8),
+            raw_blocks=None,
+            ring=jnp.zeros((batch_loc, blk, w), jnp.bfloat16),
+            length=jnp.zeros((), jnp.int32))
+    return KVBlocks(signman=None, planes=None, dict_syms=None, esc_pos=None,
+                    esc_raw=None,
+                    raw_blocks=jnp.zeros((nblk, batch_loc, blk, w),
+                                         jnp.bfloat16),
+                    ring=jnp.zeros((batch_loc, blk, w), jnp.bfloat16),
+                    length=jnp.zeros((), jnp.int32))
+
+
+def store_block(kv: KVBlocks, idx, vals: jax.Array,
+                codec: CodecConfig) -> KVBlocks:
+    """Write one full block (B, blk, W) into slot ``idx``."""
+    if codec.cache:
+        ct = fixed.compress(vals, k=codec.k,
+                            esc_capacity=codec.esc_capacity(vals.size))
+        upd = jax.lax.dynamic_update_index_in_dim
+        return kv._replace(
+            signman=upd(kv.signman, ct.signman, idx, 0),
+            planes=upd(kv.planes, ct.planes, idx, 0),
+            dict_syms=upd(kv.dict_syms, ct.dict_syms, idx, 0),
+            esc_pos=upd(kv.esc_pos, ct.esc_pos, idx, 0),
+            esc_raw=upd(kv.esc_raw, ct.esc_raw, idx, 0))
+    return kv._replace(raw_blocks=jax.lax.dynamic_update_index_in_dim(
+        kv.raw_blocks, vals, idx, 0))
+
+
+def load_block(kv: KVBlocks, idx, batch_loc: int, blk: int, w: int,
+               codec: CodecConfig) -> jax.Array:
+    if codec.cache:
+        ct = fixed.Compressed(
+            signman=kv.signman[idx], planes=kv.planes[idx],
+            dict_syms=kv.dict_syms[idx], esc_pos=kv.esc_pos[idx],
+            esc_raw=kv.esc_raw[idx], n_escapes=jnp.zeros((), jnp.int32),
+            shape=(batch_loc, blk, w), k=codec.k)
+        return fixed.decompress(ct)
+    return kv.raw_blocks[idx]
+
+
+# ---------------------------------------------------------------------------
+# prefill -> decode transition
+# ---------------------------------------------------------------------------
+
+def fill_from_prefill(cfg: ModelConfig, run: RunConfig, kv: KVBlocks,
+                      vals_loc: jax.Array, seq_len: int, tp: int) -> KVBlocks:
+    """Load this shard's interleaved slots (B, S/tp, W) into the block store.
+
+    ``vals_loc`` must already be this shard's interleaved sequence slice with
+    full head width (the engine's all_to_all produces it).
+    """
+    b, slots, w = vals_loc.shape
+    blk = run.codec.cache_block
+    nfull = slots // blk
+    rem = slots - nfull * blk
+
+    if nfull:
+        def body(kv_c, i):
+            vals = jax.lax.dynamic_slice_in_dim(vals_loc, i * blk, blk, axis=1)
+            return store_block(kv_c, i, vals, run.codec), None
+
+        kv, _ = jax.lax.scan(body, kv, jnp.arange(nfull))
+    if rem:  # partial tail lives in the raw ring (slots nfull*blk + i)
+        ring = jax.lax.dynamic_update_slice_in_dim(
+            kv.ring, vals_loc[:, nfull * blk:].astype(jnp.bfloat16), 0, 1)
+        kv = kv._replace(ring=ring)
+    return kv._replace(length=jnp.asarray(seq_len, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# decode: append + attend
+# ---------------------------------------------------------------------------
+
+def append_token(cfg: ModelConfig, run: RunConfig, kv: KVBlocks,
+                 new_vals: jax.Array, tp: int) -> KVBlocks:
+    """Append one token's KV/latent (B, W) at global position kv.length.
+
+    Only the owner shard (length % tp) actually mutates its ring; when the
+    ring fills, it is compressed into the next block slot (paper: caches are
+    compressed block-by-block when written back).
+    """
+    blk = run.codec.cache_block
+    ti = jax.lax.axis_index("model")
+    pos = kv.length
+    owner = (pos % tp) == ti
+    loc = pos // tp                              # owner's local slot index
+    ring_idx = loc % blk
+    ring_new = jax.lax.dynamic_update_index_in_dim(
+        kv.ring, new_vals.astype(jnp.bfloat16)[:, None], ring_idx, 1)
+    ring_out = jnp.where(owner, ring_new, kv.ring)
+    kv = kv._replace(ring=ring_out, length=pos + 1)
+
+    # flush when the owner's ring just filled (global condition per shard;
+    # non-owners keep their store untouched via the same `owner` predicate)
+    flush = owner & (ring_idx == blk - 1)
+    blk_idx = loc // blk
+
+    def do_flush(kv_c):
+        return store_block(kv_c, blk_idx, kv_c.ring, run.codec)
+
+    return jax.lax.cond(flush, do_flush, lambda c: c, kv)
+
+
+def attend_cache(cfg: ModelConfig, run: RunConfig, kv: KVBlocks,
+                 q: jax.Array, spec: layers.AttnSpec, tp: int,
+                 window=None, mla_ctx=None) -> jax.Array:
+    """Decode attention: q (B,Hq,1,hd) FULL heads on every shard; streams
+    this shard's compressed blocks + ring; merges across shards.
+
+    For MLA pass ``mla_ctx = (w_uk_full, w_uv_full ... )``?  No — MLA decode
+    uses the *absorbed* form and calls this with q already projected into
+    latent space (hd = lora+rope) and hd_v = lora; the caller then applies
+    the value up-projection.  ``kv_width`` matches in both cases.
+
+    Returns (B,Hq,1,hd_v) bf16, fully normalized across shards.
+    """
+    b, hq, _, _ = q.shape
+    blk = run.codec.cache_block
+    w = kv_width(cfg)
+    ti = jax.lax.axis_index("model")
+    length = kv.length
+    loc_len = jnp.maximum((length - 1 - ti) // tp + 1, 0)
+    nfull = loc_len // blk
+
+    mla = cfg.mla is not None
+    # static per-query-head kv index: correct for any (padded) head count —
+    # q heads keep the model's native order with pad heads appended at the
+    # end (clipped onto the last kv head; their wo rows are extra params).
+    if not mla:
+        import numpy as _np
+        g_real = max(cfg.n_heads // max(cfg.n_kv_heads, 1), 1)
+        kv_idx = jnp.asarray(_np.clip(_np.arange(hq) // g_real, 0,
+                                      cfg.n_kv_heads - 1))
+
+    def split_kv(vals):
+        """(B, blk, W) -> (k, v) (B,Hq,blk,·) per-query-head gathered."""
+        if mla:
+            lora = cfg.mla.kv_lora_rank
+            lat = vals[..., :]                   # (B, blk, lora+rope)
+            k = lat[:, None]                     # (B,1,blk,lora+rope)
+            v = lat[:, None, :, :lora]           # (B,1,blk,lora)
+            return k, v
+        hkv, hd = cfg.n_kv_heads, cfg.head_dim
+        kvv = vals.reshape(b, blk, hkv, 2, hd)
+        k = kvv[:, :, :, 0].transpose(0, 2, 1, 3)
+        v = kvv[:, :, :, 1].transpose(0, 2, 1, 3)
+        return jnp.take(k, kv_idx, axis=1), jnp.take(v, kv_idx, axis=1)
+
+    def valid_for(i0):
+        sl = i0 + jnp.arange(blk)
+        pos = sl * tp + ti
+        ok = pos < length
+        if spec.windowed and window is not None:
+            ok &= pos > (length - 1 - window)
+        return ok
+
+    nblk = (kv.signman.shape[0] if run.codec.cache
+            else kv.raw_blocks.shape[0])
+    hd_v = (cfg.mla.kv_lora_rank if mla else cfg.head_dim)
+
+    def merge(carry, po, pm, pl):
+        out, m, l = carry
+        m_new = jnp.maximum(m, pm)
+        a_old, a_new = jnp.exp(m - m_new), jnp.exp(pm - m_new)
+        return (out * a_old[..., None] + po * a_new[..., None],
+                m_new, l * a_old + pl * a_new)
+
+    def scan_blk(carry, i):
+        vals = load_block(kv, i, b, blk, w, run.codec)
+        ok = valid_for(i * blk) & (i < nfull)
+        k, v = split_kv(vals)
+        po, pm, pl = layers.attention_partial(
+            q, k, v, jnp.broadcast_to(ok[None], (b, blk)), spec)
+        return merge(carry, po, pm, pl), None
+
+    init = (jnp.zeros((b, hq, 1, hd_v), jnp.float32),
+            jnp.full((b, hq, 1), layers.NEG_INF, jnp.float32),
+            jnp.zeros((b, hq, 1), jnp.float32))
+    (out, m, l), _ = jax.lax.scan(scan_blk, init, jnp.arange(nblk))
+
+    # ring (raw, partially filled): local slots [nfull*blk, loc_len)
+    sl_r = nfull * blk + jnp.arange(blk)
+    pos_r = sl_r * tp + ti
+    ok_r = (sl_r < loc_len) & (pos_r < length)
+    if spec.windowed and window is not None:
+        ok_r &= pos_r > (length - 1 - window)
+    kr, vr = split_kv(kv.ring)
+    po, pm, pl = layers.attention_partial(
+        q, kr, vr, jnp.broadcast_to(ok_r[None], (b, blk)), spec)
+    out, m, l = merge((out, m, l), po, pm, pl)
+
+    return layers.merge_partials(out, m, l, "model")

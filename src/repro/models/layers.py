@@ -1,0 +1,285 @@
+"""Model-zoo primitives (manual-SPMD style).
+
+Everything here runs *inside* shard_map: collectives are explicit, activations
+arrive with known per-shard layouts, and the LEXI codec hooks sit exactly at
+the layouts' transition points (the TPU analogue of the paper's NoC ports).
+
+Layout conventions (train/prefill):
+  * block-boundary activations: (B_loc, S_loc, D) — batch over ("pod","data"),
+    sequence over "model" (Megatron-SP);
+  * inside attention/FFN: full sequence, heads/FFN columns over "model".
+
+Numerics: params/activations bf16, attention logits + softmax f32, norm
+accumulation f32, matmul accumulation f32 (then cast back).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def pdot(x: jax.Array, w: jax.Array, bias: jax.Array | None = None) -> jax.Array:
+    """x @ w with f32 accumulation, bf16 result (MXU dtype policy)."""
+    out = jnp.einsum("...k,kn->...n", x, w,
+                     preferred_element_type=jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(jnp.bfloat16)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(jnp.bfloat16)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_tables(positions: jax.Array, dim: int, theta: float
+                ) -> Tuple[jax.Array, jax.Array]:
+    """positions (...,S) -> (cos, sin) of shape (...,S, dim/2), f32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (B,H,S,hd); cos/sin (S,hd/2) or broadcastable."""
+    xf = x.astype(jnp.float32)
+    x1, x2 = xf[..., ::2], xf[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    return jnp.stack([o1, o2], axis=-1).reshape(x.shape).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (chunked online softmax, pure JAX — the structural
+# equivalent of a fused kernel: HLO working set is (chunk_q × chunk_kv)).
+# Supports causal, sliding-window, softcap and GQA via kv-head groups.
+# ---------------------------------------------------------------------------
+
+NEG_INF = -2.0e38
+
+
+class AttnSpec(NamedTuple):
+    causal: bool = True
+    softcap: Optional[float] = None
+    scale: Optional[float] = None
+    windowed: bool = False             # if True a traced window size is given
+
+
+def _mask(qp, kp, spec: AttnSpec, window):
+    """window may be a *traced* scalar (per-layer windows under one scan:
+    global layers pass 2^30).  Structure stays static either way."""
+    m = jnp.ones((qp.shape[0], kp.shape[0]), bool)
+    if spec.causal:
+        m &= kp[None, :] <= qp[:, None]
+    if spec.windowed:
+        m &= kp[None, :] > (qp[:, None] - window)
+    return m
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    q_pos: jax.Array, kv_pos: jax.Array,
+                    spec: AttnSpec, *, window=None, chunk_q: int = 512,
+                    chunk_kv: int = 512) -> jax.Array:
+    """q (B,Hq,Sq,hd), k/v (B,Hkv,Skv,hd) -> (B,Hq,Sq,hd), all local.
+
+    GQA: Hq must be a multiple of Hkv; query heads are grouped per kv head.
+    Memory is O(chunk_q * chunk_kv) per (batch, head) — flash-style.
+
+    Pure-causal full-square calls take the triangle-only pair schedule
+    (skips the ~2x of chunk pairs that are fully masked — §Perf iteration).
+    """
+    if (spec.causal and not spec.windowed and q.shape[2] == k.shape[2]
+            and q.shape[2] > max(chunk_q, chunk_kv)
+            and q_pos.shape == kv_pos.shape):
+        return _flash_causal_pairs(q, k, v, q_pos, spec,
+                                   chunk=min(chunk_q, chunk_kv))
+    return _flash_rect(q, k, v, q_pos, kv_pos, spec, window=window,
+                       chunk_q=chunk_q, chunk_kv=chunk_kv)
+
+
+def _flash_rect(q, k, v, q_pos, kv_pos, spec: AttnSpec, *, window,
+                chunk_q, chunk_kv) -> jax.Array:
+    b, hq, sq, hd = q.shape
+    _, hkv, skv, _ = k.shape
+    hd_v = v.shape[-1]              # may differ from hd (MLA: v_dim < qk_dim)
+    g = hq // hkv
+    scale = spec.scale if spec.scale is not None else hd ** -0.5
+    cq = min(chunk_q, sq)
+    ckv = min(chunk_kv, skv)
+    nq, nkv = sq // cq, skv // ckv
+    assert sq % cq == 0 and skv % ckv == 0, (sq, cq, skv, ckv)
+
+    qc = q.reshape(b, hkv, g, nq, cq, hd)
+    qp = q_pos.reshape(nq, cq)
+    kc = k.reshape(b, hkv, nkv, ckv, hd)
+    vc = v.reshape(b, hkv, nkv, ckv, hd_v)
+    kp = kv_pos.reshape(nkv, ckv)
+
+    def q_step(qi):
+        qb = qc[:, :, :, qi]                    # (B,Hkv,g,cq,hd)
+        qpb = qp[qi]
+
+        def kv_step(carry, inp):
+            out, m, l = carry
+            kb, vb, kpb = inp                   # (B,Hkv,ckv,hd), (ckv,)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            s = softcap(s, spec.softcap)
+            msk = _mask(qpb, kpb, spec, window)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + p.sum(axis=-1)
+            pv = jnp.einsum("bhgqk,bhkd->bhgqd", p,
+                            vb.astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+            out = out * alpha[..., None] + pv
+            return (out, m_new, l), None
+
+        init = (jnp.zeros((b, hkv, g, cq, hd_v), jnp.float32),
+                jnp.full((b, hkv, g, cq), NEG_INF, jnp.float32),
+                jnp.zeros((b, hkv, g, cq), jnp.float32))
+        (out, m, l), _ = jax.lax.scan(
+            kv_step, init,
+            (jnp.moveaxis(kc, 2, 0), jnp.moveaxis(vc, 2, 0), kp))
+        return (out / jnp.maximum(l, 1e-30)[..., None]).astype(jnp.bfloat16)
+
+    outs = jax.lax.map(q_step, jnp.arange(nq))     # (nq,B,Hkv,g,cq,hd_v)
+    outs = jnp.moveaxis(outs, 0, 3)                # (B,Hkv,g,nq,cq,hd_v)
+    return outs.reshape(b, hq, sq, hd_v)
+
+
+def _flash_causal_pairs(q, k, v, pos, spec: AttnSpec, *, chunk) -> jax.Array:
+    """Causal flash over the lower-triangular (q_chunk, kv_chunk) pairs only.
+
+    The rectangle schedule computes nq*nkv chunk pairs and masks half; this
+    iterates the n(n+1)/2 live pairs — a ~2x attention-FLOP saving that the
+    roofline's useful-FLOPs ratio shows directly.  Accumulators are held for
+    all q chunks (f32) and updated by scatter at the pair's q index.
+    """
+    b, hq, s, hd = q.shape
+    _, hkv, _, _ = k.shape
+    hd_v = v.shape[-1]
+    g = hq // hkv
+    scale = spec.scale if spec.scale is not None else hd ** -0.5
+    c = min(chunk, s)
+    n = s // c
+    assert s % c == 0
+
+    qc = q.reshape(b, hkv, g, n, c, hd)
+    kc = k.reshape(b, hkv, n, c, hd)
+    vc = v.reshape(b, hkv, n, c, hd_v)
+    pc = pos.reshape(n, c)
+
+    import numpy as _np
+    pairs = _np.array([(qi, ki) for qi in range(n) for ki in range(qi + 1)],
+                      _np.int32)
+
+    def step(carry, pair):
+        out, m, l = carry                       # (B,hkv,g,n,c,·)/(...,n,c)
+        qi, ki = pair[0], pair[1]
+        qb = jnp.take(qc, qi, axis=3)           # (B,hkv,g,c,hd)
+        kb = jnp.take(kc, ki, axis=2)
+        vb = jnp.take(vc, ki, axis=2)
+        qp = jnp.take(pc, qi, axis=0)
+        kp = jnp.take(pc, ki, axis=0)
+        sc = jnp.einsum("bhgqd,bhkd->bhgqk", qb, kb,
+                        preferred_element_type=jnp.float32) * scale
+        sc = softcap(sc, spec.softcap)
+        msk = kp[None, :] <= qp[:, None]
+        sc = jnp.where(msk[None, None, None], sc, NEG_INF)
+        m_old = jnp.take(m, qi, axis=3)
+        l_old = jnp.take(l, qi, axis=3)
+        o_old = jnp.take(out, qi, axis=3)
+        m_new = jnp.maximum(m_old, sc.max(-1))
+        p = jnp.exp(sc - m_new[..., None])
+        alpha = jnp.exp(m_old - m_new)
+        l_new = l_old * alpha + p.sum(-1)
+        pv = jnp.einsum("bhgqk,bhkd->bhgqd", p, vb.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+        o_new = o_old * alpha[..., None] + pv
+        out = jax.lax.dynamic_update_index_in_dim(out, o_new, qi, 3)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, qi, 3)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, qi, 3)
+        return (out, m, l), None
+
+    init = (jnp.zeros((b, hkv, g, n, c, hd_v), jnp.float32),
+            jnp.full((b, hkv, g, n, c), NEG_INF, jnp.float32),
+            jnp.zeros((b, hkv, g, n, c), jnp.float32))
+    (out, m, l), _ = jax.lax.scan(step, init, jnp.asarray(pairs))
+    out = out / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(jnp.bfloat16).reshape(b, hq, s, hd_v)
+
+
+def attention_partial(q: jax.Array, k: jax.Array, v: jax.Array,
+                      valid: jax.Array, spec: AttnSpec,
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Decode-phase partial attention over a local KV shard.
+
+    q (B,Hq,1,hd); k/v (B,Hkv,L,hd); valid (B,L) bool marks live cache slots
+    (windowing for decode is folded into ``valid`` by the cache layer).
+    Returns (out_unnormalized (B,Hq,1,hd) f32, m (B,Hq,1), l (B,Hq,1)) for the
+    cross-shard logsumexp merge (context-parallel decode).
+    """
+    b, hq, _, hd = q.shape
+    _, hkv, L, _ = k.shape
+    g = hq // hkv
+    scale = spec.scale if spec.scale is not None else hd ** -0.5
+    qb = q.reshape(b, hkv, g, 1, hd)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qb, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = softcap(s, spec.softcap)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(valid[:, None, None, None, :], p, 0.0)
+    l = p.sum(axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return (out.reshape(b, hq, 1, v.shape[-1]), m.reshape(b, hq, 1),
+            l.reshape(b, hq, 1))
+
+
+def merge_partials(out: jax.Array, m: jax.Array, l: jax.Array,
+                   axis_name) -> jax.Array:
+    """Combine per-shard partial attention over ``axis_name``.
+
+    out (B,H,1,hd) f32 unnormalized, m/l (B,H,1).  One tiny psum per decode
+    step — the price of the always-divisible sequence-sharded cache.
+    """
+    m_g = jax.lax.pmax(m, axis_name)
+    w = jnp.exp(m - m_g)
+    num = jax.lax.psum(out * w[..., None], axis_name)
+    den = jax.lax.psum(l * w, axis_name)
+    return (num / jnp.maximum(den, 1e-30)[..., None]).astype(jnp.bfloat16)
+
+
+# ---------------------------------------------------------------------------
+# Activation functions
+# ---------------------------------------------------------------------------
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return (jax.nn.silu(gate.astype(jnp.float32))
+            * up.astype(jnp.float32)).astype(jnp.bfloat16)
+
+
+def gelu_tanh(x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x.astype(jnp.float32), approximate=True
+                       ).astype(jnp.bfloat16)

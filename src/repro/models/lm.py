@@ -1,0 +1,387 @@
+"""Full language models (decoder-only, encoder-decoder, multimodal stubs).
+
+All forward functions run INSIDE shard_map with mesh axes ("data", "model")
+and optionally "pod".  Boundary activations are (B_loc, S_loc, D):
+batch over ("pod","data"), sequence over "model".
+
+The vocabulary is padded to a multiple of tp*128 and column-sharded; the
+cross-entropy is computed vocab-sharded in sequence chunks (never
+materializing full logits), with padded columns masked to -inf.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MeshConfig, ModelConfig, RunConfig
+from repro.core import collectives as cl
+from . import attention, blocks, layers
+from .params import (PDef, apply_fsdp, fsdp_dims, param_pspecs, stack, tmap)
+
+AUX_LOSS_COEF = 0.01
+
+
+# ---------------------------------------------------------------------------
+# tables
+# ---------------------------------------------------------------------------
+
+def lm_table(cfg: ModelConfig, mesh: MeshConfig, run: RunConfig) -> Dict:
+    tp = mesh.model
+    vp = cfg.padded_vocab(tp)
+    d = cfg.d_model
+    # fsdp strategy: blocks are built UNSHARDED over model (tp_eff=1) and
+    # then sharded over ("data","model") as pure parameter storage;
+    # embeddings stay vocab-sharded over model (the sharded embed/xent
+    # machinery is layout-compatible with both strategies).
+    tp_blocks = 1 if run.tp_strategy == "fsdp" else tp
+    t: Dict[str, Any] = {
+        "embed": PDef((vp, d), ("model", None), "normal:0.02"),
+        "final_norm": PDef((d,), (None,), "ones"),
+    }
+    if cfg.encdec:
+        t["enc_blocks"] = stack(blocks.block_table(cfg, tp_blocks),
+                                cfg.n_layers)
+        t["enc_norm"] = PDef((d,), (None,), "ones")
+        t["blocks"] = stack(blocks.block_table(cfg, tp_blocks, cross=True),
+                            cfg.n_layers)
+    else:
+        t["blocks"] = stack(blocks.block_table(cfg, tp_blocks), cfg.n_layers)
+    if not cfg.tie_embeddings:
+        t["lm_head"] = PDef((d, vp), (None, "model"), "normal:0.02")
+    if run.tp_strategy == "fsdp":
+        # block tables were built at tp_eff=1 but still carry "model" specs;
+        # strip them (storage sharding comes from the FSDP pass instead).
+        for key in ("blocks", "enc_blocks"):
+            if key in t:
+                t[key] = _strip_model_specs(t[key])
+        t = apply_fsdp_tree(t, mesh, run,
+                            axes=("data", "model") if mesh.data > 1
+                            else ("model",))
+    elif run.fsdp and mesh.data > 1:
+        t = apply_fsdp_tree(t, mesh, run)
+    return t
+
+
+def lm_fsdp_dims(table: Dict) -> Dict:
+    """Static pytree of FSDP gather dims, passed alongside params at runtime
+    (params are plain arrays inside shard_map, so the dims travel as a
+    parallel static structure)."""
+    out: Dict[str, Any] = {}
+    for key in ("blocks", "enc_blocks"):
+        if key in table:
+            out[key] = fsdp_dims(table[key])
+    for key in ("embed", "lm_head"):
+        out[key] = table[key].fsdp_dim if key in table else None
+    return out
+
+
+def _strip_model_specs(table):
+    import dataclasses
+
+    def one(d: PDef) -> PDef:
+        spec = tuple(None if sp == "model" else sp for sp in d.spec)
+        return dataclasses.replace(d, spec=spec)
+
+    return tmap(one, table)
+
+
+def apply_fsdp_tree(t, mesh: MeshConfig, run: RunConfig, axes=("data",)):
+    sizes = {"data": mesh.data, "model": mesh.model, "pod": mesh.pod}
+    n = 1
+    for a in axes:
+        n *= sizes[a]
+    out = dict(t)
+    for key in ("blocks", "enc_blocks"):
+        if key in out:
+            out[key] = _fsdp_skip_scan_dim(out[key], n, axes, run)
+    for key in ("embed", "lm_head"):
+        if key in out and run.tp_strategy != "fsdp":
+            out[key] = apply_fsdp({"x": out[key]}, ("data",), mesh.data,
+                                  run.fsdp_min_size)["x"]
+    return out
+
+
+def _fsdp_skip_scan_dim(table, n: int, axes, run: RunConfig):
+    """apply_fsdp over ``axes``, but never on the scan (leading) dim."""
+    import dataclasses
+
+    def one(d: PDef) -> PDef:
+        size = int(np.prod(d.shape))
+        if size < run.fsdp_min_size:
+            return d
+        cands = [(dim, s) for dim, (s, sp) in
+                 enumerate(zip(d.shape, d.spec))
+                 if dim > 0 and sp is None and s % n == 0 and s > 1]
+        if not cands:
+            return d
+        dim = max(cands, key=lambda c: c[1])[0]
+        entry = axes[0] if len(axes) == 1 else tuple(axes)
+        spec = tuple(entry if i == dim else sp
+                     for i, sp in enumerate(d.spec))
+        return dataclasses.replace(d, spec=spec, fsdp_dim=dim)
+
+    return tmap(one, table)
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding (vocab-sharded)
+# ---------------------------------------------------------------------------
+
+def embed_tokens(cfg: ModelConfig, run: RunConfig, table: jax.Array,
+                 tokens: jax.Array, tp: int, scatter: bool = False) -> jax.Array:
+    """Vocab-sharded embedding lookup.
+
+    Each shard holds v_loc table rows and contributes *partial* embeddings
+    (zero for tokens outside its vocab range); the partials are combined
+    over "model".  IMPORTANT: ``tokens`` must be identical on every model
+    shard (full sequence) — the combine sums vocab shards, so per-shard
+    token slices would mix positions.  With ``scatter=True`` the combine is
+    a psum_scatter along the sequence dim, returning the (B, S/tp, D)
+    sequence-sharded layout directly (train/prefill); with ``scatter=False``
+    a plain psum returns (B, S, D) replicated (decode: S=1).
+    """
+    v_loc = table.shape[0]
+    off = jax.lax.axis_index("model") * v_loc
+    idx = tokens.astype(jnp.int32) - off
+    ok = (idx >= 0) & (idx < v_loc)
+    emb = jnp.take(table, jnp.clip(idx, 0, v_loc - 1), axis=0)
+    # vocab shards are disjoint (exactly one nonzero contributor per token),
+    # so a bf16 combine is exact and halves the wire bytes.
+    emb = jnp.where(ok[..., None], emb, 0).astype(jnp.bfloat16)
+    if scatter:
+        out = jax.lax.psum_scatter(emb, "model", scatter_dimension=1,
+                                   tiled=True)
+    else:
+        out = jax.lax.psum(emb, "model")
+    out = out.astype(jnp.float32)
+    if cfg.scale_embeddings:                      # gemma2 scales embeddings
+        out = out * jnp.sqrt(float(cfg.d_model))
+    return out.astype(jnp.bfloat16)
+
+
+def chunked_xent(cfg: ModelConfig, run: RunConfig, x: jax.Array,
+                 head: jax.Array, labels: jax.Array, tp: int) -> jax.Array:
+    """Vocab-sharded cross entropy, seq-chunked.
+
+    x (B,S_loc,D) bf16; head (D, V_loc); labels (B,S_loc).  Returns the
+    local *sum* of token losses (caller psums and normalizes).
+    """
+    b, s_loc, d = x.shape
+    v_loc = head.shape[1]
+    off = jax.lax.axis_index("model") * v_loc
+    col = jnp.arange(v_loc)
+    col_ok = (off + col) < cfg.vocab_size
+    c = min(run.loss_chunk, s_loc)
+    nc = s_loc // c
+    assert s_loc % c == 0
+
+    def step(acc, inp):
+        xc, lc = inp                                   # (B,c,D), (B,c)
+        logits = jnp.einsum("bcd,dv->bcv", xc, head,
+                            preferred_element_type=jnp.float32)
+        if cfg.final_softcap is not None:
+            logits = layers.softcap(logits, cfg.final_softcap)
+        logits = jnp.where(col_ok[None, None, :], logits, layers.NEG_INF)
+        # pmax has no AD rule; the max shift is gradient-free anyway, so cut
+        # the tangent *before* the collective (symbolic-zero skips the rule).
+        mx = jax.lax.pmax(jax.lax.stop_gradient(logits.max(-1)), "model")
+        se = jax.lax.psum(jnp.exp(logits - mx[..., None]).sum(-1), "model")
+        idx = lc.astype(jnp.int32) - off
+        ok = (idx >= 0) & (idx < v_loc)
+        tgt = jnp.take_along_axis(
+            logits, jnp.clip(idx, 0, v_loc - 1)[..., None], axis=-1)[..., 0]
+        tgt = jax.lax.psum(jnp.where(ok, tgt, 0.0), "model")
+        loss = jnp.log(se) + mx - tgt
+        return acc + loss.sum(), None
+
+    xc = x.reshape(b, nc, c, d).swapaxes(0, 1)
+    lc = labels.reshape(b, nc, c).swapaxes(0, 1)
+    total, _ = jax.lax.scan(step, jnp.zeros((), jnp.float32), (xc, lc))
+    return total
+
+
+def logits_for(cfg: ModelConfig, run: RunConfig, params, dims,
+               x: jax.Array) -> jax.Array:
+    """Final-position logits (decode): x (B,1,D) -> (B,1,V_loc) local.
+
+    Padded vocab columns are masked to -inf (they hold random-init weights;
+    without the mask greedy decode can emit out-of-vocab ids).
+    """
+    head = gathered_head(cfg, params, dims, run)
+    logits = jnp.einsum("bsd,dv->bsv", x, head,
+                        preferred_element_type=jnp.float32)
+    if cfg.final_softcap is not None:
+        logits = layers.softcap(logits, cfg.final_softcap)
+    v_loc = head.shape[1]
+    col_ok = (jax.lax.axis_index("model") * v_loc
+              + jnp.arange(v_loc)) < cfg.vocab_size
+    return jnp.where(col_ok[None, None, :], logits, layers.NEG_INF)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill trunk)
+# ---------------------------------------------------------------------------
+
+def _scan_blocks(cfg: ModelConfig, run: RunConfig, stacked, dims, x,
+                 positions_full, spec, tp, windows=None, memory=None,
+                 mem_positions=None, want_cache: bool = False,
+                 local: bool = False, cache_stores=None, cache_xform=None):
+    """Scan the (stacked) blocks; returns (x, stacked caches, aux sum).
+
+    ``cache_stores``/``cache_xform``: when building a decode cache, the raw
+    per-layer KV is transformed (resharded + LEXI-block-compressed) INSIDE
+    the scan body — materializing all layers' raw KV first would need
+    L x seq x heads bf16 of HBM (tens of GB/chip at 32k prefill).
+    """
+
+    def body(carry, xs):
+        xb, aux = carry
+        p_layer, win, store = xs
+        p_layer = blocks.gather_fsdp(p_layer, dims, run)
+        xb, cache, a = blocks.block_forward(
+            cfg, run, p_layer, xb, positions_full, spec, tp, window=win,
+            memory=memory, mem_positions=mem_positions,
+            want_cache=want_cache, local=local)
+        if cache_xform is not None:
+            cache = cache_xform(cache, store)
+        return (xb, aux + a), cache
+
+    body_fn = jax.checkpoint(body) if run.remat else body
+    wins = (windows if windows is not None
+            else jnp.zeros((cfg.n_layers,), jnp.int32))
+    (x, aux), caches = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                                    (stacked, wins, cache_stores))
+    return x, caches, aux
+
+
+def gathered_embed(params, dims, run: RunConfig) -> jax.Array:
+    """Embedding table with its FSDP shard gathered (compressed) if needed."""
+    e = params["embed"]
+    if dims and dims.get("embed") is not None:
+        e = blocks.gather_fsdp(e, dims["embed"], run, in_scan=False)
+    return e
+
+
+def gathered_head(cfg: ModelConfig, params, dims, run: RunConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        return gathered_embed(params, dims, run).T
+    h = params["lm_head"]
+    if dims and dims.get("lm_head") is not None:
+        h = blocks.gather_fsdp(h, dims["lm_head"], run, in_scan=False)
+    return h
+
+
+def lm_forward(cfg: ModelConfig, run: RunConfig, params, tokens: jax.Array,
+               tp: int, dims: Optional[Dict] = None,
+               front_embeds: Optional[jax.Array] = None,
+               enc_embeds: Optional[jax.Array] = None,
+               want_cache: bool = False, cache_stores=None,
+               cache_xform=None):
+    """Trunk forward.  tokens (B_loc, S) full-seq (each shard slices its part).
+
+    Returns (hidden (B,S_loc,D), caches or None, aux).
+    ``dims`` is the static FSDP-dims pytree from ``lm_fsdp_dims``.
+    """
+    b, s = tokens.shape
+    s_loc = s // tp
+    ti = jax.lax.axis_index("model")
+    positions_full = jnp.arange(s, dtype=jnp.int32)
+    spec = attention.base_attn_spec(cfg)
+    wins = attention.layer_windows(cfg)
+    wins = None if wins is None else jnp.asarray(wins)
+
+    # full-sequence tokens in, sequence-sharded embeddings out (see note in
+    # embed_tokens: the vocab-shard combine must see identical tokens).
+    x = embed_tokens(cfg, run, gathered_embed(params, dims, run), tokens, tp,
+                     scatter=True)
+
+    # fsdp strategy: reshard seq-sharded -> batch-sharded over "model"
+    # (one a2a); blocks then run with zero model-axis collectives, weights
+    # arriving via compressed ZeRO-3 gathers instead.
+    fsdp_mode = run.tp_strategy == "fsdp" and tp > 1
+    if fsdp_mode:
+        assert b % tp == 0, (
+            f"tp_strategy=fsdp needs per-data-shard batch {b} divisible by "
+            f"model={tp}")
+        x = jax.lax.all_to_all(x, "model", split_axis=0, concat_axis=1,
+                               tiled=True)            # (B/tp, S, D)
+
+    if cfg.frontend == "vision_stub" and front_embeds is not None:
+        pos = ti * s_loc + jnp.arange(s_loc)
+        nf = cfg.n_frontend_tokens
+        fe = jnp.take(front_embeds, jnp.clip(pos, 0, nf - 1), axis=1)
+        x = jnp.where((pos < nf)[None, :, None], fe.astype(x.dtype), x)
+
+    memory = mem_pos = None
+    if cfg.encdec:
+        # encoder trunk on frame embeddings (audio stub) or token embeds
+        assert enc_embeds is not None, "encdec needs encoder inputs"
+        sm = enc_embeds.shape[1]
+        sm_loc = sm // tp
+        ex = jax.lax.dynamic_slice_in_dim(enc_embeds, ti * sm_loc, sm_loc,
+                                          axis=1).astype(jnp.bfloat16)
+        espec = layers.AttnSpec(causal=False, softcap=cfg.attn_softcap)
+        edims = dims.get("enc_blocks") if dims else None
+        ex, _, _ = _scan_blocks(cfg, run, params["enc_blocks"], edims, ex,
+                                jnp.arange(sm, dtype=jnp.int32), espec, tp)
+        ex = layers.rms_norm(ex, params["enc_norm"], cfg.norm_eps)
+        memory = cl.lexi_all_gather(ex, "model", run.codec, gather_axis=1)
+        mem_pos = jnp.arange(sm, dtype=jnp.int32)
+
+    bdims = dims.get("blocks") if dims else None
+    tp_eff = 1 if fsdp_mode else tp
+    x, caches, aux = _scan_blocks(cfg, run, params["blocks"], bdims, x,
+                                  positions_full, spec, tp_eff, windows=wins,
+                                  memory=memory, mem_positions=mem_pos,
+                                  want_cache=want_cache, local=fsdp_mode,
+                                  cache_stores=cache_stores,
+                                  cache_xform=cache_xform)
+    if fsdp_mode:   # back to seq-sharded for the vocab-sharded loss
+        x = jax.lax.all_to_all(x, "model", split_axis=1, concat_axis=0,
+                               tiled=True)            # (B, S/tp, D)
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, caches, aux
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def train_loss(cfg: ModelConfig, run: RunConfig, params, batch: Dict,
+               tp: int, batch_axes: Tuple[str, ...],
+               dims: Optional[Dict] = None) -> jax.Array:
+    """LOCAL shard contribution to the global mean next-token loss.
+
+    Deliberately contains NO loss-reduction collectives: under shard_map,
+    ``transpose(psum) = psum`` re-sums unit cotangents across shards and
+    scales gradients by the shard count.  Each shard therefore returns its
+    own (batch-slice × seq-slice) token-loss sum normalized by the *global*
+    token count; summing the returned value over every mesh axis gives the
+    true global mean (``train.train_step`` does that, outside AD), and the
+    per-leaf gradient psums live in ``train.optimizer.sync_grads``.
+    """
+    tokens, labels = batch["tokens"], batch["labels"]
+    x, _, aux = lm_forward(cfg, run, params, tokens, tp, dims=dims,
+                           front_embeds=batch.get("front_embeds"),
+                           enc_embeds=batch.get("enc_embeds"))
+    b, s = tokens.shape
+    s_loc = s // tp
+    ti = jax.lax.axis_index("model")
+    lab_loc = jax.lax.dynamic_slice_in_dim(labels, ti * s_loc, s_loc, axis=1)
+    head = gathered_head(cfg, params, dims, run)
+    local_sum = chunked_xent(cfg, run, x, head, lab_loc, tp)
+    n_tokens = b * s
+    n_shards = tp
+    for a in batch_axes:                      # static mesh sizes
+        size = jax.lax.psum(1, a)
+        n_tokens = n_tokens * size
+        n_shards = n_shards * size
+    loss = local_sum / n_tokens
+    # aux is a per-shard statistic; normalize so the all-axes sum is the
+    # shard-mean per layer.
+    return loss + AUX_LOSS_COEF * aux / (n_shards * max(cfg.n_layers, 1))

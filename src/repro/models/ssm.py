@@ -1,0 +1,247 @@
+"""Mamba2 (SSD — state-space duality) blocks, manual-SPMD.
+
+TP: heads (d_inner) column-sharded over "model"; the shared B/C projections
+(ngroups=1) are row-parallel + psum like the GQA row mode; out_proj is
+row-sharded so the caller psum_scatters the block output.
+
+Train/prefill uses the chunked SSD algorithm (quadratic-within-chunk +
+linear-across-chunks); decode is the O(1) recurrent update on the fixed-size
+state — the "state cache" half of the paper's hybrid caches, which LEXI
+compresses between steps.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from . import layers
+from .params import PDef
+
+
+def ssm_dims(cfg: ModelConfig, tp: int):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    assert nh % tp == 0, (nh, tp)
+    return di, nh, s.headdim, s.d_state
+
+
+def ssm_table(cfg: ModelConfig, tp: int) -> Dict[str, PDef]:
+    d = cfg.d_model
+    s = cfg.ssm
+    di, nh, _, n = ssm_dims(cfg, tp)
+    return {
+        "w_zx": PDef((d, 2 * di), (None, "model")),
+        "w_bc": PDef((d, 2 * n), ("model", None)),
+        "w_dt": PDef((d, nh), (None, "model")),
+        "dt_bias": PDef((nh,), ("model",), "zeros"),
+        "a_log": PDef((nh,), ("model",), "zeros"),       # A = -exp(a_log)
+        "d_skip": PDef((nh,), ("model",), "ones"),
+        "conv_x": PDef((s.d_conv, di), (None, "model"), "normal:0.1"),
+        "conv_bc": PDef((s.d_conv, 2 * n), (None, None), "normal:0.1"),
+        "gate_norm": PDef((di,), ("model",), "ones"),
+        "w_out": PDef((di, d), ("model", None)),
+    }
+
+
+class SSMState(NamedTuple):
+    """Decode-phase recurrent state (the paper's SSM "state cache")."""
+    h: jax.Array          # (B, H_loc, P, N) f32
+    conv_x: jax.Array     # (B, d_conv-1, di_loc) bf16 ring
+    conv_bc: jax.Array    # (B, d_conv-1, 2N) bf16
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv along seq: x (B,S,C), w (K,C) -> (B,S,C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):                                 # unrolled small K
+        out = out + xp[:, i:i + x.shape[1], :].astype(jnp.float32) \
+            * w[i].astype(jnp.float32)
+    return jax.nn.silu(out).astype(jnp.bfloat16)
+
+
+def _proj_bc(cfg: ModelConfig, p, xg: jax.Array, tp: int) -> jax.Array:
+    """Row-parallel shared B/C projection (B,S,2N) + psum (local at tp=1)."""
+    if tp == 1:
+        return jnp.einsum("bsk,kn->bsn", xg, p["w_bc"],
+                          preferred_element_type=jnp.float32
+                          ).astype(jnp.bfloat16)
+    dsh = cfg.d_model // tp
+    i = jax.lax.axis_index("model") * dsh
+    xs = jax.lax.dynamic_slice_in_dim(xg, i, dsh, axis=-1)
+    return jax.lax.psum(
+        jnp.einsum("bsk,kn->bsn", xs, p["w_bc"],
+                   preferred_element_type=jnp.float32), "model"
+    ).astype(jnp.bfloat16)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                c: jax.Array, chunk: int
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x (B,S,H,P); dt (B,S,H) post-softplus; a (H,) negative; b/c (B,S,N)
+    shared across heads (ngroups=1).  Returns (y (B,S,H,P), final state
+    (B,H,P,N) f32).
+    """
+    bs, s, h, p_ = x.shape
+    n = b.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:  # zero-pad the tail: dt=0 ⇒ decay 1, contribution 0 (exact)
+        zc = lambda a: jnp.pad(a, [(0, 0), (0, pad)] +
+                               [(0, 0)] * (a.ndim - 2))
+        x, dt, b, c = zc(x), zc(dt), zc(b), zc(c)
+    s_p = s + pad
+    nc = s_p // q
+
+    xf = x.astype(jnp.float32).reshape(bs, nc, q, h, p_)
+    dtf = dt.astype(jnp.float32).reshape(bs, nc, q, h)
+    bf = b.astype(jnp.float32).reshape(bs, nc, q, n)
+    cf = c.astype(jnp.float32).reshape(bs, nc, q, n)
+    da = dtf * a                                        # (B,nc,Q,H) <= 0
+    lcum = jnp.cumsum(da, axis=2)                       # within-chunk logdecay
+
+    # intra-chunk: Y[t] = sum_{s<=t} (C_t.B_s) exp(l_t-l_s) dt_s x_s
+    g = jnp.einsum("bcqn,bckn->bcqk", cf, bf)           # (B,nc,Q,Q)
+    ldiff = lcum[:, :, :, None, :] - lcum[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(ldiff), 0.0)
+    y_intra = jnp.einsum("bcqk,bcqkh,bckh,bckhp->bcqhp",
+                         g, decay, dtf, xf)
+
+    # chunk states: S_c = sum_t B_t (dt_t x_t) exp(l_Q - l_t)
+    tail = jnp.exp(lcum[:, :, -1:, :] - lcum)           # (B,nc,Q,H)
+    st = jnp.einsum("bcqn,bcqh,bcqhp->bchnp", bf, dtf * tail, xf)
+
+    # inter-chunk recurrence over nc
+    chunk_decay = jnp.exp(lcum[:, :, -1, :])            # (B,nc,H)
+
+    def step(hprev, inp):
+        dec, s_c = inp                                  # (B,H), (B,H,N,P)
+        hnew = hprev * dec[..., None, None] + s_c
+        return hnew, hprev
+
+    h0 = jnp.zeros((bs, h, n, p_), jnp.float32)
+    hlast, hprevs = jax.lax.scan(
+        step, h0, (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(st, 1, 0)))
+    hprevs = jnp.moveaxis(hprevs, 0, 1)                 # (B,nc,H,N,P)
+
+    # inter-chunk contribution: C_t . h_{c-1} * exp(l_t)
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp",
+                         cf, jnp.exp(lcum), hprevs)
+    y = (y_intra + y_inter).reshape(bs, s_p, h, p_)[:, :s]
+    return y.astype(jnp.bfloat16), jnp.moveaxis(hlast, -1, -2)  # (B,H,P,N)
+
+
+def ssm_forward(cfg: ModelConfig, run: RunConfig, p, xg: jax.Array,
+                tp: int, want_state: bool = False):
+    """Full-sequence SSD block.  xg (B,S,D) gathered; returns partial-sum
+    output (B,S,D) f32 (caller psum_scatters) and optionally the final
+    recurrent state for the prefill→decode transition."""
+    di, nh, hd, n = ssm_dims(cfg, tp)
+    nh_loc = nh // tp
+    di_loc = di // tp
+    bs, s, _ = xg.shape
+
+    zx = layers.pdot(xg, p["w_zx"])                     # (B,S,2*di_loc)
+    z, xin = zx[..., :di_loc], zx[..., di_loc:]
+    dt = jnp.einsum("bsk,kn->bsn", xg, p["w_dt"],
+                    preferred_element_type=jnp.float32)  # (B,S,nh_loc)
+    bc = _proj_bc(cfg, p, xg, tp)                       # (B,S,2N)
+
+    # depthwise causal conv (+silu) on x and shared B/C; keep the raw tails
+    # (pre-conv) for the decode-phase conv ring buffers.
+    ti = jax.lax.axis_index("model") if tp > 1 else 0
+    convx_w = jax.lax.dynamic_slice_in_dim(
+        p["conv_x"], ti * di_loc, di_loc, axis=1)
+    xin_raw, bc_raw = xin, bc
+    xin = _causal_conv(xin, convx_w)
+    bc = _causal_conv(bc, p["conv_bc"])
+    b_, c_ = bc[..., :n], bc[..., n:]
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))        # (nh_loc,)
+    dt = jax.nn.softplus(dt + p["dt_bias"].astype(jnp.float32))
+    xh = xin.reshape(bs, s, nh_loc, hd)
+    y, state = ssd_chunked(xh, dt, a, b_, c_, cfg.ssm.chunk)
+    y = y + xh.astype(jnp.bfloat16) * p["d_skip"].astype(jnp.bfloat16)[
+        None, None, :, None]
+    y = y.reshape(bs, s, di_loc)
+    y = layers.rms_norm(
+        y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32)),
+        p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kn->bsn", y, p["w_out"],
+                     preferred_element_type=jnp.float32)  # partial over model
+
+    if not want_state:
+        return out, None
+    k = cfg.ssm.d_conv - 1
+    st = SSMState(h=state,
+                  conv_x=xin_raw[:, s - k:, :],
+                  conv_bc=bc_raw[:, s - k:, :])
+    return out, st
+
+
+def ssm_decode_step(cfg: ModelConfig, p, x: jax.Array, state: SSMState,
+                    tp: int) -> Tuple[jax.Array, SSMState]:
+    """One-token recurrent update.  x (B,1,D) full; returns partial-sum
+    output (B,1,D) f32 and the new state.
+
+    Note: conv ring buffers store *pre-activation* inputs; the prefill
+    transition stores the raw tail (see engine), so semantics match.
+    """
+    di, nh, hd, n = ssm_dims(cfg, tp)
+    nh_loc, di_loc = nh // tp, di // tp
+    bs = x.shape[0]
+
+    zx = layers.pdot(x, p["w_zx"])
+    z, xin = zx[..., :di_loc], zx[..., di_loc:]         # (B,1,di_loc)
+    dt = jnp.einsum("bsk,kn->bsn", x, p["w_dt"],
+                    preferred_element_type=jnp.float32)[:, 0]  # (B,nh_loc)
+    if tp == 1:
+        bc = jnp.einsum("bsk,kn->bsn", x, p["w_bc"],
+                        preferred_element_type=jnp.float32
+                        ).astype(jnp.bfloat16)
+    else:
+        dsh = cfg.d_model // tp
+        i = jax.lax.axis_index("model") * dsh
+        xs = jax.lax.dynamic_slice_in_dim(x, i, dsh, axis=-1)
+        bc = jax.lax.psum(jnp.einsum("bsk,kn->bsn", xs, p["w_bc"],
+                                     preferred_element_type=jnp.float32),
+                          "model").astype(jnp.bfloat16)     # (B,1,2N)
+
+    # conv ring update (pre-activation inputs in the ring)
+    ti = jax.lax.axis_index("model") if tp > 1 else 0
+    convx_w = jax.lax.dynamic_slice_in_dim(
+        p["conv_x"], ti * di_loc, di_loc, axis=1)
+    ring_x = jnp.concatenate([state.conv_x, xin], axis=1)   # (B,K,di_loc)
+    ring_bc = jnp.concatenate([state.conv_bc, bc], axis=1)
+    xin_c = jax.nn.silu(jnp.einsum(
+        "bkc,kc->bc", ring_x.astype(jnp.float32),
+        convx_w.astype(jnp.float32)))[:, None]              # (B,1,di_loc)
+    bc_c = jax.nn.silu(jnp.einsum(
+        "bkc,kc->bc", ring_bc.astype(jnp.float32),
+        p["conv_bc"].astype(jnp.float32)))[:, None]
+    b_, c_ = bc_c[..., :n], bc_c[..., n:]
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt + p["dt_bias"].astype(jnp.float32))  # (B,nh_loc)
+    xh = xin_c.reshape(bs, nh_loc, hd).astype(jnp.float32)
+    decay = jnp.exp(dt * a)                              # (B,nh_loc)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, xh, b_[:, 0].astype(jnp.float32))
+    h = state.h * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", h, c_[:, 0].astype(jnp.float32))
+    y = y + xh * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(bs, 1, di_loc)
+    y = layers.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)),
+                        p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kn->bsn", y, p["w_out"],
+                     preferred_element_type=jnp.float32)
+    new = SSMState(h=h, conv_x=ring_x[:, 1:], conv_bc=ring_bc[:, 1:])
+    return out, new

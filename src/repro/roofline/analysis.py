@@ -1,0 +1,432 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes / (chips × HBM_bw)
+    collective term = collective_bytes / (chips × link_bw)
+
+Sources: ``compiled.cost_analysis()`` for FLOPs/bytes; collective bytes are
+parsed from the *lowered* StableHLO text — our models are manual-SPMD, so
+every collective appears there explicitly with true dtypes and per-shard
+operand shapes (the compiled CPU HLO upcasts bf16 collectives to f32, which
+would inflate byte counts ~2x; we cross-check against it but report the
+lowered numbers).  Per task spec we sum *operand* sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Hardware constants (TPU v5e class, from the assignment):
+    197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link (per-chip effective)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "i32": 4, "ui32": 4,
+    "s16": 2, "u16": 2, "i16": 2, "s8": 1, "u8": 1, "i8": 1, "i1": 1,
+    "pred": 1,
+}
+
+_COLLECTIVES = ("all_gather", "all_reduce", "reduce_scatter", "all_to_all",
+                "collective_permute", "collective_broadcast")
+
+_TENSOR_RE = re.compile(r"tensor<([0-9x]*)x?(f64|f32|bf16|f16|u64|i64|u32|"
+                        r"i32|u16|i16|u8|i8|i1)>")
+
+
+def _tensor_bytes(t: str) -> int:
+    m = _TENSOR_RE.match(t.strip())
+    if not m:
+        return 0
+    dims, dt = m.groups()
+    n = 1
+    for d in dims.split("x"):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    operand_bytes: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.operand_bytes.values())
+
+
+def parse_collectives(stablehlo_text: str,
+                      scan_trip_counts: bool = True) -> CollectiveStats:
+    """Sum operand bytes of every collective op in the lowered module.
+
+    Collectives inside ``stablehlo.while`` bodies (scan over layers) execute
+    once per trip; we multiply by the trip count inferred from the iota/scan
+    upper bound when detectable (conservative: if not detectable, count 1).
+    """
+    counts: Dict[str, int] = {}
+    obytes: Dict[str, int] = {}
+
+    # trip counts: map function name -> multiplier (main = 1)
+    # StableHLO lowers lax.scan to stablehlo.while inside the same func with
+    # the trip count visible as a constant compare limit; a robust simple
+    # heuristic: find `stablehlo.while` regions and their `compare LT, c`
+    # bounds, then scale collectives found inside by that bound.
+    lines = stablehlo_text.splitlines()
+    region_mult: List[int] = [1]
+    mults: List[Tuple[int, int]] = []  # (line_no, multiplier at that line)
+    cur = 1
+    stack: List[int] = []
+    bound_re = re.compile(r"stablehlo.constant dense<(\d+)> : tensor<i32>")
+    # Pre-scan: record while-region bounds in order of appearance.
+    while_bounds: List[int] = []
+    for i, ln in enumerate(lines):
+        if "stablehlo.while" in ln:
+            # look back a few lines for the loop bound constant
+            bound = None
+            for j in range(max(0, i - 30), i):
+                m = bound_re.search(lines[j])
+                if m:
+                    bound = int(m.group(1))
+            while_bounds.append(bound if bound and bound > 1 else 1)
+
+    wi = 0
+    depth_mult = {0: 1}
+    depth = 0
+    for ln in lines:
+        if "stablehlo.while" in ln and scan_trip_counts:
+            depth += 1
+            mult = depth_mult[depth - 1] * (while_bounds[wi]
+                                            if wi < len(while_bounds) else 1)
+            depth_mult[depth] = mult
+            wi += 1
+        # region close heuristic
+        if ln.strip().startswith("}") and depth > 0 and "while" not in ln:
+            # conservative: only decrement on bare closes following a while
+            pass
+        for op in _COLLECTIVES:
+            if f"stablehlo.{op}" in ln:
+                # operand types: the `: (tensor<...>, ...) -> ...` suffix
+                m = re.search(r":\s*\(([^)]*)\)\s*->", ln)
+                if m:
+                    types = m.group(1).split(",")
+                else:
+                    m2 = re.search(r":\s*(tensor<[^>]*>)\s*->", ln)
+                    types = [m2.group(1)] if m2 else []
+                b = sum(_tensor_bytes(t) for t in types)
+                mult = depth_mult.get(depth, 1)
+                counts[op] = counts.get(op, 0) + mult
+                obytes[op] = obytes.get(op, 0) + b * mult
+    return CollectiveStats(counts=counts, operand_bytes=obytes)
+
+
+# ---------------------------------------------------------------------------
+# Exact jaxpr-based accounting.
+#
+# compiled.cost_analysis() on the CPU backend counts while/scan bodies ONCE
+# (off by n_layers), so the roofline instead walks the jaxpr: scan bodies are
+# multiplied by their trip count, collectives report exact per-shard operand
+# bytes (inside shard_map avals are per-chip), and dot_generals give FLOPs.
+# ---------------------------------------------------------------------------
+
+_COLL_PRIMS = {
+    "all_gather": "all_gather",
+    "all_gather_invariant": "all_gather",
+    "psum": "all_reduce",
+    "psum2": "all_reduce",
+    "psum_invariant": "all_reduce",
+    "reduce_scatter": "reduce_scatter",
+    "psum_scatter": "reduce_scatter",
+    "all_to_all": "all_to_all",
+    "ppermute": "collective_permute",
+    "pmax": "all_reduce",
+    "pmin": "all_reduce",
+}
+
+
+@dataclasses.dataclass
+class JaxprStats:
+    """coll_bytes: spec metric (operand sizes, as the task asks to record).
+    wire_bytes: physical per-chip ICI traffic — all_gather moves ~(N-1)x its
+    operand, allreduce ~2x, RS/a2a ~1x — used for the roofline term."""
+    flops: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    wire_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_counts: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.coll_bytes.values())
+
+    @property
+    def collective_wire_bytes(self) -> float:
+        return sum(self.wire_bytes.values())
+
+
+def _aval_bytes(aval) -> int:
+    try:
+        return int(aval.size) * aval.dtype.itemsize
+    except Exception:  # noqa: BLE001 — abstract tokens etc.
+        return 0
+
+
+def _dot_flops(eqn) -> float:
+    a, b = eqn.invars[0].aval, eqn.invars[1].aval
+    dn = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dn
+    batch = 1.0
+    for d in lb:
+        batch *= a.shape[d]
+    contract = 1.0
+    for d in lc:
+        contract *= a.shape[d]
+    m = 1.0
+    for i, s in enumerate(a.shape):
+        if i not in lc and i not in lb:
+            m *= s
+    n = 1.0
+    for i, s in enumerate(b.shape):
+        if i not in rc and i not in rb:
+            n *= s
+    return 2.0 * batch * m * n * contract
+
+
+def _axis_n(eqn, axis_sizes: Dict[str, int]) -> int:
+    p = eqn.params or {}
+    if "axis_size" in p:
+        return int(p["axis_size"])
+    names = p.get("axes") or p.get("axis_name") or ()
+    if isinstance(names, str):
+        names = (names,)
+    n = 1
+    for a in names:
+        n *= axis_sizes.get(a, 1)
+    return max(n, 1)
+
+
+def _wire_factor(kind: str, n: int) -> float:
+    """Per-chip ICI bytes as a multiple of the per-chip operand size
+    (ring schedules): AG receives (n-1) shards; AR = RS+AG = 2(n-1)/n;
+    RS and a2a move (n-1)/n of the operand; permute moves it once."""
+    if n <= 1:
+        return 0.0
+    return {"all_gather": float(n - 1),
+            "all_reduce": 2.0 * (n - 1) / n,
+            "reduce_scatter": (n - 1) / n,
+            "all_to_all": (n - 1) / n,
+            "collective_permute": 1.0,
+            "collective_broadcast": 1.0}.get(kind, 1.0)
+
+
+def _walk(jaxpr, mult: float, st: JaxprStats,
+          axis_sizes: Dict[str, int]) -> None:
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim == "dot_general":
+            st.flops += mult * _dot_flops(eqn)
+        elif prim in _COLL_PRIMS:
+            kind = _COLL_PRIMS[prim]
+            b = sum(_aval_bytes(v.aval) for v in eqn.invars
+                    if hasattr(v, "aval"))
+            n = _axis_n(eqn, axis_sizes)
+            st.coll_bytes[kind] = st.coll_bytes.get(kind, 0.0) + mult * b
+            st.wire_bytes[kind] = st.wire_bytes.get(kind, 0.0) \
+                + mult * b * _wire_factor(kind, n)
+            st.coll_counts[kind] = st.coll_counts.get(kind, 0.0) + mult
+        elif prim == "scan":
+            _walk(eqn.params["jaxpr"].jaxpr, mult * eqn.params["length"],
+                  st, axis_sizes)
+        elif prim == "while":
+            body = eqn.params["body_jaxpr"].jaxpr
+            _walk(body, mult, st, axis_sizes)   # unknown trips: count once
+        elif prim == "cond":
+            # both branches lower to selects on TPU; count the max branch
+            branches = eqn.params["branches"]
+            subs = []
+            for br in branches:
+                sub = JaxprStats()
+                _walk(br.jaxpr, mult, sub, axis_sizes)
+                subs.append(sub)
+            best = max(subs, key=lambda s: s.flops + s.collective_bytes)
+            st.flops += best.flops
+            for field in ("coll_bytes", "wire_bytes", "coll_counts"):
+                dst = getattr(st, field)
+                for k, v in getattr(best, field).items():
+                    dst[k] = dst.get(k, 0.0) + v
+        else:
+            for key in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+                sub = eqn.params.get(key) if eqn.params else None
+                if sub is not None:
+                    _walk(getattr(sub, "jaxpr", sub), mult, st, axis_sizes)
+                    break
+            else:
+                if eqn.params:
+                    for v in eqn.params.values():
+                        if hasattr(v, "jaxpr"):
+                            _walk(v.jaxpr, mult, st, axis_sizes)
+
+
+def analyze_jaxpr(closed_jaxpr, axis_sizes: Dict[str, int] | None = None
+                  ) -> JaxprStats:
+    st = JaxprStats()
+    _walk(closed_jaxpr.jaxpr, 1.0, st, axis_sizes or {})
+    return st
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float             # total, all chips
+    hlo_bytes: float             # total, all chips
+    collective_bytes: float      # per chip (lowered text is per-shard)
+    model_flops: float           # 6·N·D analytic
+    min_bytes: float = 0.0       # per-chip mandatory HBM reads (params,
+                                 # caches — packed sizes when codec on)
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+
+    def finalize(self) -> "Roofline":
+        self.compute_s = self.hlo_flops / (self.chips * PEAK_FLOPS)
+        self.memory_s = self.hlo_bytes / (self.chips * HBM_BW)
+        self.collective_s = self.collective_bytes / ICI_BW
+        return self
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / max(self.hlo_flops, 1.0)
+
+    @property
+    def step_time_s(self) -> float:
+        """Naive no-overlap bound: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def ideal_s(self) -> float:
+        """Best achievable step time: compute bound OR the mandatory HBM
+        floor (params + caches must be read once), whichever is larger —
+        decode can never reach compute peak, so its roofline target is the
+        bandwidth bound."""
+        return max(self.model_flops / (self.chips * PEAK_FLOPS),
+                   self.min_bytes / HBM_BW)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """ideal_s / step_time: 1.0 = sitting on the roofline."""
+        return self.ideal_s / max(self.step_time_s, 1e-12)
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips, "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "collective_bytes_per_chip": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "ideal_s": self.ideal_s,
+            "min_bytes_per_chip": self.min_bytes, "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def analytic_memory_bytes(cfg, shape, mesh_cfg, run) -> Dict[str, float]:
+    """Per-chip steady-state HBM bytes per step (documented model).
+
+    cost_analysis() undercounts scan bodies, so the memory term uses this
+    transparent accounting instead (the raw cost number is recorded too):
+
+    * params: each chip READS its own shard from HBM (remote shards arrive
+      over ICI and are counted in the collective term).  Compressed-at-rest
+      weights scale by the LEXI-FW wire ratio.  Training adds optimizer
+      state (f32 master+m+v read+write) and parameter writes.
+    * caches (decode): this chip's cache shard is streamed once per step
+      (packed when codec.cache) + one block write amortized.
+    * activations: boundary tensors + mixer intermediates per layer,
+      2 bytes, with a fixed structural multiplier (reads+writes ≈ 6 streams
+      per layer), plus remat recompute reads for training.
+    """
+    from repro.core import fixed
+    chips = mesh_cfg.chips
+    tp = mesh_cfg.model
+    nbatch = mesh_cfg.data * mesh_cfg.pod
+    b = shape.global_batch
+    s = shape.seq_len
+    bshard = nbatch if b % nbatch == 0 else 1
+    wratio = fixed.wire_ratio(run.codec.k, run.codec.esc_frac)
+
+    pbytes_total = cfg.param_count() * 2.0
+    shard_f = tp * (mesh_cfg.data if run.fsdp else 1)
+    params_read = pbytes_total / shard_f
+    if run.codec.weights and shape.kind != "train":
+        params_read /= wratio
+
+    comp = {"params": params_read}
+    if shape.kind == "train":
+        # opt state f32 x3 read+write + param write + grads f32 RW
+        comp["optimizer"] = cfg.param_count() * (24.0 + 24.0 + 8.0) / shard_f
+        comp["params"] = params_read * 3.0      # fwd + remat + bwd reads
+    # activations
+    tokens_loc = (b * (s if shape.kind != "decode" else 1)) / (bshard * 1)
+    d_eff = cfg.d_model
+    if cfg.moe is not None:
+        d_eff += 2 * cfg.moe.top_k * cfg.moe.d_ff / tp
+    elif cfg.d_ff:
+        d_eff += 2 * cfg.d_ff / tp
+    if cfg.ssm is not None:
+        d_eff += 2 * cfg.ssm.d_inner(cfg.d_model) / tp
+    act = tokens_loc / (tp if shape.kind != "decode" else 1) \
+        * d_eff * cfg.n_layers * 2.0 * 6.0
+    if shape.kind == "train":
+        act *= 1.5                              # remat recompute reads
+    comp["activations"] = act
+    # caches
+    if shape.kind == "decode" and cfg.n_heads > 0:
+        w = (cfg.mla.kv_lora_rank + cfg.mla.qk_rope_dim if cfg.mla
+             else 2 * cfg.n_kv_heads * cfg.head_dim)
+        cache = (b / bshard) * (s / tp) * w * cfg.n_layers * 2.0
+        if run.codec.cache:
+            cache /= wratio
+        comp["kv_cache"] = cache
+    if shape.kind == "decode" and cfg.ssm is not None:
+        di = cfg.ssm.d_inner(cfg.d_model)
+        nh = cfg.ssm.n_heads(cfg.d_model)
+        comp["ssm_state"] = (b / bshard) * (nh / tp) * cfg.ssm.headdim \
+            * cfg.ssm.d_state * cfg.n_layers * 4.0 * 2.0
+    if shape.kind == "prefill" and cfg.n_heads > 0:
+        w = (cfg.mla.kv_lora_rank + cfg.mla.qk_rope_dim if cfg.mla
+             else 2 * cfg.n_kv_heads * cfg.head_dim)
+        cache = (b / bshard) * (s / tp) * w * cfg.n_layers * 2.0
+        if run.codec.cache:
+            cache /= wratio
+        comp["kv_cache_write"] = cache
+    comp["total"] = sum(comp.values())
+    return comp
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE) per step; decode: D = batch·1."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens        # forward only
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence

@@ -1,0 +1,2 @@
+"""Batched serving: prefill + decode with LEXI-compressed caches/weights."""
+from . import engine  # noqa: F401

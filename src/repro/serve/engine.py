@@ -1,0 +1,434 @@
+"""Serving engine: batched prefill + decode with LEXI-compressed weights,
+activations, and hybrid caches (manual-SPMD, runs inside shard_map).
+
+Decode dataflow per layer (x (B,1,D) replicated over "model"):
+
+  norm → sharded projections → tiny all_gathers (q to full heads) →
+  cache append (owner-shard ring, block-compress on fill) →
+  partial attention over the local cache shard (compressed blocks streamed)
+  → logsumexp merge (one small psum) → sliced-head o-projection →
+  [+ SSM recurrent update for hybrids] → one psum → residual.
+
+MoE decode routes locally (tokens are replicated over "model", so each shard
+just runs its own experts on the tokens routed to them — zero dispatch a2a
+at decode, partial-sum combine).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.core import collectives as cl
+from repro.models import attention, blocks, cache as cache_mod, layers, lm
+from repro.models import ssm as ssm_mod
+from repro.models.cache import KVBlocks
+from repro.models.ssm import SSMState
+
+
+class DecodeState(NamedTuple):
+    kv: Optional[KVBlocks]       # stacked (L, ...) or None (pure SSM)
+    ssm: Optional[SSMState]      # stacked (L, ...) or None
+    xkv: Optional[KVBlocks]      # enc-dec cross-attention memory (static)
+    length: jax.Array            # () i32 — global tokens so far
+
+
+# ---------------------------------------------------------------------------
+# state construction
+# ---------------------------------------------------------------------------
+
+def empty_state(cfg: ModelConfig, run: RunConfig, batch_loc: int,
+                max_len: int, tp: int) -> DecodeState:
+    """Zeroed decode state (also the dry-run's abstract cache shape)."""
+    L = cfg.n_layers
+    kv = ssm = xkv = None
+    stack = lambda one: jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (L,) + a.shape).copy(), one)
+    if cfg.n_heads > 0:
+        kv = stack(cache_mod.empty_kv(cfg, run, batch_loc, max_len, tp))
+    if cfg.encdec:
+        xkv = stack(cache_mod.empty_kv(cfg, run, batch_loc, max_len, tp))
+    if cfg.ssm is not None:
+        di, nh, hd, n = ssm_mod.ssm_dims(cfg, tp)
+        k = cfg.ssm.d_conv - 1
+        ssm = SSMState(
+            h=jnp.zeros((L, batch_loc, nh // tp, hd, n), jnp.float32),
+            conv_x=jnp.zeros((L, batch_loc, k, di // tp), jnp.bfloat16),
+            conv_bc=jnp.zeros((L, batch_loc, k, 2 * n), jnp.bfloat16))
+    return DecodeState(kv=kv, ssm=ssm, xkv=xkv,
+                       length=jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# global (cross-shard) view of the state, for dry-run in_shardings.
+#
+# Per-shard cache stores are semantically *sharded objects*; the global
+# arrays adopt the convention that per-shard dims are concatenated along a
+# mesh-sharded axis (flattened shard-major where batch and model coexist).
+# ---------------------------------------------------------------------------
+
+def global_state_struct(cfg: ModelConfig, run: RunConfig, global_batch: int,
+                        max_len: int, mesh_chips: Dict[str, int]):
+    """Returns (state ShapeDtypeStruct pytree, state PartitionSpec pytree).
+
+    ``mesh_chips``: {"pod": p, "data": d, "model": t}.  When the global
+    batch does not divide pod*data the batch is replicated (long_500k: B=1).
+    """
+    from jax.sharding import PartitionSpec as P
+    import numpy as np
+    tp = mesh_chips["model"]
+    nbatch = mesh_chips.get("pod", 1) * mesh_chips["data"]
+    shardable = global_batch % nbatch == 0
+    b_loc = global_batch // nbatch if shardable else global_batch
+    baxes = (tuple(a for a in ("pod", "data") if mesh_chips.get(a, 1) > 1)
+             if shardable else ())
+    bspec = (baxes if len(baxes) > 1 else (baxes[0] if baxes else None))
+
+    L = cfg.n_layers
+    f32, bf16, i32, u8, u32 = (jnp.float32, jnp.bfloat16, jnp.int32,
+                               jnp.uint8, jnp.uint32)
+    sd = jax.ShapeDtypeStruct
+
+    kv_s = kv_p = None
+    if cfg.n_heads > 0:
+        w = cache_mod.kv_width(cfg)
+        blk = run.codec.cache_block
+        nblk = cache_mod.n_blocks(cfg, run, max_len, tp)
+        n = b_loc * blk * w
+        from repro.core import packing
+        npad = packing.pad_to_lanes(n)
+        c = run.codec.esc_capacity(n)
+        k = run.codec.k
+        # flatten (batch shards x model shards) along the payload dim
+        flat_axes = tuple(a for a in (*baxes, "model"))
+        fspec = flat_axes if len(flat_axes) > 1 else flat_axes[0]
+        nshard = nbatch * tp if shardable else tp
+        if run.codec.cache:
+            kv_s = KVBlocks(
+                signman=sd((L, nblk, n * nshard), u8),
+                planes=sd((L, nblk, k, (npad // 32) * nshard), u32),
+                dict_syms=sd((L, nblk, (1 << k) * nshard), u8),
+                esc_pos=sd((L, nblk, c * nshard), i32),
+                esc_raw=sd((L, nblk, c * nshard), u8),
+                raw_blocks=None,
+                ring=sd((L, global_batch if shardable else b_loc,
+                         blk * tp, w), bf16),
+                length=sd((L,), i32))
+            kv_p = KVBlocks(
+                signman=P(None, None, fspec),
+                planes=P(None, None, None, fspec),
+                dict_syms=P(None, None, fspec),
+                esc_pos=P(None, None, fspec),
+                esc_raw=P(None, None, fspec),
+                raw_blocks=None,
+                ring=P(None, bspec, "model", None),
+                length=P(None))
+        else:
+            kv_s = KVBlocks(
+                signman=None, planes=None, dict_syms=None, esc_pos=None,
+                esc_raw=None,
+                raw_blocks=sd((L, nblk, global_batch if shardable else b_loc,
+                               blk * tp, w), bf16),
+                ring=sd((L, global_batch if shardable else b_loc,
+                         blk * tp, w), bf16),
+                length=sd((L,), i32))
+            kv_p = KVBlocks(
+                signman=None, planes=None, dict_syms=None, esc_pos=None,
+                esc_raw=None,
+                raw_blocks=P(None, None, bspec, "model", None),
+                ring=P(None, bspec, "model", None),
+                length=P(None))
+
+    ssm_s = ssm_p = None
+    if cfg.ssm is not None:
+        di, nh, hd, nst = ssm_mod.ssm_dims(cfg, tp)
+        kc = cfg.ssm.d_conv - 1
+        gb = global_batch if shardable else b_loc
+        ssm_s = SSMState(
+            h=sd((L, gb, nh, hd, nst), jnp.float32),
+            conv_x=sd((L, gb, kc, di), bf16),
+            conv_bc=sd((L, gb, kc, 2 * nst), bf16))
+        ssm_p = SSMState(
+            h=P(None, bspec, "model", None, None),
+            conv_x=P(None, bspec, None, "model"),
+            conv_bc=P(None, bspec, None, None))
+
+    xkv_s = xkv_p = None
+    if cfg.encdec:
+        xkv_s, xkv_p = kv_s, kv_p     # same geometry as the self cache
+
+    state = DecodeState(kv=kv_s, ssm=ssm_s, xkv=xkv_s,
+                        length=jax.ShapeDtypeStruct((), jnp.int32))
+    specs = DecodeState(kv=kv_p, ssm=ssm_p, xkv=xkv_p, length=P())
+    return state, specs
+
+
+# ---------------------------------------------------------------------------
+# decode block
+# ---------------------------------------------------------------------------
+
+def _moe_decode(cfg: ModelConfig, run: RunConfig, p, x: jax.Array,
+                tp: int) -> jax.Array:
+    """MoE on replicated decode tokens: local experts only, psum combine."""
+    e = cfg.moe
+    b = x.shape[0]
+    xt = x[:, 0]                                        # (B, D)
+    logits = jnp.einsum("nd,de->ne", xt, p["router"],
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, e.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    el = e.n_experts // tp
+    ti = jax.lax.axis_index("model")
+    lo = ti * el
+    y = jnp.zeros((b, cfg.d_model), jnp.float32)
+    # tokens are replicated: each shard evaluates only its experts' hits
+    for j in range(e.top_k):                            # unrolled, small
+        eid = experts[:, j]
+        local = (eid >= lo) & (eid < lo + el)
+        idx = jnp.clip(eid - lo, 0, el - 1)
+        wg = p["w_gate"][idx]                           # (B, D, F) gathered
+        wu = p["w_up"][idx]
+        wd = p["w_down"][idx]
+        h = layers.swiglu(
+            jnp.einsum("bd,bdf->bf", xt, wg,
+                       preferred_element_type=jnp.float32).astype(jnp.bfloat16),
+            jnp.einsum("bd,bdf->bf", xt, wu,
+                       preferred_element_type=jnp.float32).astype(jnp.bfloat16))
+        o = jnp.einsum("bf,bfd->bd", h, wd,
+                       preferred_element_type=jnp.float32)
+        y = y + jnp.where(local[:, None], o * gates[:, j:j + 1], 0.0)
+    if e.n_shared:
+        hs = layers.swiglu(layers.pdot(xt, p["ws_gate"]),
+                           layers.pdot(xt, p["ws_up"]))
+        y = y + jnp.einsum("nf,fd->nd", hs, p["ws_down"],
+                           preferred_element_type=jnp.float32)
+    return jax.lax.psum(y.astype(jnp.bfloat16), "model")[:, None]
+
+
+def decode_block(cfg: ModelConfig, run: RunConfig, p, x: jax.Array,
+                 kv: Optional[KVBlocks], sst: Optional[SSMState],
+                 length, spec: layers.AttnSpec, tp: int, window=None,
+                 xkv: Optional[KVBlocks] = None):
+    """One layer's decode step.  x (B,1,D) replicated; returns
+    (x', kv', sst').  ``xkv`` is the (static) cross-attention memory."""
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    partial = jnp.zeros(x.shape, jnp.float32)
+    new_kv, new_sst = kv, sst
+
+    if cfg.n_heads > 0:
+        q_full, new_vals = attention.decode_qkv(cfg, p["attn"], h, length, tp)
+        new_kv = cache_mod.append_token(cfg, run, kv, new_vals, tp)
+        aspec = spec
+        if cfg.mla is not None:
+            aspec = spec._replace(
+                scale=(cfg.mla.qk_nope_dim + cfg.mla.qk_rope_dim) ** -0.5)
+        merged = cache_mod.attend_cache(cfg, run, new_kv, q_full, aspec, tp,
+                                        window=window)
+        partial = partial + attention.decode_out(cfg, p["attn"], merged, tp)
+    if cfg.ssm is not None:
+        o, new_sst = ssm_mod.ssm_decode_step(cfg, p["ssm"], h, sst, tp)
+        partial = partial + o
+
+    out = jax.lax.psum(partial.astype(jnp.bfloat16), "model")
+    if cfg.post_norm:
+        out = layers.rms_norm(out, p["ln1b"], cfg.norm_eps)
+    x = x + out
+
+    if "xattn" in p and xkv is not None:
+        # enc-dec cross attention against the static (prefill-built) memory
+        hx = layers.rms_norm(x, p["ln_x"], cfg.norm_eps)
+        q_full = cross_decode_q(cfg, p["xattn"], hx, tp)
+        xspec = layers.AttnSpec(causal=False, softcap=None)
+        merged = cache_mod.attend_cache(cfg, run, xkv, q_full, xspec, tp)
+        xo = attention.decode_out(cfg, p["xattn"], merged, tp)
+        x = x + jax.lax.psum(xo.astype(jnp.bfloat16), "model")
+
+    if "moe" in p:
+        h2 = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + _moe_decode(cfg, run, p["moe"], h2, tp)
+    elif "mlp" in p:
+        h2 = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+        m = p["mlp"]
+        act = layers.swiglu(layers.pdot(h2, m["w_gate"]),
+                            layers.pdot(h2, m["w_up"]))
+        y = jnp.einsum("bsk,kn->bsn", act, m["w_down"],
+                       preferred_element_type=jnp.float32)
+        y = jax.lax.psum(y.astype(jnp.bfloat16), "model")
+        if cfg.post_norm:
+            y = layers.rms_norm(y, p["ln2b"], cfg.norm_eps)
+        x = x + y
+    return x, new_kv, new_sst
+
+
+def cross_decode_q(cfg: ModelConfig, p, h: jax.Array, tp: int) -> jax.Array:
+    """Cross-attention decode query: (B,1,D) -> full-head q (no rope/norm)."""
+    hd = cfg.head_dim
+    hq = cfg.padded_heads(tp)
+    hq_loc = hq // tp
+    b = h.shape[0]
+    q = layers.pdot(h, p["wq"], p.get("bq")).reshape(b, 1, hq_loc, hd) \
+        .transpose(0, 2, 1, 3)
+    return jax.lax.all_gather(q, "model", axis=1, tiled=True)
+
+
+# ---------------------------------------------------------------------------
+# decode step (full model, one token)
+# ---------------------------------------------------------------------------
+
+def decode_step(cfg: ModelConfig, run: RunConfig, params, dims,
+                state: DecodeState, tokens: jax.Array, tp: int
+                ) -> Tuple[jax.Array, DecodeState]:
+    """tokens (B_loc, 1) -> (logits (B_loc, 1, V_loc) local, new state).
+
+    This is the ``serve_step`` the decode_* dry-run shapes lower.
+    """
+    emb = lm.gathered_embed(params, dims, run)
+    # decode tokens are replicated over model: embed via vocab-shard + psum
+    x = lm.embed_tokens(cfg, run, emb, tokens, tp)       # (B,1,D)
+    spec = attention.base_attn_spec(cfg)
+    wins = attention.layer_windows(cfg)
+    wins = (jnp.asarray(wins) if wins is not None
+            else jnp.zeros((cfg.n_layers,), jnp.int32))
+    bdims = dims.get("blocks") if dims else None
+
+    def body(carry, xs):
+        xb = carry
+        p_layer, kv_l, ssm_l, xkv_l, win = xs
+        p_layer = blocks.gather_fsdp(p_layer, bdims, run)
+        xb, kv_n, ssm_n = decode_block(cfg, run, p_layer, xb, kv_l, ssm_l,
+                                       state.length, spec, tp, window=win,
+                                       xkv=xkv_l)
+        return xb, (kv_n, ssm_n)
+
+    xs = (params["blocks"], state.kv, state.ssm, state.xkv, wins)
+    x, (kv_new, ssm_new) = jax.lax.scan(body, x, xs)
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm.logits_for(cfg, run, params, dims, x)
+    return logits, DecodeState(kv=kv_new, ssm=ssm_new, xkv=state.xkv,
+                               length=state.length + 1)
+
+
+def greedy_token(cfg: ModelConfig, logits: jax.Array, tp: int) -> jax.Array:
+    """Vocab-sharded greedy argmax -> (B,1) int32 (replicated)."""
+    v_loc = logits.shape[-1]
+    off = jax.lax.axis_index("model") * v_loc
+    loc_max = logits.max(-1)
+    loc_idx = logits.argmax(-1).astype(jnp.int32) + off
+    g_max = jax.lax.pmax(loc_max, "model")
+    cand = jnp.where(loc_max >= g_max, loc_idx, jnp.int32(1 << 30))
+    return jax.lax.pmin(cand, "model")
+
+
+# ---------------------------------------------------------------------------
+# prefill (trunk forward + cache transition)
+# ---------------------------------------------------------------------------
+
+def _interleave_heads_a2a(vals: jax.Array, tp: int) -> jax.Array:
+    """(B, H_loc, S, hd) head-sharded -> (B, S/tp, H_full*hd) interleaved
+    sequence slots via one all_to_all over "model"."""
+    b, h_loc, s, hd = vals.shape
+    x = vals.transpose(0, 2, 1, 3)                  # (B, S, H_loc, hd)
+    x = x.reshape(b, s // tp, tp, h_loc, hd)        # pos = c*tp + j
+    x = jnp.moveaxis(x, 2, 0)                       # (tp, B, S/tp, H_loc, hd)
+    y = jax.lax.all_to_all(x, "model", split_axis=0, concat_axis=3,
+                           tiled=False)             # (B, S/tp, H_full?, ...)
+    # tiled=False: the tp axis is exchanged with the device axis and lands
+    # at concat_axis -> (B, S/tp, H_loc, tp, hd); heads are ordered by shard.
+    y = jnp.moveaxis(y, 3, 2)                       # (B, S/tp, tp, H_loc, hd)
+    return y.reshape(b, s // tp, tp * h_loc * hd)
+
+
+def _interleave_slice(vals: jax.Array, tp: int) -> jax.Array:
+    """(B, S, W) replicated -> this shard's interleaved slots (B, S/tp, W)."""
+    b, s, w = vals.shape
+    ti = jax.lax.axis_index("model")
+    x = vals.reshape(b, s // tp, tp, w)
+    return jnp.take(x, ti, axis=2)
+
+
+def prefill(cfg: ModelConfig, run: RunConfig, params, dims,
+            tokens: jax.Array, max_len: int, tp: int,
+            front_embeds=None, enc_embeds=None
+            ) -> Tuple[jax.Array, DecodeState]:
+    """tokens (B_loc, S) -> (last-position logits (B,1,V_loc), DecodeState).
+
+    Runs the training-style trunk (sequence-sharded, head-parallel flash)
+    and builds the decode cache INSIDE the layer scan: each layer's KV is
+    resharded to the interleaved sequence-sharded layout (one a2a) and
+    LEXI-block-compressed immediately, so peak HBM holds one layer of raw
+    KV instead of all L (the difference between ~1 GB and ~25-55 GB per
+    chip at 32k prefill — see EXPERIMENTS §Dry-run memory note).
+    """
+    b, s = tokens.shape
+    state = empty_state(cfg, run, b, max_len, tp)
+    mode = attention.kv_mode(cfg, tp) if cfg.n_heads > 0 else None
+
+    def xform(cache, store):
+        out = {}
+        if "kv" in cache and cache["kv"] is not None:
+            if cfg.mla is not None:
+                vals = _interleave_slice(cache["kv"], tp)
+            else:
+                k_l, v_l = cache["kv"]
+                if mode == "col":
+                    kv2 = jnp.stack([k_l, v_l], axis=2)
+                    kv2 = kv2.reshape(b, -1, s, cfg.head_dim)
+                    vals = _interleave_heads_a2a(kv2, tp)
+                else:
+                    kv2 = jnp.stack([k_l, v_l], axis=3)
+                    kv2 = kv2.transpose(0, 2, 1, 3, 4).reshape(b, s, -1)
+                    vals = _interleave_slice(kv2, tp)
+            out["kv"] = cache_mod.fill_from_prefill(
+                cfg, run, store["kv"], vals, s, tp)
+        if "xkv" in cache and cache["xkv"] is not None:
+            k_l, v_l = cache["xkv"]
+            sm = k_l.shape[2] * (tp if mode == "col" else 1)
+            if mode == "col":
+                sm = k_l.shape[2]
+                kv2 = jnp.stack([k_l, v_l], axis=2)
+                kv2 = kv2.reshape(b, -1, sm, cfg.head_dim)
+                vals = _interleave_heads_a2a(kv2, tp)
+            else:
+                sm = k_l.shape[2]
+                kv2 = jnp.stack([k_l, v_l], axis=3)
+                kv2 = kv2.transpose(0, 2, 1, 3, 4).reshape(b, sm, -1)
+                vals = _interleave_slice(kv2, tp)
+            out["xkv"] = cache_mod.fill_from_prefill(
+                cfg, run, store["xkv"], vals, sm, tp)
+        if "ssm" in cache and cache["ssm"] is not None:
+            out["ssm"] = cache["ssm"]
+        return out
+
+    stores = {}
+    if state.kv is not None:
+        stores["kv"] = state.kv
+    if state.xkv is not None:
+        stores["xkv"] = state.xkv
+    x, caches, _ = lm.lm_forward(cfg, run, params, tokens, tp, dims=dims,
+                                 front_embeds=front_embeds,
+                                 enc_embeds=enc_embeds, want_cache=True,
+                                 cache_stores=stores if stores else None,
+                                 cache_xform=xform)
+    # last-position logits: the contiguous seq layout puts the global last
+    # position on shard tp-1; broadcast it with one tiny psum.
+    xl = x[:, -1:, :]
+    xl = jax.lax.psum(jnp.where(jax.lax.axis_index("model") == tp - 1,
+                                xl.astype(jnp.float32), 0.0), "model")
+    logits = lm.logits_for(cfg, run, params, dims, xl.astype(jnp.bfloat16))
+
+    kv_new = caches.get("kv") if caches else None
+    xkv_new = caches.get("xkv") if caches else None
+    ssm_new = caches.get("ssm") if caches else None
+    if kv_new is None:
+        kv_new = state.kv
+    if xkv_new is None:
+        xkv_new = state.xkv
+    if ssm_new is None:
+        ssm_new = state.ssm
+    return logits, DecodeState(kv=kv_new, ssm=ssm_new, xkv=xkv_new,
+                               length=jnp.asarray(s, jnp.int32))

@@ -1,0 +1,2 @@
+"""Sharding utilities: optional pipeline parallelism over ppermute."""
+from . import pipeline  # noqa: F401

@@ -1,0 +1,2 @@
+"""Training substrate: optimizer, train step, checkpointing, fault tolerance."""
+from . import optimizer, train_step  # noqa: F401

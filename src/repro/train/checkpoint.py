@@ -1,0 +1,153 @@
+"""Fault-tolerant checkpointing: sharded, atomic, LEXI-compressed,
+mesh-shape independent.
+
+Layout (one directory per step):
+
+    <dir>/step_000123/
+        MANIFEST.json        tree structure, shapes, dtypes, per-leaf sha256,
+                             codec flags, step metadata
+        leaf_00000.lexi      LEXI-H container (bf16 leaves: ~1.5x smaller,
+                             bit-exact — the paper's offline weight path)
+        leaf_00001.npy       raw numpy (f32/int leaves)
+    <dir>/LATEST             text file: last complete step directory name
+
+Atomicity: written to ``<dir>/.tmp_step_x``, fsync'd, then renamed; LATEST
+is updated last, so a crash mid-write never corrupts the restore point.
+Restore targets any mesh: leaves are stored as full logical arrays and
+resharded by the first jitted step (host memory bounds this to example-scale
+models; production-scale sharded-save is a straight extension, noted in
+DESIGN).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import shutil
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+
+from repro.core import bitstream
+
+
+def _leaf_paths(tree) -> Tuple[Any, list]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return treedef, leaves
+
+
+def save(ckpt_dir: str, step: int, state: Any, *, compress: bool = True,
+         extra: Optional[Dict] = None) -> str:
+    """Atomically write a checkpoint; returns the final directory."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    name = f"step_{step:08d}"
+    tmp = os.path.join(ckpt_dir, f".tmp_{name}")
+    final = os.path.join(ckpt_dir, name)
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    treedef, leaves = _leaf_paths(state)
+    manifest: Dict[str, Any] = {
+        "step": step, "treedef": str(treedef), "n_leaves": len(leaves),
+        "leaves": [], "extra": extra or {},
+    }
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        entry: Dict[str, Any] = {"shape": list(arr.shape),
+                                 "dtype": str(arr.dtype)}
+        if compress and arr.dtype == ml_dtypes.bfloat16 and arr.size >= 4096:
+            blob = bitstream.compress_bf16(arr.view(np.uint16))
+            fn = f"leaf_{i:05d}.lexi"
+            entry["codec"] = "lexi-h"
+            entry["stored_bytes"] = len(blob)
+        elif compress and arr.dtype == np.float32 and arr.size >= 4096:
+            # beyond-paper: f32 optimizer states get exponent-only coding too
+            blob = bitstream.compress_f32(arr)
+            fn = f"leaf_{i:05d}.lexi32"
+            entry["codec"] = "lexi-f32"
+            entry["stored_bytes"] = len(blob)
+        else:
+            blob = arr.tobytes()
+            fn = f"leaf_{i:05d}.npy"
+            entry["codec"] = "raw"
+            entry["stored_bytes"] = len(blob)
+        entry["file"] = fn
+        entry["sha256"] = hashlib.sha256(blob).hexdigest()
+        with open(os.path.join(tmp, fn), "wb") as fh:
+            fh.write(blob)
+            fh.flush()
+            os.fsync(fh.fileno())
+        manifest["leaves"].append(entry)
+    with open(os.path.join(tmp, "MANIFEST.json"), "w") as fh:
+        json.dump(manifest, fh)
+        fh.flush()
+        os.fsync(fh.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    with open(os.path.join(ckpt_dir, "LATEST"), "w") as fh:
+        fh.write(name)
+        fh.flush()
+        os.fsync(fh.fileno())
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    p = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(p):
+        return None
+    name = open(p).read().strip()
+    if not os.path.exists(os.path.join(ckpt_dir, name, "MANIFEST.json")):
+        return None
+    return int(name.split("_")[1])
+
+
+def restore(ckpt_dir: str, like: Any, step: Optional[int] = None) -> Any:
+    """Load into the structure of ``like`` (shapes must match; any mesh)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    manifest = json.load(open(os.path.join(d, "MANIFEST.json")))
+    treedef, like_leaves = _leaf_paths(like)
+    assert manifest["n_leaves"] == len(like_leaves), "tree mismatch"
+    out = []
+    for entry, ref in zip(manifest["leaves"], like_leaves):
+        blob = open(os.path.join(d, entry["file"]), "rb").read()
+        if hashlib.sha256(blob).hexdigest() != entry["sha256"]:
+            raise IOError(f"checksum mismatch for {entry['file']}")
+        if entry["codec"] == "lexi-h":
+            u16 = bitstream.decompress_bf16(blob)
+            arr = u16.view(ml_dtypes.bfloat16).reshape(entry["shape"])
+        elif entry["codec"] == "lexi-f32":
+            arr = bitstream.decompress_f32(blob).reshape(entry["shape"])
+        else:
+            arr = np.frombuffer(blob, dtype=np.dtype(entry["dtype"])
+                                ).reshape(entry["shape"])
+        assert tuple(arr.shape) == tuple(ref.shape), \
+            (entry["file"], arr.shape, ref.shape)
+        out.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def stored_size(ckpt_dir: str, step: int) -> Dict[str, int]:
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    manifest = json.load(open(os.path.join(d, "MANIFEST.json")))
+    def _raw_itemsize(e):
+        if e["codec"] == "lexi-h":
+            return 2
+        if e["codec"] == "lexi-f32":
+            return 4
+        return np.dtype(e["dtype"]).itemsize
+
+    raw = sum(int(np.prod(e["shape"])) * _raw_itemsize(e)
+              for e in manifest["leaves"])
+    stored = sum(e["stored_bytes"] for e in manifest["leaves"])
+    return {"raw_bytes": raw, "stored_bytes": stored}

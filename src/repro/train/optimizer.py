@@ -1,0 +1,139 @@
+"""AdamW with f32 master weights, gradient sync, global-norm clipping and a
+warmup+cosine schedule — all pure JAX, sharding-aware (runs inside shard_map).
+
+Memory layout: master/m/v are stored like the (sharded) params, so FSDP
+params get ZeRO-3-style optimizer sharding for free; replicated-over-data
+params still get their optimizer state data-sharded is NOT done here (the
+big archs use FSDP anyway, which covers the memory-critical leaves).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import RunConfig
+from repro.core import collectives as cl
+
+
+class OptState(NamedTuple):
+    step: jax.Array          # () i32
+    master: Any              # f32 copy of params (same sharding)
+    m: Any
+    v: Any
+
+
+def init_opt_state(params: Any) -> OptState:
+    f32 = lambda leaf: leaf.astype(jnp.float32)
+    zeros = lambda leaf: jnp.zeros(leaf.shape, jnp.float32)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    master=jax.tree_util.tree_map(f32, params),
+                    m=jax.tree_util.tree_map(zeros, params),
+                    v=jax.tree_util.tree_map(zeros, params))
+
+
+def _spec_axes(spec) -> Tuple[str, ...]:
+    names = []
+    for entry in tuple(spec):
+        if entry is None:
+            continue
+        if isinstance(entry, tuple):
+            names.extend(entry)
+        else:
+            names.append(entry)
+    return tuple(names)
+
+
+def sync_grads(grads: Any, pspecs: Any, mesh_axes: Sequence[str],
+               run: RunConfig) -> Any:
+    """psum each leaf over the mesh axes its sharding spec does NOT cover.
+
+    This is the whole manual-SPMD gradient story: sharded dims were reduced
+    by the AD transposes of the forward collectives (e.g. the FSDP
+    all-gather transposes to a psum_scatter over "data"), and replicated
+    dims still hold per-shard partials.  The AG half of each psum is
+    LEXI-compressed when codec.grads is on (the beyond-paper trick).
+    """
+
+    def one(g, spec):
+        covered = set(_spec_axes(spec))
+        axes = tuple(a for a in mesh_axes if a not in covered)
+        if not axes:
+            return g
+        if run.codec.enabled and run.codec.grads:
+            return cl.compressed_psum(g, axes, run.codec)
+        return jax.lax.psum(g, axes)
+
+    return jax.tree_util.tree_map(one, grads, pspecs)
+
+
+def global_norm(grads: Any, pspecs: Any, mesh_axes: Sequence[str]
+                ) -> jax.Array:
+    """True global L2 norm of a synced (replication-consistent) grad tree.
+
+    Sharded leaves need a cross-shard sum of squares; replicated leaves must
+    not be double counted — each leaf's local sum is psum'd over its
+    *sharded* axes only.
+    """
+    total = jnp.zeros((), jnp.float32)
+    gl = jax.tree_util.tree_leaves(grads)
+    sl = jax.tree_util.tree_leaves(pspecs, is_leaf=lambda x: isinstance(x, P))
+    for g, s in zip(gl, sl):
+        loc = jnp.sum(g.astype(jnp.float32) ** 2)
+        axes = _spec_axes(s)
+        if axes:
+            loc = jax.lax.psum(loc, tuple(axes))
+        total = total + loc
+    return jnp.sqrt(total)
+
+
+def lr_at(run: RunConfig, step: jax.Array, total_steps: int = 10_000
+          ) -> jax.Array:
+    warm = jnp.minimum(step / max(run.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - run.warmup_steps)
+                 / max(total_steps - run.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return run.lr * warm * (0.1 + 0.9 * cos)
+
+
+NO_DECAY_MIN_NDIM = 2   # norms/biases (ndim < 2) skip weight decay
+
+
+def adamw_update(run: RunConfig, params: Any, grads: Any, opt: OptState,
+                 pspecs: Any, mesh_axes: Sequence[str],
+                 total_steps: int = 10_000):
+    """One AdamW step.  Returns (new_params bf16, new OptState, metrics)."""
+    gnorm = global_norm(grads, pspecs, mesh_axes)
+    scale = jnp.minimum(1.0, run.grad_clip / jnp.maximum(gnorm, 1e-9))
+    step = opt.step + 1
+    lr = lr_at(run, step, total_steps)
+    b1, b2, eps, wd = run.beta1, run.beta2, run.eps, run.weight_decay
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def one(p_master, g, m, v):
+        gf = g.astype(jnp.float32) * scale
+        m_new = b1 * m + (1 - b1) * gf
+        v_new = b2 * v + (1 - b2) * gf * gf
+        upd = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+        if p_master.ndim >= NO_DECAY_MIN_NDIM:
+            upd = upd + wd * p_master
+        return p_master - lr * upd, m_new, v_new
+
+    flat_master, td = jax.tree_util.tree_flatten(opt.master)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(opt.m)
+    flat_v = jax.tree_util.tree_leaves(opt.v)
+    out = [one(pm, g, m, v) for pm, g, m, v
+           in zip(flat_master, flat_g, flat_m, flat_v)]
+    master = jax.tree_util.tree_unflatten(td, [o[0] for o in out])
+    m = jax.tree_util.tree_unflatten(td, [o[1] for o in out])
+    v = jax.tree_util.tree_unflatten(td, [o[2] for o in out])
+    new_params = jax.tree_util.tree_map(
+        lambda pm, old: pm.astype(old.dtype), master, params)
+    return new_params, OptState(step=step, master=master, m=m, v=v), {
+        "grad_norm": gnorm, "lr": lr, "clip_scale": scale}

@@ -1,0 +1,82 @@
+"""The jitted training step (manual-SPMD) + TrainState plumbing."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import batch_axes
+from repro.configs.base import MeshConfig, ModelConfig, RunConfig
+from repro.core import collectives as cl
+from repro.models import lm, params as PM
+from . import optimizer as opt_mod
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: opt_mod.OptState
+
+
+def batch_pspecs(cfg: ModelConfig, mesh: MeshConfig) -> Dict[str, P]:
+    ba = batch_axes(mesh)
+    bspec = ba[0] if len(ba) == 1 else tuple(ba)
+    out = {"tokens": P(bspec), "labels": P(bspec)}
+    if cfg.frontend == "vision_stub":
+        out["front_embeds"] = P(bspec)
+    if cfg.encdec:
+        out["enc_embeds"] = P(bspec)
+    return out
+
+
+def state_pspecs(table) -> Any:
+    pspecs = PM.param_pspecs(table)
+    return TrainState(params=pspecs,
+                      opt=opt_mod.OptState(step=P(), master=pspecs,
+                                           m=pspecs, v=pspecs))
+
+
+def make_train_step(cfg: ModelConfig, run: RunConfig, mesh_cfg: MeshConfig,
+                    table, total_steps: int = 10_000):
+    """Returns train_step(state, batch) -> (state, metrics) — call it inside
+    shard_map (launch.train / launch.dryrun wrap it)."""
+    dims = lm.lm_fsdp_dims(table)
+    pspecs = PM.param_pspecs(table)
+    tp = mesh_cfg.model
+    baxes = batch_axes(mesh_cfg)
+    mesh_axes = tuple(baxes) + ("model",)
+
+    def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        def loss_fn(p):
+            return lm.train_loss(cfg, run, p, batch, tp, baxes, dims=dims)
+
+        local_loss, grads = jax.value_and_grad(loss_fn)(state.params)
+        # global mean loss: every shard's local contribution summed once
+        loss = jax.lax.psum(local_loss, mesh_axes)
+        grads = opt_mod.sync_grads(grads, pspecs, mesh_axes, run)
+        new_params, new_opt, metrics = opt_mod.adamw_update(
+            run, state.params, grads, state.opt, pspecs, mesh_axes,
+            total_steps)
+        metrics = dict(metrics, loss=loss)
+        return TrainState(params=new_params, opt=new_opt), metrics
+
+    return train_step
+
+
+def make_shard_mapped_step(cfg: ModelConfig, run: RunConfig,
+                           mesh_cfg: MeshConfig, table, mesh,
+                           total_steps: int = 10_000):
+    """jit(shard_map(train_step)) with all the specs filled in."""
+    step = make_train_step(cfg, run, mesh_cfg, table, total_steps)
+    sspecs = state_pspecs(table)
+    bspecs = batch_pspecs(cfg, mesh_cfg)
+    mspecs = {"loss": P(), "grad_norm": P(), "lr": P(), "clip_scale": P()}
+    return jax.jit(cl.shmap(step, mesh, (sspecs, bspecs), (sspecs, mspecs)))
+
+
+def init_state(table, seed: int = 0) -> TrainState:
+    params = PM.init_params(table, jax.random.key(seed))
+    return TrainState(params=params, opt=opt_mod.init_opt_state(params))

@@ -1,0 +1,41 @@
+"""Test harness config.
+
+The SPMD tests need a multi-device CPU topology; 8 fake devices keeps the
+suite fast.  (The dry-run's 512-device setting stays confined to
+``repro.launch.dryrun`` per the assignment — never set it here.)
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402  (after XLA_FLAGS)
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def mesh24():
+    return jax.make_mesh((2, 4), ("data", "model"))
+
+
+@pytest.fixture(scope="session")
+def mesh11():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+@pytest.fixture(scope="session")
+def mesh8():
+    return jax.make_mesh((8,), ("model",))
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)
+
+
+def normal_bf16(rng, shape, std=0.05):
+    import jax.numpy as jnp
+    return jax.numpy.asarray(rng.normal(0, std, shape), jnp.bfloat16)

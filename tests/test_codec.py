@@ -1,0 +1,250 @@
+"""Core LEXI codec tests: LEXI-H (Huffman) and LEXI-FW (fixed-width),
+including hypothesis property tests on the system's losslessness invariant.
+"""
+
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+import pytest
+
+from repro.core import (baselines, bitstream, codec, entropy, fixed, huffman,
+                        packing)
+
+RNG = np.random.default_rng(0)
+
+
+def _exp_stream(n=20_000, std=0.05):
+    x = RNG.normal(0, std, n).astype(np.float32)
+    u16 = entropy.to_bf16_u16(x)
+    return entropy.split_fields(u16)[1]
+
+
+# ---------------------------------------------------------------------------
+# LEXI-H: canonical length-limited Huffman
+# ---------------------------------------------------------------------------
+
+class TestHuffman:
+    def test_kraft_equality(self):
+        hist = np.bincount(_exp_stream(), minlength=256).astype(float)
+        lengths = huffman.length_limited_lengths(hist)
+        assert abs(sum(2.0 ** -l for l in lengths.values()) - 1.0) < 1e-9
+
+    def test_optimality_vs_entropy(self):
+        exp = _exp_stream()
+        hist = np.bincount(exp, minlength=256).astype(float)
+        h = entropy.shannon_entropy(hist)
+        book = huffman.build_codebook(hist)
+        bits = huffman.code_cost_bits(hist, book) / hist.sum()
+        assert h <= bits <= h + 1.0 + 1e-6  # within 1 bit of entropy
+
+    def test_length_limit_respected(self):
+        # adversarial: exponential frequencies force deep trees
+        freqs = np.zeros(256)
+        freqs[:30] = [2.0 ** i for i in range(30)]
+        book = huffman.build_codebook(freqs, max_len=12)
+        assert int(book.lengths.max()) <= 12
+
+    def test_roundtrip_basic(self):
+        exp = _exp_stream(5000)
+        stm = bitstream.encode(exp)
+        assert np.array_equal(bitstream.decode(stm), exp)
+
+    def test_roundtrip_with_escapes(self):
+        exp = _exp_stream(5000).copy()
+        exp[::37] = RNG.integers(0, 256, exp[::37].shape).astype(np.uint8)
+        book = huffman.build_codebook(
+            np.bincount(exp[:512], minlength=256).astype(float))
+        stm = bitstream.encode(exp, book)
+        assert np.array_equal(bitstream.decode(stm), exp)
+
+    def test_codebook_serialization(self):
+        exp = _exp_stream(2000)
+        stm = bitstream.encode(exp)
+        blob = bitstream.serialize_codebook(stm.book)
+        book2, _ = bitstream.deserialize_codebook(blob)
+        assert np.array_equal(book2.symbols, stm.book.symbols)
+        assert np.array_equal(book2.enc_code, stm.book.enc_code)
+
+    def test_container_roundtrip(self):
+        x = RNG.normal(0, 0.02, 4096).astype(np.float32)
+        u16 = entropy.to_bf16_u16(x)
+        blob = bitstream.compress_bf16(u16)
+        assert np.array_equal(bitstream.decompress_bf16(blob), u16)
+        assert len(blob) < u16.nbytes  # actually compresses
+
+    @hypothesis.given(hnp.arrays(np.uint8, st.integers(1, 400)))
+    @hypothesis.settings(max_examples=30, deadline=None)
+    def test_property_any_bytes_roundtrip(self, exp):
+        """Losslessness holds for ARBITRARY exponent streams (escapes)."""
+        stm = bitstream.encode(exp)
+        assert np.array_equal(bitstream.decode(stm), exp)
+
+    def test_cr_matches_paper(self):
+        """Table 2: LEXI ≈ 3.1x on bell-shaped weight exponents."""
+        cr = huffman.compression_ratio(_exp_stream(200_000))
+        assert 2.8 <= cr <= 3.5
+
+
+# ---------------------------------------------------------------------------
+# baselines (Table 2 comparison codecs)
+# ---------------------------------------------------------------------------
+
+class TestBaselines:
+    def test_rle_expands_on_weights(self):
+        assert baselines.rle_cr(_exp_stream(100_000)) < 1.0  # paper: 0.64x
+
+    def test_rle_compresses_runs(self):
+        assert baselines.rle_cr(np.full(1000, 7, np.uint8)) > 50
+
+    def test_bdi_in_paper_band(self):
+        cr = baselines.bdi_cr(_exp_stream(200_000))
+        assert 2.0 <= cr <= 2.6  # paper: 2.36-2.43x
+
+    def test_ordering_matches_table2(self):
+        exp = _exp_stream(100_000)
+        rle = baselines.rle_cr(exp)
+        bdi = baselines.bdi_cr(exp)
+        lexi = huffman.compression_ratio(exp)
+        assert rle < 1.0 < bdi < lexi
+
+
+# ---------------------------------------------------------------------------
+# bit-plane packing
+# ---------------------------------------------------------------------------
+
+class TestPacking:
+    @pytest.mark.parametrize("k", [1, 3, 5, 6, 8])
+    def test_roundtrip(self, k):
+        codes = jnp.asarray(RNG.integers(0, 1 << k, 32 * 40), jnp.uint32)
+        planes = packing.bitplane_pack(codes, k)
+        assert planes.shape == (k, 40)
+        assert jnp.array_equal(packing.bitplane_unpack(planes, k), codes)
+
+    def test_batched(self):
+        codes = jnp.asarray(RNG.integers(0, 32, (3, 64)), jnp.uint32)
+        planes = packing.bitplane_pack(codes, 5)
+        assert planes.shape == (3, 5, 2)
+        assert jnp.array_equal(packing.bitplane_unpack(planes, 5), codes)
+
+
+# ---------------------------------------------------------------------------
+# LEXI-FW (deployment codec)
+# ---------------------------------------------------------------------------
+
+class TestFixedCodec:
+    @pytest.mark.parametrize("k", [4, 5, 6])
+    @pytest.mark.parametrize("shape", [(1000,), (33, 77), (4, 5, 129)])
+    def test_roundtrip_shapes(self, k, shape):
+        x = jnp.asarray(RNG.normal(0, 0.3, shape), jnp.bfloat16)
+        ct = fixed.compress(x, k=k)
+        xr = fixed.decompress(ct)
+        assert xr.shape == x.shape
+        assert jnp.array_equal(
+            jax.lax.bitcast_convert_type(xr, jnp.uint16),
+            jax.lax.bitcast_convert_type(x, jnp.uint16))
+
+    def test_special_values(self):
+        vals = [0.0, -0.0, 1e-38, -1e38, 1e38, float("inf"), 1.5, -2.25]
+        x = jnp.asarray(np.array(vals * 16, np.float32)).astype(jnp.bfloat16)
+        ct = fixed.compress(x)
+        assert jnp.array_equal(
+            jax.lax.bitcast_convert_type(fixed.decompress(ct), jnp.uint16),
+            jax.lax.bitcast_convert_type(x, jnp.uint16))
+
+    def test_escape_overflow_detected(self):
+        # > 2^k-1 distinct exponents and tiny escape capacity
+        x = jnp.asarray((2.0 ** np.arange(-60, 60, 0.5)), jnp.bfloat16)
+        ct = fixed.compress(x, k=4, esc_capacity=8)
+        assert int(ct.n_escapes) > 8  # overflow is *reported*
+
+    @hypothesis.given(hnp.arrays(np.uint16, st.integers(1, 300)))
+    @hypothesis.settings(max_examples=40, deadline=None)
+    def test_property_lossless_with_capacity(self, bits):
+        """With sufficient escape capacity the codec round-trips ARBITRARY
+        bf16 bit patterns exactly — including ±0, subnormals, ±inf and NaN
+        payloads (the codec never interprets the value)."""
+        xj = jax.lax.bitcast_convert_type(jnp.asarray(bits), jnp.bfloat16)
+        ct = fixed.compress(xj, k=4, esc_capacity=bits.size + 8)
+        xr = fixed.decompress(ct)
+        assert jnp.array_equal(
+            jax.lax.bitcast_convert_type(xr, jnp.uint16),
+            jax.lax.bitcast_convert_type(xj, jnp.uint16))
+
+    def test_wire_ratio(self):
+        x = jnp.asarray(RNG.normal(0, 1, 100_000), jnp.bfloat16)
+        ct = fixed.compress(x)
+        assert 1.15 <= ct.ratio() <= 1.35  # k=5 => ~1.2x
+
+    def test_compress_jits_and_vmaps(self):
+        x = jnp.asarray(RNG.normal(0, 1, (4, 2048)), jnp.bfloat16)
+        cts = jax.vmap(lambda v: fixed.compress(v, k=5))(x)
+        xr = jax.vmap(fixed.decompress)(cts)
+        assert jnp.array_equal(
+            jax.lax.bitcast_convert_type(xr, jnp.uint16),
+            jax.lax.bitcast_convert_type(x, jnp.uint16))
+
+
+# ---------------------------------------------------------------------------
+# profiling / Fig-1 claims
+# ---------------------------------------------------------------------------
+
+class TestEntropyProfile:
+    def test_fig1_claims(self):
+        st_ = entropy.profile_exponents(RNG.normal(0, 0.02, 500_000))
+        assert st_.exp_entropy_bits < 3.0          # paper: < 3 bits
+        assert st_.distinct_exponents < 32         # paper: < 32 values
+        assert st_.man_entropy_bits > 6.5          # mantissa incompressible
+        assert st_.top32_coverage > 0.9999
+        assert 2.8 < st_.exp_cr < 3.5              # ~3.1x
+        assert 1.4 < st_.overall_cr < 1.6          # ~1.5x whole-value
+
+    def test_jnp_field_helpers_match_numpy(self):
+        x = RNG.normal(0, 0.1, 4096).astype(np.float32)
+        u16 = entropy.to_bf16_u16(x)
+        xj = jnp.asarray(x).astype(jnp.bfloat16)
+        u16j = entropy.jnp_to_u16(xj)
+        assert np.array_equal(np.asarray(u16j), u16)
+        hist = entropy.jnp_exponent_histogram(
+            ((u16j >> 7) & 0xFF).astype(jnp.uint8))
+        assert np.array_equal(np.asarray(hist),
+                              entropy.exponent_histogram(
+                                  entropy.split_fields(u16)[1]).astype(int))
+
+
+class TestLexiF32:
+    """Beyond-paper: exponent-only coding applied to float32 (checkpointed
+    optimizer states)."""
+
+    @pytest.mark.parametrize("gen", ["normal", "tiny", "squared"])
+    def test_roundtrip_bit_exact(self, gen):
+        rng = np.random.default_rng(3)
+        x = {"normal": rng.normal(0, 0.02, 50_000),
+             "tiny": rng.normal(0, 1e-5, 50_000),
+             "squared": rng.normal(0, 1e-2, 50_000) ** 2}[gen]
+        x = x.astype(np.float32)
+        blob = bitstream.compress_f32(x)
+        back = bitstream.decompress_f32(blob)
+        assert np.array_equal(back.view(np.uint32), x.view(np.uint32))
+        assert len(blob) < x.nbytes          # actually compresses
+
+    @hypothesis.given(hnp.arrays(np.uint32, st.integers(1, 200)))
+    @hypothesis.settings(max_examples=25, deadline=None)
+    def test_property_any_bits(self, bits):
+        x = bits.view(np.float32)
+        back = bitstream.decompress_f32(bitstream.compress_f32(x))
+        assert np.array_equal(back.view(np.uint32), bits)
+
+    def test_checkpoint_integration(self, tmp_path):
+        import jax
+        from repro.train import checkpoint as ckpt
+        state = {"w": jnp.asarray(np.random.default_rng(0).normal(
+            0, 0.02, (128, 64)).astype(np.float32))}
+        ckpt.save(str(tmp_path), 1, state)
+        sz = ckpt.stored_size(str(tmp_path), 1)
+        assert sz["stored_bytes"] < sz["raw_bytes"] * 0.9
+        back = ckpt.restore(str(tmp_path), state)
+        assert np.array_equal(np.asarray(back["w"]), np.asarray(state["w"]))

@@ -1,0 +1,90 @@
+"""Hardware-model tests: M-lane cache, staged LUT decoder, area table and
+the Simba NoC simulator land in the paper's reported bands."""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import bitstream, codec, entropy
+from repro.hw import area, lanecache, lut_decoder, noc
+
+RNG = np.random.default_rng(0)
+
+
+def exp_stream(n=100_000):
+    x = RNG.normal(0, 0.05, n).astype(np.float32)
+    return entropy.split_fields(entropy.to_bf16_u16(x))[1]
+
+
+class TestLaneCache:
+    def test_fig4_hit_rate(self):
+        exp = exp_stream(20_000)
+        hr = {d: lanecache.simulate_lanes(exp, 10, d).hit_rate
+              for d in (2, 4, 8, 16)}
+        assert hr[8] > 0.90                    # paper: >90 % at depth 8
+        assert hr[2] < hr[4] < hr[8] < hr[16]  # monotone in depth
+
+    def test_fig5_latency_points(self):
+        exp = exp_stream()
+        l_small = lanecache.codebook_latency_cycles(exp, 1, 4)
+        l_mid = lanecache.codebook_latency_cycles(exp, 10, 8)
+        l_big = lanecache.codebook_latency_cycles(exp, 32, 16)
+        assert 600 <= l_small <= 1100          # paper: 788 ns
+        assert 40 <= l_mid <= 80               # paper: ~55 ns
+        assert 10 <= l_big <= 25               # paper: ~17 ns
+        assert lanecache.cache_size_bytes(10, 8) == 160  # 0.625 KiB/4
+
+    def test_pipeline_constant(self):
+        assert lanecache.PIPELINE_CYCLES == 78  # 15 + 31 + 32
+
+
+class TestLutDecoder:
+    def test_staged_equals_canonical(self):
+        exp = exp_stream(4000).copy()
+        exp[::101] = RNG.integers(0, 256, exp[::101].shape)  # force escapes
+        stm = bitstream.encode(exp)
+        tr = lut_decoder.decode_staged(stm)
+        assert np.array_equal(tr.symbols, exp)
+
+    def test_most_resolve_stage1(self):
+        stm = bitstream.encode(exp_stream(4000))
+        tr = lut_decoder.decode_staged(stm)
+        assert tr.stage_hits[0] / sum(tr.stage_hits) > 0.95
+
+    def test_fig6_area_points(self):
+        assert abs(lut_decoder.decoder_area_um2((8, 16, 24, 32)) - 98.5) < 0.1
+        assert abs(lut_decoder.decoder_area_um2((32,)) - 157.6) < 0.1
+
+
+class TestArea:
+    def test_table4_totals(self):
+        la = area.LexiArea()
+        assert abs(la.total_um2 - 14995.2) < 1.0
+        assert abs(la.total_mw - 45.43) < 0.1
+        assert abs(la.total_um2_16nm - 5452.8) < 1.0
+        assert abs(la.chiplet_overhead - 0.0009) < 2e-4  # 0.09 %
+
+
+class TestNoC:
+    def test_paper_bands(self):
+        x = RNG.normal(0, 0.05, 300_000).astype(np.float32)
+        cr = codec.overall_bf16_ratio(codec.measure_crs(x)["lexi"])
+        crs = {"weights": cr, "activations": cr, "cache": cr}
+        for name in ("jamba-tiny-dev", "zamba2-1.2b", "qwen1.5-1.8b"):
+            res = noc.simulate(get_config(name), in_tokens=1024,
+                               out_tokens=512, crs=crs)
+            u, l = res["uncompressed"], res["lexi"]
+            comm_red = 1 - l.comm_ms / u.comm_ms
+            e2e_red = 1 - l.e2e_ms / u.e2e_ms
+            assert 0.30 <= comm_red <= 0.48, name   # paper: 33-45 %
+            assert 0.28 <= e2e_red <= 0.40, name    # paper: 30-35 %
+            assert u.comm_ms / u.e2e_ms > 0.65, name  # comm-dominated
+
+    def test_weights_only_between(self):
+        x = RNG.normal(0, 0.05, 100_000).astype(np.float32)
+        cr = codec.overall_bf16_ratio(codec.measure_crs(x)["lexi"])
+        crs = {"weights": cr, "activations": cr, "cache": cr}
+        res = noc.simulate(get_config("qwen1.5-1.8b"), in_tokens=1024,
+                           out_tokens=512, crs=crs)
+        assert (res["lexi"].comm_ms < res["weights_only"].comm_ms
+                < res["uncompressed"].comm_ms)

@@ -1,0 +1,52 @@
+"""Optional pipeline-parallel feature: staged execution == sequential."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import collectives as cl
+from repro.core.collectives import CodecConfig
+from repro.sharding import pipeline as pp
+
+
+@pytest.fixture(scope="module")
+def mesh_stage():
+    return jax.make_mesh((4,), ("stage",))
+
+
+def test_pipeline_matches_sequential(mesh_stage):
+    rng = np.random.default_rng(0)
+    # 4 stages, each multiplies by its own matrix
+    ws = jnp.asarray(rng.normal(0, 0.5, (4, 16, 16)), jnp.bfloat16)
+    x = jnp.asarray(rng.normal(0, 1, (8, 4, 16)), jnp.bfloat16)  # 8 microb.
+
+    def stage_fn(w, v):
+        return jnp.einsum("bd,dk->bk", v, w[0]).astype(jnp.bfloat16)
+
+    def piped(w, v):
+        return pp.pipeline_forward(stage_fn, w, v, axis="stage",
+                                   codec=CodecConfig())
+
+    out = jax.jit(cl.shmap(piped, mesh_stage,
+                           (P("stage"), P(None)), P(None)))(ws, x)
+    # reference: sequential through all 4 stages
+    ref = x
+    for s in range(4):
+        ref = jnp.einsum("mbd,dk->mbk", ref, ws[s]).astype(jnp.bfloat16)
+    # pipeline output is valid on the last stage; out_specs P(None) takes
+    # shard 0's copy — so compare only where the last stage banked results.
+    # Instead re-run with out spec selecting the last stage via psum trick:
+    def piped_last(w, v):
+        y = pp.pipeline_forward(stage_fn, w, v, axis="stage",
+                                codec=CodecConfig())
+        sidx = jax.lax.axis_index("stage")
+        return jax.lax.psum(jnp.where(sidx == 3, y.astype(jnp.float32), 0.0),
+                            "stage")
+
+    out = jax.jit(cl.shmap(piped_last, mesh_stage,
+                           (P("stage"), P(None)), P(None)))(ws, x)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref, np.float32), rtol=0.05,
+                               atol=0.05)

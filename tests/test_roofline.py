@@ -1,0 +1,141 @@
+"""Roofline accounting tests: the jaxpr walker must count scan bodies by
+trip count and collectives at per-shard operand bytes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import collectives as cl
+from repro.roofline import analysis as RA
+
+
+class TestJaxprWalker:
+    def test_dot_flops(self):
+        def f(a, b):
+            return a @ b
+
+        j = jax.make_jaxpr(f)(jnp.zeros((8, 16)), jnp.zeros((16, 32)))
+        st = RA.analyze_jaxpr(j)
+        assert st.flops == 2 * 8 * 16 * 32
+
+    def test_scan_multiplies(self):
+        w = jnp.zeros((4, 16, 16))
+
+        def f(x):
+            def body(c, wi):
+                return c @ wi, None
+            y, _ = jax.lax.scan(body, x, w)
+            return y
+
+        j = jax.make_jaxpr(f)(jnp.zeros((8, 16)))
+        st = RA.analyze_jaxpr(j)
+        assert st.flops == 4 * 2 * 8 * 16 * 16
+
+    def test_grad_counts_backward(self):
+        def f(a):
+            return jnp.sum((a @ jnp.ones((16, 8))) ** 2)
+
+        j = jax.make_jaxpr(jax.grad(f))(jnp.zeros((4, 16)))
+        st = RA.analyze_jaxpr(j)
+        assert st.flops >= 2 * 2 * 4 * 16 * 8   # fwd + bwd dots
+
+    def test_collective_bytes_per_shard(self, mesh8):
+        def f(x):
+            return jax.lax.all_gather(x, "model", axis=0, tiled=True)
+
+        g = cl.shmap(f, mesh8, P("model"), P(None))
+        x = jnp.zeros((64, 32), jnp.bfloat16)
+        st = RA.analyze_jaxpr(jax.make_jaxpr(jax.jit(g))(x),
+                              {"model": 8})
+        # per-shard operand: (8, 32) bf16 = 512 bytes; wire = (n-1)x operand
+        assert st.coll_bytes["all_gather"] == 8 * 32 * 2
+        assert st.wire_bytes["all_gather"] == 7 * 8 * 32 * 2
+        assert st.coll_counts["all_gather"] == 1
+
+    def test_scan_of_collectives(self, mesh8):
+        def f(x):
+            def body(c, _):
+                return jax.lax.psum(c, "model"), None
+            y, _ = jax.lax.scan(body, x, None, length=5)
+            return y
+
+        g = cl.shmap(f, mesh8, P(None), P(None))
+        x = jnp.zeros((16,), jnp.float32)
+        st = RA.analyze_jaxpr(jax.make_jaxpr(jax.jit(g))(x), {"model": 8})
+        assert st.coll_counts["all_reduce"] == 5
+        assert st.coll_bytes["all_reduce"] == 5 * 16 * 4
+        assert abs(st.wire_bytes["all_reduce"]
+                   - 5 * 16 * 4 * 2 * 7 / 8) < 1e-6
+
+
+class TestRooflineModel:
+    def test_terms_and_dominance(self):
+        r = RA.Roofline(arch="a", shape="s", mesh="m", chips=256,
+                        hlo_flops=256 * 197e12, hlo_bytes=256 * 819e9,
+                        collective_bytes=25e9,
+                        model_flops=128 * 197e12).finalize()
+        assert abs(r.compute_s - 1.0) < 1e-9
+        assert abs(r.memory_s - 1.0) < 1e-9
+        assert abs(r.collective_s - 0.5) < 1e-9
+        assert r.dominant in ("compute", "memory")
+        assert abs(r.useful_ratio - 0.5) < 1e-9
+
+    def test_decode_ideal_is_bandwidth(self):
+        r = RA.Roofline(arch="a", shape="s", mesh="m", chips=256,
+                        hlo_flops=1e10, hlo_bytes=256 * 819e9,
+                        collective_bytes=0.0, model_flops=1e9,
+                        min_bytes=819e9).finalize()
+        assert abs(r.ideal_s - 1.0) < 1e-9     # memory floor, not compute
+        assert abs(r.roofline_fraction - 1.0) < 1e-9
+
+    def test_memory_model_codec_effect(self):
+        from repro.configs import SHAPES, get_config
+        from repro.configs.base import MeshConfig, RunConfig
+        from repro.core.collectives import CodecConfig
+        cfg = get_config("qwen3-4b")
+        mesh = MeshConfig(16, 16, 1)
+        on = RA.analytic_memory_bytes(cfg, SHAPES["decode_32k"], mesh,
+                                      RunConfig(fsdp=False))
+        off = RA.analytic_memory_bytes(cfg, SHAPES["decode_32k"], mesh,
+                                       RunConfig(fsdp=False,
+                                                 codec=CodecConfig.off()))
+        assert on["params"] < off["params"]      # packed weights
+        assert on["kv_cache"] < off["kv_cache"]  # packed cache
+
+
+class TestFsdpStrategy:
+    def test_matches_megatron(self, mesh24):
+        from repro.configs.base import ModelConfig, MeshConfig, RunConfig
+        from repro.core.collectives import CodecConfig
+        from repro.models import lm, params as PM
+
+        cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                          n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=500,
+                          head_dim=16)
+        B, S = 8, 64
+        toks = jnp.asarray(
+            np.random.default_rng(0).integers(0, 500, (B, S)), jnp.int32)
+        batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+
+        def loss_for(strategy):
+            mesh_cfg = MeshConfig(data=2, model=4, pod=1)
+            run = RunConfig(codec=CodecConfig.off(), tp_strategy=strategy)
+            table = lm.lm_table(cfg, mesh_cfg, run)
+            dims = lm.lm_fsdp_dims(table)
+            p = PM.init_params(table, jax.random.key(1))
+            pspecs = PM.param_pspecs(table)
+
+            def g(pp, bb):
+                return jax.lax.psum(
+                    lm.train_loss(cfg, run, pp, bb, 4, ("data",), dims=dims),
+                    ("data", "model"))
+
+            f = jax.jit(cl.shmap(g, mesh24,
+                                 (pspecs, {"tokens": P("data"),
+                                           "labels": P("data")}), P()))
+            return float(f(p, batch))
+
+        a, b = loss_for("megatron"), loss_for("fsdp")
+        assert abs(a - b) < 0.02, (a, b)

@@ -1,0 +1,38 @@
+"""End-to-end behaviour tests: the example trainer (with failure injection +
+restart) and the serving loop, run through the public CLI entry points."""
+
+import numpy as np
+import pytest
+
+
+def test_train_cli_with_failure_and_restart(tmp_path):
+    from repro.launch import train as train_cli
+    rc = train_cli.main([
+        "--arch", "qwen3-4b", "--steps", "12", "--mesh", "2x4",
+        "--batch", "4", "--seq", "32", "--ckpt-dir", str(tmp_path),
+        "--ckpt-every", "4", "--simulate-failure", "6",
+    ])
+    assert rc == 0
+    from repro.train import checkpoint as ckpt
+    assert ckpt.latest_step(str(tmp_path)) == 12
+
+
+def test_train_cli_loss_decreases(tmp_path):
+    from repro.launch.train import train_loop
+    from repro.configs import get_config, make_reduced
+    from repro.configs.base import MeshConfig, RunConfig, ShapeConfig
+    cfg = make_reduced(get_config("granite-moe-1b-a400m"), tp=4)
+    out = train_loop(cfg, ShapeConfig("t", 32, 8, "train"),
+                     MeshConfig(2, 4, 1), RunConfig(warmup_steps=2),
+                     steps=16, ckpt_dir=None, ckpt_every=0, resume=False,
+                     log=lambda *_: None)
+    assert out["final_loss"] < out["first_loss"]
+
+
+def test_serve_cli():
+    from repro.launch import serve as serve_cli
+    rc = serve_cli.main([
+        "--arch", "qwen3-4b", "--batch", "2", "--prompt-len", "32",
+        "--new-tokens", "4", "--mesh", "2x4",
+    ])
+    assert rc == 0
