@@ -1,0 +1,7 @@
+.PHONY: verify bench-serving
+
+verify:            ## tier-1 test suite (same command everywhere)
+	./scripts/verify.sh
+
+bench-serving:     ## continuous-batching serving benchmark (codec on/off)
+	PYTHONPATH=src python -m benchmarks.run --only serving

@@ -175,6 +175,44 @@ def bench_kernels() -> None:
     emit("kernel.decompress_matmul.128x512x512", us, "fused JIT decode")
 
 
+def bench_serving() -> None:
+    """Serving throughput: continuous batching over the paged LEXI cache.
+
+    Runs a fixed request stream (more requests than decode slots, mixed
+    prompt lengths) through ``repro.serve.ServeEngine`` with the cache
+    codec on and off; reports requests/s, tokens/s and the peak paged-cache
+    footprint (stored vs raw bytes) — the serving analogue of Table 3's
+    wire-byte accounting.  tp=1 so it runs on a single host device.
+    """
+    import dataclasses
+    from repro.configs.base import ModelConfig, RunConfig
+    from repro.core.collectives import CodecConfig
+    from repro.serve import Request, ServeEngine
+
+    cfg = ModelConfig(name="bench", family="dense", n_layers=2, d_model=64,
+                      n_heads=8, n_kv_heads=4, d_ff=128, vocab_size=512,
+                      head_dim=16)
+    rng = np.random.default_rng(0)
+    for label, codec in (
+            ("on", CodecConfig(cache_block=8)),
+            ("off", dataclasses.replace(CodecConfig.off(), cache_block=8))):
+        run = RunConfig(codec=codec)
+        eng = ServeEngine(cfg, run, tp=1, n_slots=2, max_len=96, seed=1)
+        reqs = [Request(uid=i,
+                        prompt=rng.integers(0, 512, (16 if i % 2 else 24,)
+                                            ).astype(np.int32),
+                        max_new_tokens=8)
+                for i in range(6)]
+        results, st = eng.run(reqs)
+        assert all(len(r.tokens) == 8 for r in results)
+        emit(f"serving.continuous.codec_{label}", st.wall_s * 1e6,
+             f"req_s={st.requests_per_s:.2f} tok_s={st.tokens_per_s:.1f} "
+             f"steps={st.decode_steps} peak_pages={st.peak_pages} "
+             f"cache_kB={st.peak_cache_bytes / 1e3:.1f} "
+             f"raw_kB={st.peak_cache_raw_bytes / 1e3:.1f} "
+             f"ratio={st.cache_ratio:.2f}x")
+
+
 def bench_codec_throughput() -> None:
     """Host codec throughput (numpy oracle; context for checkpoint costs)."""
     w = common.weight_stream(PAPER_MODELS[0], max_elems=1_000_000)
@@ -197,6 +235,7 @@ ALL = {
     "fig6": fig6_decoder_dse,
     "table4": table4_area_power,
     "kernels": bench_kernels,
+    "serving": bench_serving,
     "codec": bench_codec_throughput,
 }
 

@@ -4,6 +4,10 @@ compressed block KV cache, compressed activation collectives.
     PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         python examples/serve_lm.py --arch gemma2-9b --mesh 2x4
 
+With ``--continuous`` a request stream (mixed prompt lengths, more requests
+than decode slots) runs through the continuous-batching engine instead,
+reporting per-request latency and paged-cache bytes.
+
 Prints per-transport compression accounting alongside throughput.
 """
 
@@ -38,19 +42,40 @@ def main() -> int:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=24)
+    ap.add_argument("--continuous", action="store_true",
+                    help="run a request stream through the "
+                         "continuous-batching engine")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=2)
     args = ap.parse_args()
 
     d, m = (int(x) for x in args.mesh.split("x"))
     mesh_cfg = MeshConfig(data=d, model=m, pod=1)
-    mesh = make_mesh_from_config(mesh_cfg)
     run = RunConfig(codec=CodecConfig(cache_block=32))
     cfg = make_reduced(get_config(args.arch), tp=m)
+    tp = m
+    B, S, N = args.batch, args.prompt_len, args.new_tokens
+    rng = np.random.default_rng(0)
+
+    if args.continuous:
+        # the engine owns its own 1xTP mesh and params — skip the
+        # fixed-path setup entirely
+        from repro.serve import ServeEngine
+        from repro.serve.scheduler import demo_serving_setup, format_stats
+        run, max_len, reqs = demo_serving_setup(
+            run, cfg.vocab_size, tp, S, N, args.requests)
+        eng = ServeEngine(cfg, run, tp=tp, n_slots=args.slots,
+                          max_len=max_len, params=None, seed=0)
+        results, st = eng.run(reqs)
+        print("[serve] continuous:", format_stats(st))
+        print("[serve] continuations[0][:10] =", results[0].tokens[:10])
+        return 0
+
+    mesh = make_mesh_from_config(mesh_cfg)
     table = lm.lm_table(cfg, mesh_cfg, run)
     dims = lm.lm_fsdp_dims(table)
     params = PM.init_params(table, jax.random.key(0))
     pspecs = PM.param_pspecs(table)
-    tp = m
-    B, S, N = args.batch, args.prompt_len, args.new_tokens
 
     # --- compression accounting ---------------------------------------
     cp = W.compress_params(params, run.codec)
@@ -65,7 +90,6 @@ def main() -> int:
     print(f"[serve] ICI activations packed at ~{wire_ratio(run.codec.k):.2f}x "
           f"on every all_gather/all_to_all")
 
-    rng = np.random.default_rng(0)
     prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
 
     def serve(pp, toks):

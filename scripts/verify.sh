@@ -1,0 +1,6 @@
+#!/usr/bin/env sh
+# Tier-1 verification: run the full test suite exactly as CI/the driver does.
+#   ./scripts/verify.sh [extra pytest args...]
+set -eu
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"

@@ -58,10 +58,20 @@ DEFAULT_CODEC = CodecConfig()
 
 
 def shmap(f, mesh, in_specs, out_specs):
-    """Project-standard shard_map: vma checking off (the codec's scatter ops
-    defeat replication inference; correctness is covered by tests)."""
-    return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_vma=False)
+    """Project-standard shard_map: vma/rep checking off (the codec's scatter
+    ops defeat replication inference; correctness is covered by tests).
+
+    Version shim: jax >= 0.6 exposes ``jax.shard_map(..., check_vma=...)``;
+    0.4.x has ``jax.experimental.shard_map.shard_map(..., check_rep=...)``.
+    Every call site in the repo routes through here so the compat logic
+    lives in exactly one place.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=False)
 
 
 def _compress(x: jax.Array, cfg: CodecConfig) -> fixed.Compressed:
@@ -86,10 +96,16 @@ def compressed_all_gather(x: jax.Array, axis_name: str | Tuple[str, ...],
     gathered = jax.lax.all_gather(ct, axis_name, axis=0, tiled=False)
     parts = jax.vmap(fixed.decompress)(gathered)      # (S, *x.shape)
     if not tiled:
+        # untiled inserts a NEW axis: gather_axis indexes the output's
+        # ndim+1 axes, so it must not be folded modulo x.ndim
         return jnp.moveaxis(parts, 0, gather_axis)
-    return jnp.concatenate(jnp.moveaxis(parts, 0, 0), axis=0) if gather_axis == 0 \
-        else jnp.concatenate([parts[i] for i in range(parts.shape[0])],
-                             axis=gather_axis)
+    gather_axis = gather_axis % x.ndim          # normalize negative axes
+    # tiled: fold the shard axis into gather_axis with one moveaxis+reshape
+    # (constant trace size; a per-shard concat loop grows with shard count)
+    moved = jnp.moveaxis(parts, 0, gather_axis)       # (..., S, g, ...)
+    shape = list(x.shape)
+    shape[gather_axis] = parts.shape[0] * x.shape[gather_axis]
+    return moved.reshape(shape)
 
 
 # ---------------------------------------------------------------------------

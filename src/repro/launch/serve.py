@@ -1,8 +1,11 @@
-"""Batched serving demo: prefill a prompt batch, decode greedily with
-LEXI-compressed weights/activations/caches.
+"""Serving demo: fixed-batch (prefill a prompt batch, decode greedily) or
+continuous batching (request stream through the paged-cache ServeEngine),
+with LEXI-compressed weights/activations/caches.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b --reduced \
         --batch 4 --prompt-len 64 --new-tokens 32 --mesh 1x4
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --reduced \
+        --continuous --requests 8 --slots 4 --mesh 1x4
 """
 
 from __future__ import annotations
@@ -34,6 +37,13 @@ def main(argv=None) -> int:
     ap.add_argument("--mesh", default="1x4")
     ap.add_argument("--codec", default="full",
                     choices=["full", "weights", "off"])
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve a request stream through the "
+                         "continuous-batching engine")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="continuous mode: number of queued requests")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="continuous mode: decode slots")
     args = ap.parse_args(argv)
 
     d, m = (int(x) for x in args.mesh.split("x"))
@@ -46,6 +56,9 @@ def main(argv=None) -> int:
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = make_reduced(cfg, tp=m)
+
+    if args.continuous:
+        return _serve_continuous(cfg, run, m, args)
 
     table = lm.lm_table(cfg, mesh_cfg, run)
     dims = lm.lm_fsdp_dims(table)
@@ -91,6 +104,22 @@ def main(argv=None) -> int:
     dt = time.time() - t0
     print(f"[serve] steady-state: {B * N / dt:.1f} tok/s")
     print("[serve] sample continuations:", out[:2, :12].tolist())
+    return 0
+
+
+def _serve_continuous(cfg, run, tp: int, args) -> int:
+    """Request-stream mode: queue > slots, mixed prompt lengths."""
+    from repro.serve import ServeEngine
+    from repro.serve.scheduler import demo_serving_setup, format_stats
+    run, max_len, reqs = demo_serving_setup(
+        run, cfg.vocab_size, tp, args.prompt_len, args.new_tokens,
+        args.requests)
+    eng = ServeEngine(cfg, run, tp=tp, n_slots=args.slots, max_len=max_len,
+                      seed=run.seed)
+    results, st = eng.run(reqs)
+    print("[serve] continuous:", format_stats(st))
+    print("[serve] sample continuations:",
+          [r.tokens[:6] for r in results[:2]])
     return 0
 
 

@@ -260,12 +260,17 @@ def decode_qkv(cfg: ModelConfig, p, h: jax.Array, pos, tp: int):
     q is all-gathered to FULL heads (tiny at S=1) because decode attention is
     context-parallel over the cache; the new token's K/V (or MLA latent) is
     returned full-width for the cache append.
+
+    ``pos`` is the rope position — a scalar (whole-batch decode, every
+    sequence at the same length) or a (B,) vector (continuous batching,
+    per-slot lengths).  Both lower to per-batch rope tables.
     """
     hd = cfg.head_dim
     hq = cfg.padded_heads(tp)
     hq_loc = hq // tp
     b = h.shape[0]
-    posv = jnp.asarray(pos, jnp.int32).reshape(1)
+    posv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1),
+                            (b,))[:, None]           # (B,1)
 
     if cfg.mla is not None:
         m = cfg.mla
@@ -282,6 +287,7 @@ def decode_qkv(cfg: ModelConfig, p, h: jax.Array, pos, tp: int):
         c_kv = layers.rms_norm(lat[..., :m.kv_lora_rank], p["kv_norm"],
                                cfg.norm_eps)
         cos, sin = rope_tables(posv, dr, cfg.rope_theta)
+        cos, sin = cos[:, None], sin[:, None]            # (B,1,1,dr/2)
         k_rope = apply_rope(lat[:, None, None, m.kv_lora_rank:], cos, sin
                             )[:, 0, 0]                   # (B, dr)
         new_vals = jnp.concatenate([c_kv, k_rope], axis=-1)
@@ -322,6 +328,7 @@ def decode_qkv(cfg: ModelConfig, p, h: jax.Array, pos, tp: int):
         q = layers.rms_norm(q, p["q_norm"], cfg.norm_eps)
         k = layers.rms_norm(k, p["k_norm"], cfg.norm_eps)
     cos, sin = rope_tables(posv, hd, cfg.rope_theta)
+    cos, sin = cos[:, None], sin[:, None]                # (B,1,1,hd/2)
     q = apply_rope(q, cos, sin)
     k = apply_rope(k, cos, sin)
     q_full = jax.lax.all_gather(q, "model", axis=1, tiled=True)  # (B,Hq,1,hd)

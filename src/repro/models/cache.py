@@ -26,7 +26,7 @@ structure, giving the A/B for the roofline.
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -155,6 +155,37 @@ def fill_from_prefill(cfg: ModelConfig, run: RunConfig, kv: KVBlocks,
 # decode: append + attend
 # ---------------------------------------------------------------------------
 
+def split_kv_payload(cfg: ModelConfig, vals: jax.Array, hq: int):
+    """Cache payload (B, L, W) -> (k, v) per-query-head views.
+
+    Plain attention: (B,Hq,L,hd) with the static GQA head map (pad query
+    heads clip onto the last kv head).  MLA: the latent travels whole,
+    (B,1,L,lora+rope) / (B,1,L,lora).  Shared by the fixed-batch block
+    store and the paged store so the two decode paths cannot diverge.
+    """
+    b, L, _ = vals.shape
+    if cfg.mla is not None:
+        lora = cfg.mla.kv_lora_rank
+        return vals[:, None], vals[:, None, :, :lora]
+    import numpy as _np
+    g_real = max(cfg.n_heads // max(cfg.n_kv_heads, 1), 1)
+    kv_idx = jnp.asarray(_np.clip(_np.arange(hq) // g_real, 0,
+                                  cfg.n_kv_heads - 1))
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    kvv = vals.reshape(b, L, hkv, 2, hd)
+    k = kvv[:, :, :, 0].transpose(0, 2, 1, 3)
+    v = kvv[:, :, :, 1].transpose(0, 2, 1, 3)
+    return jnp.take(k, kv_idx, axis=1), jnp.take(v, kv_idx, axis=1)
+
+
+def merge_partial(carry, po, pm, pl):
+    """Online-softmax accumulation of one attention partial into (out,m,l)."""
+    out, m, l = carry
+    m_new = jnp.maximum(m, pm)
+    a_old, a_new = jnp.exp(m - m_new), jnp.exp(pm - m_new)
+    return (out * a_old[..., None] + po * a_new[..., None],
+            m_new, l * a_old + pl * a_new)
+
 def append_token(cfg: ModelConfig, run: RunConfig, kv: KVBlocks,
                  new_vals: jax.Array, tp: int) -> KVBlocks:
     """Append one token's KV/latent (B, W) at global position kv.length.
@@ -206,30 +237,6 @@ def attend_cache(cfg: ModelConfig, run: RunConfig, kv: KVBlocks,
     loc_len = jnp.maximum((length - 1 - ti) // tp + 1, 0)
     nfull = loc_len // blk
 
-    mla = cfg.mla is not None
-    # static per-query-head kv index: correct for any (padded) head count —
-    # q heads keep the model's native order with pad heads appended at the
-    # end (clipped onto the last kv head; their wo rows are extra params).
-    if not mla:
-        import numpy as _np
-        g_real = max(cfg.n_heads // max(cfg.n_kv_heads, 1), 1)
-        kv_idx = jnp.asarray(_np.clip(_np.arange(hq) // g_real, 0,
-                                      cfg.n_kv_heads - 1))
-
-    def split_kv(vals):
-        """(B, blk, W) -> (k, v) (B,Hq,blk,·) per-query-head gathered."""
-        if mla:
-            lora = cfg.mla.kv_lora_rank
-            lat = vals[..., :]                   # (B, blk, lora+rope)
-            k = lat[:, None]                     # (B,1,blk,lora+rope)
-            v = lat[:, None, :, :lora]           # (B,1,blk,lora)
-            return k, v
-        hkv, hd = cfg.n_kv_heads, cfg.head_dim
-        kvv = vals.reshape(b, blk, hkv, 2, hd)
-        k = kvv[:, :, :, 0].transpose(0, 2, 1, 3)
-        v = kvv[:, :, :, 1].transpose(0, 2, 1, 3)
-        return jnp.take(k, kv_idx, axis=1), jnp.take(v, kv_idx, axis=1)
-
     def valid_for(i0):
         sl = i0 + jnp.arange(blk)
         pos = sl * tp + ti
@@ -240,22 +247,15 @@ def attend_cache(cfg: ModelConfig, run: RunConfig, kv: KVBlocks,
 
     nblk = (kv.signman.shape[0] if run.codec.cache
             else kv.raw_blocks.shape[0])
-    hd_v = (cfg.mla.kv_lora_rank if mla else cfg.head_dim)
-
-    def merge(carry, po, pm, pl):
-        out, m, l = carry
-        m_new = jnp.maximum(m, pm)
-        a_old, a_new = jnp.exp(m - m_new), jnp.exp(pm - m_new)
-        return (out * a_old[..., None] + po * a_new[..., None],
-                m_new, l * a_old + pl * a_new)
+    hd_v = (cfg.mla.kv_lora_rank if cfg.mla is not None else cfg.head_dim)
 
     def scan_blk(carry, i):
         vals = load_block(kv, i, b, blk, w, run.codec)
         ok = valid_for(i * blk) & (i < nfull)
-        k, v = split_kv(vals)
+        k, v = split_kv_payload(cfg, vals, hq)
         po, pm, pl = layers.attention_partial(
             q, k, v, jnp.broadcast_to(ok[None], (b, blk)), spec)
-        return merge(carry, po, pm, pl), None
+        return merge_partial(carry, po, pm, pl), None
 
     init = (jnp.zeros((b, hq, 1, hd_v), jnp.float32),
             jnp.full((b, hq, 1), layers.NEG_INF, jnp.float32),
@@ -268,9 +268,279 @@ def attend_cache(cfg: ModelConfig, run: RunConfig, kv: KVBlocks,
     ok_r = (sl_r < loc_len) & (pos_r < length)
     if spec.windowed and window is not None:
         ok_r &= pos_r > (length - 1 - window)
-    kr, vr = split_kv(kv.ring)
+    kr, vr = split_kv_payload(cfg, kv.ring, hq)
     po, pm, pl = layers.attention_partial(
         q, kr, vr, jnp.broadcast_to(ok_r[None], (b, blk)), spec)
-    out, m, l = merge((out, m, l), po, pm, pl)
+    out, m, l = merge_partial((out, m, l), po, pm, pl)
 
     return layers.merge_partials(out, m, l, "model")
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache (continuous batching)
+#
+# The block store above is fixed-batch: all B sequences advance in lockstep
+# and share one global length.  The paged store below decouples them so a
+# scheduler can admit/evict sequences mid-flight (vLLM-style paging, with
+# LEXI block compression as the page representation):
+#
+# * a pool of fixed-size *pages*, each holding ``block`` interleaved-owned
+#   slots of ONE sequence, LEXI-FW-compressed on fill (codec on) or raw bf16
+#   (codec off) — the compressed layout of a page is byte-identical to a
+#   B=1 block of the fixed-batch store, so a prefilled sequence's blocks
+#   copy straight into pages with no decompress/recompress round trip;
+# * a per-slot page table mapping block index -> page id (-1 = unmapped)
+#   plus a page_used bitmap for functional in-graph allocation;
+# * per-slot bf16 rings for the in-flight partial block and per-slot
+#   lengths, so every sequence appends/attends at its own position.
+#
+# All of it remains per-shard state inside shard_map: shard t owns global
+# positions {p : p % tp == t} of every sequence, exactly like the fixed
+# store, so decode attention stays a partial-per-shard + one tiny psum.
+# ---------------------------------------------------------------------------
+
+
+class PagedKV(NamedTuple):
+    """Per-layer, per-shard paged KV store (one sequence per slot).
+
+    Page payload shape: (block, W); compressed fields have leading n_pages.
+    """
+    signman: Optional[jax.Array]    # (P, N) u8, N = block*W
+    planes: Optional[jax.Array]     # (P, k, Npad/32) u32
+    dict_syms: Optional[jax.Array]  # (P, 2^k) u8
+    esc_pos: Optional[jax.Array]    # (P, C) i32
+    esc_raw: Optional[jax.Array]    # (P, C) u8
+    raw_pages: Optional[jax.Array]  # (P, block, W) bf16 when codec off
+    page_table: jax.Array           # (S, maxp) i32, -1 = unmapped
+    page_used: jax.Array            # (P,) bool
+    ring: jax.Array                 # (S, block, W) bf16 in-flight blocks
+
+
+def max_pages_per_slot(run: RunConfig, max_len: int, tp: int) -> int:
+    return (max_len // tp) // run.codec.cache_block + 2
+
+
+def page_bytes(cfg: ModelConfig, run: RunConfig) -> Tuple[int, int]:
+    """(stored_bytes, raw_bytes) per page per shard — the serving metric.
+
+    Derived from the abstract shapes of the actual store (one source of
+    truth: whatever ``empty_paged_kv`` allocates per page is what HBM pays).
+    """
+    if cfg.n_heads == 0:            # attention-free: no KV pages at all
+        return 0, 0
+    import numpy as _np
+    pkv = jax.eval_shape(lambda: empty_paged_kv(cfg, run, 1,
+                                                run.codec.cache_block, 1))
+    per_page = lambda f: int(_np.prod(f.shape[1:])) * f.dtype.itemsize
+    raw = per_page(pkv.ring)                       # ring row == one raw page
+    if not run.codec.cache:
+        return raw, raw
+    stored = sum(per_page(f) for f in (pkv.signman, pkv.planes,
+                                       pkv.dict_syms, pkv.esc_pos,
+                                       pkv.esc_raw))
+    return stored, raw
+
+
+def empty_paged_kv(cfg: ModelConfig, run: RunConfig, n_slots: int,
+                   max_len: int, tp: int,
+                   n_pages: Optional[int] = None) -> PagedKV:
+    w = kv_width(cfg)
+    blk = run.codec.cache_block
+    maxp = max_pages_per_slot(run, max_len, tp)
+    # In-graph allocation (append_token_paged) has no way to fail loudly on
+    # pool exhaustion — it would hand out a live page.  Oversubscription is
+    # therefore rejected here, at construction, where it CAN fail loudly.
+    if n_pages is not None and n_pages < n_slots * maxp:
+        raise ValueError(
+            f"page pool oversubscription unsupported: n_pages={n_pages} < "
+            f"n_slots*max_pages={n_slots * maxp}")
+    P_ = n_pages if n_pages is not None else n_slots * maxp
+    n = blk * w
+    npad = packing.pad_to_lanes(n)
+    c = run.codec.esc_capacity(n)
+    k = run.codec.k
+    pt = jnp.full((n_slots, maxp), -1, jnp.int32)
+    used = jnp.zeros((P_,), jnp.bool_)
+    ring = jnp.zeros((n_slots, blk, w), jnp.bfloat16)
+    if run.codec.cache:
+        return PagedKV(
+            signman=jnp.zeros((P_, n), jnp.uint8),
+            planes=jnp.zeros((P_, k, npad // 32), jnp.uint32),
+            dict_syms=jnp.zeros((P_, 1 << k), jnp.uint8),
+            esc_pos=jnp.full((P_, c), npad, jnp.int32),
+            esc_raw=jnp.zeros((P_, c), jnp.uint8),
+            raw_pages=None, page_table=pt, page_used=used, ring=ring)
+    return PagedKV(signman=None, planes=None, dict_syms=None, esc_pos=None,
+                   esc_raw=None,
+                   raw_pages=jnp.zeros((P_, blk, w), jnp.bfloat16),
+                   page_table=pt, page_used=used, ring=ring)
+
+
+def load_pages(pkv: PagedKV, page_ids: jax.Array, blk: int, w: int,
+               codec: CodecConfig) -> jax.Array:
+    """Gather + decompress one page per slot.  page_ids (S,) -> (S, blk, W).
+
+    Unmapped ids (-1) load page 0; callers mask those positions invalid.
+    """
+    pid = jnp.clip(page_ids, 0, None)
+    if codec.cache:
+        ct = fixed.Compressed(
+            signman=pkv.signman[pid], planes=pkv.planes[pid],
+            dict_syms=pkv.dict_syms[pid], esc_pos=pkv.esc_pos[pid],
+            esc_raw=pkv.esc_raw[pid],
+            n_escapes=jnp.zeros(pid.shape, jnp.int32),
+            shape=(blk, w), k=codec.k)
+        return jax.vmap(fixed.decompress)(ct)
+    return pkv.raw_pages[pid]
+
+
+def append_token_paged(cfg: ModelConfig, run: RunConfig, pkv: PagedKV,
+                       new_vals: jax.Array, lengths: jax.Array,
+                       active: jax.Array, tp: int) -> PagedKV:
+    """Append one token's KV/latent (S, W) at each slot's own position.
+
+    Only the owner shard of each slot's next position writes its ring;
+    inactive slots are untouched.  Rings that just filled are compressed
+    into freshly allocated pages (free-list allocation stays in-graph:
+    argsort of the used bitmap yields free page ids deterministically).
+    """
+    blk = run.codec.cache_block
+    ti = jax.lax.axis_index("model")
+    pos = lengths                                    # (S,)
+    owner = (pos % tp) == ti
+    write = owner & active
+    loc = pos // tp
+    ring_idx = loc % blk
+    oh = (ring_idx[:, None] == jnp.arange(blk)[None]) & write[:, None]
+    ring = jnp.where(oh[..., None], new_vals.astype(jnp.bfloat16)[:, None],
+                     pkv.ring)
+    pkv = pkv._replace(ring=ring)
+
+    flush = write & (ring_idx == blk - 1)
+    blk_idx = loc // blk                             # page-table column
+    maxp = pkv.page_table.shape[1]
+    n_pages = pkv.page_used.shape[0]
+
+    def do_flush(pkv_c: PagedKV) -> PagedKV:
+        free_order = jnp.argsort(pkv_c.page_used)    # free pages first
+        rank = jnp.cumsum(flush.astype(jnp.int32)) - 1
+        page = free_order[jnp.clip(rank, 0, n_pages - 1)]
+        tgt = jnp.where(flush, page, n_pages)        # sentinel drops
+        if run.codec.cache:
+            ct = jax.vmap(lambda r: fixed.compress(
+                r, k=run.codec.k,
+                esc_capacity=run.codec.esc_capacity(r.size)))(pkv_c.ring)
+            pkv_c = pkv_c._replace(
+                signman=pkv_c.signman.at[tgt].set(ct.signman, mode="drop"),
+                planes=pkv_c.planes.at[tgt].set(ct.planes, mode="drop"),
+                dict_syms=pkv_c.dict_syms.at[tgt].set(ct.dict_syms,
+                                                      mode="drop"),
+                esc_pos=pkv_c.esc_pos.at[tgt].set(ct.esc_pos, mode="drop"),
+                esc_raw=pkv_c.esc_raw.at[tgt].set(ct.esc_raw, mode="drop"))
+        else:
+            pkv_c = pkv_c._replace(
+                raw_pages=pkv_c.raw_pages.at[tgt].set(pkv_c.ring,
+                                                      mode="drop"))
+        ohp = (blk_idx[:, None] == jnp.arange(maxp)[None]) & flush[:, None]
+        pt = jnp.where(ohp, page[:, None], pkv_c.page_table)
+        used = pkv_c.page_used.at[tgt].set(True, mode="drop")
+        return pkv_c._replace(page_table=pt, page_used=used)
+
+    return jax.lax.cond(jnp.any(flush), do_flush, lambda c: c, pkv)
+
+
+def attend_paged(cfg: ModelConfig, run: RunConfig, pkv: PagedKV,
+                 q: jax.Array, lengths: jax.Array, spec: layers.AttnSpec,
+                 tp: int, window=None) -> jax.Array:
+    """Per-slot paged decode attention: q (S,Hq,1,hd) FULL heads on every
+    shard; streams each slot's pages via its page table, then the rings;
+    merges across shards.  ``lengths`` (S,) are post-append token counts.
+
+    Returns (S,Hq,1,hd_v) bf16, fully normalized across shards.
+    """
+    b, hq, _, _ = q.shape
+    blk = run.codec.cache_block
+    w = kv_width(cfg)
+    ti = jax.lax.axis_index("model")
+    loc_len = jnp.maximum((lengths - 1 - ti) // tp + 1, 0)     # (S,)
+    nfull = loc_len // blk
+    maxp = pkv.page_table.shape[1]
+    hd_v = (cfg.mla.kv_lora_rank if cfg.mla is not None else cfg.head_dim)
+
+    def scan_blk(carry, i):
+        vals = load_pages(pkv, pkv.page_table[:, i], blk, w, run.codec)
+        sl = i * blk + jnp.arange(blk)
+        posb = sl * tp + ti                              # (blk,)
+        ok = (posb[None] < lengths[:, None]) & (i < nfull)[:, None]
+        if spec.windowed and window is not None:
+            ok &= posb[None] > (lengths[:, None] - 1 - window)
+        k, v = split_kv_payload(cfg, vals, hq)
+        po, pm, pl = layers.attention_partial(q, k, v, ok, spec)
+        return merge_partial(carry, po, pm, pl), None
+
+    init = (jnp.zeros((b, hq, 1, hd_v), jnp.float32),
+            jnp.full((b, hq, 1), layers.NEG_INF, jnp.float32),
+            jnp.zeros((b, hq, 1), jnp.float32))
+    (out, m, l), _ = jax.lax.scan(scan_blk, init, jnp.arange(maxp))
+
+    # rings (raw, partially filled): slot s covers [nfull_s*blk, loc_len_s)
+    sl_r = nfull[:, None] * blk + jnp.arange(blk)[None]       # (S, blk)
+    pos_r = sl_r * tp + ti
+    ok_r = (sl_r < loc_len[:, None]) & (pos_r < lengths[:, None])
+    if spec.windowed and window is not None:
+        ok_r &= pos_r > (lengths[:, None] - 1 - window)
+    kr, vr = split_kv_payload(cfg, pkv.ring, hq)
+    po, pm, pl = layers.attention_partial(q, kr, vr, ok_r, spec)
+    out, m, l = merge_partial((out, m, l), po, pm, pl)
+
+    return layers.merge_partials(out, m, l, "model")
+
+
+def paged_insert(cfg: ModelConfig, run: RunConfig, pkv: PagedKV,
+                 kvb: KVBlocks, slot, seq_len: int, tp: int) -> PagedKV:
+    """Copy a B=1 prefilled block store into paged slot ``slot``.
+
+    The compressed layout of a (1, blk, W) block equals a (blk, W) page
+    byte-for-byte (same element count, same dictionary build), so full
+    blocks transfer by array copy; the partial tail transfers as the ring.
+    ``seq_len`` must be a static multiple of tp, so every shard owns
+    exactly seq_len/tp slots and the full-block count is static.
+    """
+    blk = run.codec.cache_block
+    assert seq_len % tp == 0, (seq_len, tp)
+    nfull = (seq_len // tp) // blk
+    maxp = pkv.page_table.shape[1]
+    assert nfull <= maxp, (nfull, maxp)
+
+    pt_row = jnp.full((maxp,), -1, jnp.int32)
+    used = pkv.page_used
+    free_order = jnp.argsort(used)                   # free pages first
+    for i in range(nfull):                           # static, small
+        page = free_order[i]
+        if run.codec.cache:
+            pkv = pkv._replace(
+                signman=pkv.signman.at[page].set(kvb.signman[i]),
+                planes=pkv.planes.at[page].set(kvb.planes[i]),
+                dict_syms=pkv.dict_syms.at[page].set(kvb.dict_syms[i]),
+                esc_pos=pkv.esc_pos.at[page].set(kvb.esc_pos[i]),
+                esc_raw=pkv.esc_raw.at[page].set(kvb.esc_raw[i]))
+        else:
+            pkv = pkv._replace(
+                raw_pages=pkv.raw_pages.at[page].set(kvb.raw_blocks[i, 0]))
+        used = used.at[page].set(True)
+        pt_row = pt_row.at[i].set(page)
+    slot = jnp.asarray(slot, jnp.int32)
+    pt = jax.lax.dynamic_update_index_in_dim(pkv.page_table, pt_row, slot, 0)
+    ring = jax.lax.dynamic_update_index_in_dim(pkv.ring, kvb.ring[0], slot, 0)
+    return pkv._replace(page_table=pt, page_used=used, ring=ring)
+
+
+def release_pages(pkv: PagedKV, slots_mask: jax.Array) -> PagedKV:
+    """Free every page owned by masked slots and unmap their table rows."""
+    n_pages = pkv.page_used.shape[0]
+    pt = pkv.page_table
+    owned = slots_mask[:, None] & (pt >= 0)
+    tgt = jnp.where(owned, pt, n_pages).reshape(-1)  # sentinel drops
+    used = pkv.page_used.at[tgt].set(False, mode="drop")
+    pt2 = jnp.where(slots_mask[:, None], -1, pt)
+    return pkv._replace(page_table=pt2, page_used=used)

@@ -1,2 +1,5 @@
-"""Batched serving: prefill + decode with LEXI-compressed caches/weights."""
+"""Serving: fixed-batch prefill+decode and continuous batching over the
+paged LEXI-compressed cache (``engine`` device code, ``scheduler`` loop)."""
 from . import engine  # noqa: F401
+from .scheduler import (Request, RequestResult, RequestScheduler,  # noqa: F401
+                        ServeEngine, ServeStats)

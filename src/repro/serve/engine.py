@@ -1,17 +1,39 @@
-"""Serving engine: batched prefill + decode with LEXI-compressed weights,
+"""Serving engine: prefill + decode with LEXI-compressed weights,
 activations, and hybrid caches (manual-SPMD, runs inside shard_map).
 
-Decode dataflow per layer (x (B,1,D) replicated over "model"):
+Two decode dataflows share the per-layer compute:
 
-  norm → sharded projections → tiny all_gathers (q to full heads) →
-  cache append (owner-shard ring, block-compress on fill) →
-  partial attention over the local cache shard (compressed blocks streamed)
-  → logsumexp merge (one small psum) → sliced-head o-projection →
-  [+ SSM recurrent update for hybrids] → one psum → residual.
+**Fixed-batch** (``prefill`` → ``decode_step``): all B sequences advance in
+lockstep from one shared length — the original research loop, still what
+the dry-run shapes lower and what the correctness tests diff against.
 
-MoE decode routes locally (tokens are replicated over "model", so each shard
-just runs its own experts on the tokens routed to them — zero dispatch a2a
-at decode, partial-sum combine).
+**Continuous batching** (``serve.scheduler.ServeEngine`` drives the paged
+entry points here): a slot-based engine where each decode slot holds one
+independent request.  The scheduler dataflow is
+
+  request queue ──admit──▶ prefill (B=1 trunk, blocks LEXI-compressed
+                           layer-by-layer) ──▶ ``insert_sequence`` copies
+                           the compressed blocks into free pages of the
+                           ``PagedKV`` pool + the SSM state slot
+        slots   ──step───▶ ``paged_decode_step``: every active slot appends
+                           at its OWN length (per-slot rope, per-slot ring,
+                           page allocation on block boundary) and attends
+                           through its page table; one greedy token per slot
+        finish  ──evict──▶ ``release_slots`` frees the slot's pages back to
+                           the pool for the next admission
+
+Per-layer decode compute (x (B,1,D) replicated over "model") is identical
+in both modes: norm → sharded projections → tiny all_gathers (q to full
+heads) → cache append (owner-shard ring, block-compress on fill) → partial
+attention over the local cache shard (compressed blocks/pages streamed) →
+logsumexp merge (one small psum) → sliced-head o-projection → [+ SSM
+recurrent update for hybrids] → one psum → residual.  MoE decode routes
+locally (tokens are replicated over "model", so each shard just runs its
+own experts on the tokens routed to them — zero dispatch a2a at decode,
+partial-sum combine).
+
+Continuous mode currently covers decoder-only families (dense/MoE/SSM/
+hybrid); enc-dec cross-attention memory stays on the fixed-batch path.
 """
 
 from __future__ import annotations
@@ -248,6 +270,13 @@ def decode_block(cfg: ModelConfig, run: RunConfig, p, x: jax.Array,
         xo = attention.decode_out(cfg, p["xattn"], merged, tp)
         x = x + jax.lax.psum(xo.astype(jnp.bfloat16), "model")
 
+    x = _ffn_decode(cfg, run, p, x, tp)
+    return x, new_kv, new_sst
+
+
+def _ffn_decode(cfg: ModelConfig, run: RunConfig, p, x: jax.Array,
+                tp: int) -> jax.Array:
+    """The MoE/MLP tail of a decode layer (shared by both decode modes)."""
     if "moe" in p:
         h2 = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
         x = x + _moe_decode(cfg, run, p["moe"], h2, tp)
@@ -262,7 +291,7 @@ def decode_block(cfg: ModelConfig, run: RunConfig, p, x: jax.Array,
         if cfg.post_norm:
             y = layers.rms_norm(y, p["ln2b"], cfg.norm_eps)
         x = x + y
-    return x, new_kv, new_sst
+    return x
 
 
 def cross_decode_q(cfg: ModelConfig, p, h: jax.Array, tp: int) -> jax.Array:
@@ -432,3 +461,155 @@ def prefill(cfg: ModelConfig, run: RunConfig, params, dims,
         ssm_new = state.ssm
     return logits, DecodeState(kv=kv_new, ssm=ssm_new, xkv=xkv_new,
                                length=jnp.asarray(s, jnp.int32))
+
+# ---------------------------------------------------------------------------
+# continuous batching: paged decode state (slot-based, per-slot lengths)
+# ---------------------------------------------------------------------------
+
+class PagedState(NamedTuple):
+    """Slot-based decode state for the continuous-batching engine.
+
+    ``kv``/``ssm`` are stacked (L, ...); ``lengths``/``active`` are per-slot
+    and shared by all layers (every layer of a sequence is at the same
+    position by construction).
+    """
+    kv: Optional[cache_mod.PagedKV]   # stacked (L, ...) or None (pure SSM)
+    ssm: Optional[SSMState]           # stacked (L, n_slots, ...) or None
+    lengths: jax.Array                # (n_slots,) i32 tokens held per slot
+    active: jax.Array                 # (n_slots,) bool slot occupied
+
+
+def empty_paged_state(cfg: ModelConfig, run: RunConfig, n_slots: int,
+                      max_len: int, tp: int,
+                      n_pages: Optional[int] = None) -> PagedState:
+    """Zeroed paged state with a per-layer page pool sized for n_slots."""
+    L = cfg.n_layers
+    assert not cfg.encdec, "continuous batching covers decoder-only archs"
+    kv = ssm = None
+    stack = lambda one: jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (L,) + a.shape).copy(), one)
+    if cfg.n_heads > 0:
+        kv = stack(cache_mod.empty_paged_kv(cfg, run, n_slots, max_len, tp,
+                                            n_pages=n_pages))
+    if cfg.ssm is not None:
+        di, nh, hd, n = ssm_mod.ssm_dims(cfg, tp)
+        k = cfg.ssm.d_conv - 1
+        ssm = SSMState(
+            h=jnp.zeros((L, n_slots, nh // tp, hd, n), jnp.float32),
+            conv_x=jnp.zeros((L, n_slots, k, di // tp), jnp.bfloat16),
+            conv_bc=jnp.zeros((L, n_slots, k, 2 * n), jnp.bfloat16))
+    return PagedState(kv=kv, ssm=ssm,
+                      lengths=jnp.zeros((n_slots,), jnp.int32),
+                      active=jnp.zeros((n_slots,), jnp.bool_))
+
+
+def paged_decode_block(cfg: ModelConfig, run: RunConfig, p, x: jax.Array,
+                       kv: Optional[cache_mod.PagedKV],
+                       sst: Optional[SSMState], lengths: jax.Array,
+                       active: jax.Array, spec: layers.AttnSpec, tp: int,
+                       window=None):
+    """One layer's decode step at per-slot positions.  x (n_slots,1,D)
+    replicated; returns (x', kv', sst').  Inactive slots leave their cache
+    and SSM state untouched (their outputs are garbage the scheduler drops).
+    """
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    partial = jnp.zeros(x.shape, jnp.float32)
+    new_kv, new_sst = kv, sst
+
+    if cfg.n_heads > 0:
+        q_full, new_vals = attention.decode_qkv(cfg, p["attn"], h, lengths,
+                                                tp)
+        new_kv = cache_mod.append_token_paged(cfg, run, kv, new_vals,
+                                              lengths, active, tp)
+        aspec = spec
+        if cfg.mla is not None:
+            aspec = spec._replace(
+                scale=(cfg.mla.qk_nope_dim + cfg.mla.qk_rope_dim) ** -0.5)
+        post = lengths + active.astype(jnp.int32)    # incl. the new token
+        merged = cache_mod.attend_paged(cfg, run, new_kv, q_full, post,
+                                        aspec, tp, window=window)
+        partial = partial + attention.decode_out(cfg, p["attn"], merged, tp)
+    if cfg.ssm is not None:
+        o, upd = ssm_mod.ssm_decode_step(cfg, p["ssm"], h, sst, tp)
+        # inactive slots keep their previous recurrent/conv state
+        keep = lambda new, old: jnp.where(
+            active.reshape((-1,) + (1,) * (new.ndim - 1)), new, old)
+        new_sst = jax.tree_util.tree_map(keep, upd, sst)
+        partial = partial + o
+
+    out = jax.lax.psum(partial.astype(jnp.bfloat16), "model")
+    if cfg.post_norm:
+        out = layers.rms_norm(out, p["ln1b"], cfg.norm_eps)
+    x = x + out
+    x = _ffn_decode(cfg, run, p, x, tp)
+    return x, new_kv, new_sst
+
+
+def paged_decode_step(cfg: ModelConfig, run: RunConfig, params, dims,
+                      state: PagedState, tokens: jax.Array, tp: int
+                      ) -> Tuple[jax.Array, PagedState]:
+    """tokens (n_slots, 1) -> (logits (n_slots, 1, V_loc) local, new state).
+
+    The continuous-batching analogue of ``decode_step``: every active slot
+    advances one token at its own position; inactive slots are carried
+    through untouched.
+    """
+    emb = lm.gathered_embed(params, dims, run)
+    x = lm.embed_tokens(cfg, run, emb, tokens, tp)       # (S,1,D)
+    spec = attention.base_attn_spec(cfg)
+    wins = attention.layer_windows(cfg)
+    wins = (jnp.asarray(wins) if wins is not None
+            else jnp.zeros((cfg.n_layers,), jnp.int32))
+    bdims = dims.get("blocks") if dims else None
+
+    def body(carry, xs):
+        xb = carry
+        p_layer, kv_l, ssm_l, win = xs
+        p_layer = blocks.gather_fsdp(p_layer, bdims, run)
+        xb, kv_n, ssm_n = paged_decode_block(
+            cfg, run, p_layer, xb, kv_l, ssm_l, state.lengths, state.active,
+            spec, tp, window=win)
+        return xb, (kv_n, ssm_n)
+
+    xs = (params["blocks"], state.kv, state.ssm, wins)
+    x, (kv_new, ssm_new) = jax.lax.scan(body, x, xs)
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm.logits_for(cfg, run, params, dims, x)
+    lengths = state.lengths + state.active.astype(jnp.int32)
+    return logits, PagedState(kv=kv_new, ssm=ssm_new, lengths=lengths,
+                              active=state.active)
+
+
+def insert_sequence(cfg: ModelConfig, run: RunConfig, state: PagedState,
+                    d: DecodeState, slot, seq_len: int, tp: int
+                    ) -> PagedState:
+    """Insert a B=1 prefilled ``DecodeState`` into paged slot ``slot``.
+
+    ``seq_len`` (the prompt length) must be a static multiple of tp.  The
+    slot must be free (its pages released); the caller tracks occupancy.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+    kv = state.kv
+    if kv is not None:
+        kv = jax.vmap(lambda pkv, kvb: cache_mod.paged_insert(
+            cfg, run, pkv, kvb, slot, seq_len, tp))(kv, d.kv)
+    ssm = state.ssm
+    if ssm is not None:
+        ssm = jax.tree_util.tree_map(
+            lambda a, b: jax.lax.dynamic_update_index_in_dim(
+                a, b[:, 0].astype(a.dtype), slot, 1), ssm, d.ssm)
+    return PagedState(
+        kv=kv, ssm=ssm,
+        lengths=state.lengths.at[slot].set(seq_len),
+        active=state.active.at[slot].set(True))
+
+
+def release_slots(state: PagedState, mask: jax.Array) -> PagedState:
+    """Evict finished sequences: free their pages, clear their slots."""
+    kv = state.kv
+    if kv is not None:
+        kv = jax.vmap(cache_mod.release_pages, in_axes=(0, None))(kv, mask)
+    return PagedState(
+        kv=kv, ssm=state.ssm,
+        lengths=jnp.where(mask, 0, state.lengths),
+        active=state.active & ~mask)

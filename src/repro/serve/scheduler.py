@@ -1,0 +1,342 @@
+"""Continuous-batching request scheduler over the paged LEXI-compressed
+cache (the serving half of the ROADMAP north star).
+
+``ServeEngine`` owns a model-parallel mesh, the jitted device functions and
+one ``PagedState``; ``RequestScheduler`` is the admission queue.  The loop:
+
+    while work:
+        admit   — pop queued requests into free slots: jitted prefill(B=1)
+                  → ``insert_sequence`` (compressed blocks copy into pages)
+        step    — one ``paged_decode_step`` for ALL slots (each at its own
+                  length), one greedy token per active slot
+        evict   — slots that hit their token budget release their pages
+                  (``release_slots``) and free up for the next admission
+
+Device state crosses jit boundaries as global arrays with one leading
+"model"-sharded axis per leaf (each shard's page pool / page table / ring
+is independent state, so the global view is simply the stack of per-shard
+views).  The wrapper functions squeeze/unsqueeze that axis at the
+shard_map boundary.
+
+Constraints (documented, validated in ``submit``):
+  * decoder-only families (dense / MoE / SSM / hybrid); no enc-dec.
+  * prompt lengths must be multiples of the model-parallel degree (the
+    sequence-sharded prefill trunk interleaves positions across shards).
+  * prompt_len + max_new_tokens <= max_len (page-pool capacity).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MeshConfig, ModelConfig, RunConfig
+from repro.core import collectives as cl
+from repro.models import cache as cache_mod
+from repro.models import lm, params as PM
+from . import engine
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request (greedy decoding, fixed token budget)."""
+    uid: int
+    prompt: np.ndarray               # (S,) int32, S % tp == 0
+    max_new_tokens: int
+
+
+@dataclasses.dataclass
+class RequestResult:
+    uid: int
+    prompt_len: int
+    tokens: List[int]                # generated tokens (len == max_new)
+    latency_s: float                 # admit (incl. own prefill) -> finish
+
+
+@dataclasses.dataclass
+class ServeStats:
+    n_requests: int
+    n_tokens: int
+    decode_steps: int
+    wall_s: float
+    requests_per_s: float
+    tokens_per_s: float
+    peak_pages: int                  # pages in use, summed over shards/layers
+    peak_cache_bytes: int            # stored bytes of those pages
+    peak_cache_raw_bytes: int        # bf16 bytes of the same pages
+    mean_latency_s: float
+
+    @property
+    def cache_ratio(self) -> float:
+        return self.peak_cache_raw_bytes / max(self.peak_cache_bytes, 1)
+
+
+class RequestScheduler:
+    """FIFO admission queue with capacity validation."""
+
+    def __init__(self, tp: int, max_len: int):
+        self.tp = tp
+        self.max_len = max_len
+        self.queue: deque[Request] = deque()
+
+    def submit(self, req: Request) -> None:
+        s = len(req.prompt)
+        if s % self.tp != 0:
+            raise ValueError(
+                f"prompt length {s} must be a multiple of tp={self.tp} "
+                "(sequence-sharded prefill)")
+        if s + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request needs {s + req.max_new_tokens} tokens > "
+                f"max_len={self.max_len}")
+        if req.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        self.queue.append(req)
+
+    def pop(self) -> Optional[Request]:
+        return self.queue.popleft() if self.queue else None
+
+    def __len__(self) -> int:
+        return len(self.queue)
+
+
+class ServeEngine:
+    """Continuous-batching inference engine (one replica, model-parallel)."""
+
+    def __init__(self, cfg: ModelConfig, run: RunConfig, *, tp: int = 1,
+                 n_slots: int = 4, max_len: int = 256, params=None,
+                 seed: int = 0):
+        if cfg.encdec or cfg.frontend != "none":
+            raise ValueError("continuous batching covers decoder-only, "
+                             "text-frontend architectures")
+        self.cfg, self.run_cfg, self.tp = cfg, run, tp
+        self.n_slots, self.max_len = n_slots, max_len
+        mesh_cfg = MeshConfig(data=1, model=tp, pod=1)
+        self.mesh = jax.make_mesh((1, tp), ("data", "model"))
+        self.table = lm.lm_table(cfg, mesh_cfg, run)
+        self.dims = lm.lm_fsdp_dims(self.table)
+        self.params = (params if params is not None
+                       else PM.init_params(self.table, jax.random.key(seed)))
+        self._pspecs = PM.param_pspecs(self.table)
+        self.scheduler = RequestScheduler(tp, max_len)
+
+        shard = engine.empty_paged_state(cfg, run, n_slots, max_len, tp)
+        self._sspec = jax.tree_util.tree_map(lambda a: P("model"), shard)
+        # global view: one leading model-sharded axis, per-shard copies
+        self.state = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (tp,) + a.shape), shard)
+
+        self._admit_cache: Dict[int, object] = {}
+        self._decode = jax.jit(cl.shmap(
+            self._decode_fn, self.mesh,
+            (self._pspecs, self._sspec, P(None, None)),
+            (P(None, None), self._sspec)))
+        self._release = jax.jit(cl.shmap(
+            self._release_fn, self.mesh, (self._sspec, P(None)),
+            self._sspec))
+
+    # -- shard_map bodies --------------------------------------------------
+
+    @staticmethod
+    def _squeeze(st_g):
+        return jax.tree_util.tree_map(lambda a: a[0], st_g)
+
+    @staticmethod
+    def _unsqueeze(st):
+        return jax.tree_util.tree_map(lambda a: a[None], st)
+
+    def _decode_fn(self, pp, st_g, toks):
+        st = self._squeeze(st_g)
+        logits, st = engine.paged_decode_step(
+            self.cfg, self.run_cfg, pp, self.dims, st, toks, self.tp)
+        tok = engine.greedy_token(self.cfg, logits, self.tp)
+        return tok, self._unsqueeze(st)
+
+    def _release_fn(self, st_g, mask):
+        return self._unsqueeze(engine.release_slots(self._squeeze(st_g),
+                                                    mask))
+
+    def _admit_for(self, prompt_len: int):
+        """One jitted admit per distinct prompt length (static shapes)."""
+        fn = self._admit_cache.get(prompt_len)
+        if fn is not None:
+            return fn
+
+        def admit(pp, st_g, prompt, slot):
+            st = self._squeeze(st_g)
+            logits, d = engine.prefill(self.cfg, self.run_cfg, pp, self.dims,
+                                       prompt, self.max_len, self.tp)
+            tok = engine.greedy_token(self.cfg, logits, self.tp)
+            st = engine.insert_sequence(self.cfg, self.run_cfg, st, d, slot,
+                                        prompt_len, self.tp)
+            return tok, self._unsqueeze(st)
+
+        fn = jax.jit(cl.shmap(
+            admit, self.mesh,
+            (self._pspecs, self._sspec, P(None, None), P()),
+            (P(None, None), self._sspec)))
+        self._admit_cache[prompt_len] = fn
+        return fn
+
+    # -- metrics -----------------------------------------------------------
+
+    def _pages_for_length(self, length: int) -> int:
+        """Pages one sequence of ``length`` tokens occupies (all layers,
+        summed over shards) — pure host arithmetic, mirroring the device's
+        flush rule (a page exists exactly per full block of owned slots),
+        so the serving loop never syncs device state for its metrics."""
+        if self.cfg.n_heads == 0 or length <= 0:
+            return 0
+        blk = self.run_cfg.codec.cache_block
+        per_shard = sum(
+            max((length - 1 - t) // self.tp + 1, 0) // blk
+            for t in range(self.tp))
+        return per_shard * self.cfg.n_layers
+
+    def _pages_in_use(self) -> int:
+        """Device-truth page count (syncs; for tests/inspection only)."""
+        if self.state.kv is None:
+            return 0
+        return int(np.asarray(self.state.kv.page_used).sum())
+
+    # -- the serving loop --------------------------------------------------
+
+    def run(self, requests: List[Request]
+            ) -> Tuple[List[RequestResult], ServeStats]:
+        """Serve a request list to completion; returns results in input
+        order plus engine-level stats."""
+        uids = [r.uid for r in requests]
+        if len(set(uids)) != len(uids):
+            raise ValueError("request uids must be unique (token streams "
+                             "are keyed by uid)")
+        for r in requests:
+            self.scheduler.submit(r)
+        slot_req: List[Optional[Request]] = [None] * self.n_slots
+        emitted: Dict[int, List[int]] = {}
+        admit_t: Dict[int, float] = {}
+        results: Dict[int, RequestResult] = {}
+        cur = np.zeros((self.n_slots, 1), np.int32)
+        slot_len = [0] * self.n_slots     # host mirror of cache lengths
+        steps = 0
+        peak_pages = 0
+        stored_pb, raw_pb = cache_mod.page_bytes(self.cfg, self.run_cfg)
+        t0 = time.perf_counter()
+
+        def track_peak():
+            nonlocal peak_pages
+            pages = sum(self._pages_for_length(slot_len[s])
+                        for s, r in enumerate(slot_req) if r is not None)
+            peak_pages = max(peak_pages, pages)
+
+        def finish_ready():
+            nonlocal peak_pages
+            mask = np.zeros((self.n_slots,), bool)
+            for s, req in enumerate(slot_req):
+                if req is None:
+                    continue
+                if len(emitted[req.uid]) >= req.max_new_tokens:
+                    now = time.perf_counter()
+                    results[req.uid] = RequestResult(
+                        uid=req.uid, prompt_len=len(req.prompt),
+                        tokens=emitted[req.uid][:req.max_new_tokens],
+                        latency_s=now - admit_t[req.uid])
+                    slot_req[s] = None
+                    mask[s] = True
+            if mask.any():
+                self.state = self._release(self.state, jnp.asarray(mask))
+
+        while len(self.scheduler) or any(r is not None for r in slot_req):
+            # admit queued requests into free slots
+            for s in range(self.n_slots):
+                if slot_req[s] is not None or not len(self.scheduler):
+                    continue
+                req = self.scheduler.pop()
+                fn = self._admit_for(len(req.prompt))
+                prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+                admit_t[req.uid] = time.perf_counter()
+                tok, self.state = fn(self.params, self.state, prompt,
+                                     jnp.asarray(s, jnp.int32))
+                t = int(np.asarray(tok)[0, 0])
+                emitted[req.uid] = [t]
+                cur[s] = t
+                slot_req[s] = req
+                slot_len[s] = len(req.prompt)
+            track_peak()
+            finish_ready()            # budget-1 requests end at admit
+            if not any(r is not None for r in slot_req):
+                continue
+
+            toks, self.state = self._decode(self.params, self.state,
+                                            jnp.asarray(cur))
+            steps += 1
+            toks = np.asarray(toks)
+            for s, req in enumerate(slot_req):
+                if req is None:
+                    continue
+                t = int(toks[s, 0])
+                emitted[req.uid].append(t)
+                cur[s] = t
+                slot_len[s] += 1          # the step appended one token
+            track_peak()
+            finish_ready()
+
+        wall = time.perf_counter() - t0
+        n_tok = sum(len(r.tokens) for r in results.values())
+        lats = [r.latency_s for r in results.values()]
+        stats = ServeStats(
+            n_requests=len(results), n_tokens=n_tok, decode_steps=steps,
+            wall_s=wall,
+            requests_per_s=len(results) / max(wall, 1e-9),
+            tokens_per_s=n_tok / max(wall, 1e-9),
+            peak_pages=peak_pages,
+            peak_cache_bytes=peak_pages * stored_pb,
+            peak_cache_raw_bytes=peak_pages * raw_pb,
+            mean_latency_s=float(np.mean(lats)) if lats else 0.0)
+        return [results[r.uid] for r in requests], stats
+
+
+# ---------------------------------------------------------------------------
+# demo helpers (shared by launch/serve.py, examples/serve_lm.py)
+# ---------------------------------------------------------------------------
+
+def demo_serving_setup(run: RunConfig, vocab_size: int, tp: int,
+                       prompt_len: int, new_tokens: int, n_requests: int,
+                       seed: int = 0):
+    """(run', max_len, requests) for a demo request stream.
+
+    Shrinks the cache block so the paged pool is exercised at demo prompt
+    sizes and generates a mixed-length queue (two admitted prompt shapes).
+    """
+    rng = np.random.default_rng(seed)
+    blk = max(4, (prompt_len // tp) // 4)
+    run = dataclasses.replace(
+        run, codec=dataclasses.replace(run.codec, cache_block=blk))
+    max_len = prompt_len + new_tokens + blk * tp
+    lens = [prompt_len, max(tp, prompt_len // 2 // tp * tp)]
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, vocab_size,
+                                        (lens[i % len(lens)],)
+                                        ).astype(np.int32),
+                    max_new_tokens=new_tokens)
+            for i in range(n_requests)]
+    return run, max_len, reqs
+
+
+def format_stats(st: ServeStats) -> str:
+    """Two-line human summary of a serving run (demo output)."""
+    return (f"{st.n_requests} reqs, {st.decode_steps} decode steps, "
+            f"{st.requests_per_s:.2f} req/s, {st.tokens_per_s:.1f} tok/s "
+            f"(incl. compile)\n"
+            f"paged cache peak {st.peak_pages} pages: "
+            f"{st.peak_cache_bytes / 1e3:.1f} kB stored / "
+            f"{st.peak_cache_raw_bytes / 1e3:.1f} kB raw "
+            f"({st.cache_ratio:.2f}x); mean request latency "
+            f"{st.mean_latency_s * 1e3:.0f} ms (incl. each prompt "
+            f"length's first-use compile)")

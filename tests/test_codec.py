@@ -1,20 +1,43 @@
 """Core LEXI codec tests: LEXI-H (Huffman) and LEXI-FW (fixed-width),
-including hypothesis property tests on the system's losslessness invariant.
+including property tests on the system's losslessness invariant.
+
+The property tests use ``hypothesis`` when it is installed; otherwise they
+fall back to a fixed-seed corpus of adversarial arrays exercising the same
+roundtrip properties, so collection never errors in minimal environments.
 """
 
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import ml_dtypes
 import numpy as np
 import pytest
 
+try:
+    import hypothesis
+    import hypothesis.extra.numpy as hnp
+    import hypothesis.strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # minimal env: property tests run on fixed corpus
+    hypothesis = hnp = st = None
+    HAVE_HYPOTHESIS = False
+
 from repro.core import (baselines, bitstream, codec, entropy, fixed, huffman,
                         packing)
 
 RNG = np.random.default_rng(0)
+
+
+def _corpus_arrays(dtype, max_n, n_cases=12, seed=7):
+    """Fixed-seed stand-in for hypothesis array strategies: edge-case sizes,
+    all-zero / all-max / random bit patterns."""
+    rng = np.random.default_rng(seed)
+    info = np.iinfo(dtype)
+    out = [np.zeros(1, dtype), np.full(2, info.max, dtype),
+           np.zeros(max_n, dtype), np.full(max_n, info.max, dtype)]
+    for _ in range(n_cases):
+        n = int(rng.integers(1, max_n + 1))
+        out.append(rng.integers(0, int(info.max) + 1, n).astype(dtype))
+    return out
 
 
 def _exp_stream(n=20_000, std=0.05):
@@ -76,12 +99,19 @@ class TestHuffman:
         assert np.array_equal(bitstream.decompress_bf16(blob), u16)
         assert len(blob) < u16.nbytes  # actually compresses
 
-    @hypothesis.given(hnp.arrays(np.uint8, st.integers(1, 400)))
-    @hypothesis.settings(max_examples=30, deadline=None)
-    def test_property_any_bytes_roundtrip(self, exp):
-        """Losslessness holds for ARBITRARY exponent streams (escapes)."""
-        stm = bitstream.encode(exp)
-        assert np.array_equal(bitstream.decode(stm), exp)
+    if HAVE_HYPOTHESIS:
+        @hypothesis.given(hnp.arrays(np.uint8, st.integers(1, 400)))
+        @hypothesis.settings(max_examples=30, deadline=None)
+        def test_property_any_bytes_roundtrip(self, exp):
+            """Losslessness holds for ARBITRARY exponent streams (escapes)."""
+            stm = bitstream.encode(exp)
+            assert np.array_equal(bitstream.decode(stm), exp)
+
+    def test_corpus_any_bytes_roundtrip(self):
+        """Fixed-seed stand-in for the hypothesis property above."""
+        for exp in _corpus_arrays(np.uint8, 400):
+            stm = bitstream.encode(exp)
+            assert np.array_equal(bitstream.decode(stm), exp)
 
     def test_cr_matches_paper(self):
         """Table 2: LEXI ≈ 3.1x on bell-shaped weight exponents."""
@@ -161,18 +191,28 @@ class TestFixedCodec:
         ct = fixed.compress(x, k=4, esc_capacity=8)
         assert int(ct.n_escapes) > 8  # overflow is *reported*
 
-    @hypothesis.given(hnp.arrays(np.uint16, st.integers(1, 300)))
-    @hypothesis.settings(max_examples=40, deadline=None)
-    def test_property_lossless_with_capacity(self, bits):
-        """With sufficient escape capacity the codec round-trips ARBITRARY
-        bf16 bit patterns exactly — including ±0, subnormals, ±inf and NaN
-        payloads (the codec never interprets the value)."""
-        xj = jax.lax.bitcast_convert_type(jnp.asarray(bits), jnp.bfloat16)
-        ct = fixed.compress(xj, k=4, esc_capacity=bits.size + 8)
-        xr = fixed.decompress(ct)
-        assert jnp.array_equal(
-            jax.lax.bitcast_convert_type(xr, jnp.uint16),
-            jax.lax.bitcast_convert_type(xj, jnp.uint16))
+    if HAVE_HYPOTHESIS:
+        @hypothesis.given(hnp.arrays(np.uint16, st.integers(1, 300)))
+        @hypothesis.settings(max_examples=40, deadline=None)
+        def test_property_lossless_with_capacity(self, bits):
+            """With sufficient escape capacity the codec round-trips
+            ARBITRARY bf16 bit patterns exactly — including ±0, subnormals,
+            ±inf and NaN payloads (the codec never interprets the value)."""
+            xj = jax.lax.bitcast_convert_type(jnp.asarray(bits), jnp.bfloat16)
+            ct = fixed.compress(xj, k=4, esc_capacity=bits.size + 8)
+            xr = fixed.decompress(ct)
+            assert jnp.array_equal(
+                jax.lax.bitcast_convert_type(xr, jnp.uint16),
+                jax.lax.bitcast_convert_type(xj, jnp.uint16))
+
+    def test_corpus_lossless_with_capacity(self):
+        for bits in _corpus_arrays(np.uint16, 300):
+            xj = jax.lax.bitcast_convert_type(jnp.asarray(bits), jnp.bfloat16)
+            ct = fixed.compress(xj, k=4, esc_capacity=bits.size + 8)
+            xr = fixed.decompress(ct)
+            assert jnp.array_equal(
+                jax.lax.bitcast_convert_type(xr, jnp.uint16),
+                jax.lax.bitcast_convert_type(xj, jnp.uint16))
 
     def test_wire_ratio(self):
         x = jnp.asarray(RNG.normal(0, 1, 100_000), jnp.bfloat16)
@@ -231,12 +271,19 @@ class TestLexiF32:
         assert np.array_equal(back.view(np.uint32), x.view(np.uint32))
         assert len(blob) < x.nbytes          # actually compresses
 
-    @hypothesis.given(hnp.arrays(np.uint32, st.integers(1, 200)))
-    @hypothesis.settings(max_examples=25, deadline=None)
-    def test_property_any_bits(self, bits):
-        x = bits.view(np.float32)
-        back = bitstream.decompress_f32(bitstream.compress_f32(x))
-        assert np.array_equal(back.view(np.uint32), bits)
+    if HAVE_HYPOTHESIS:
+        @hypothesis.given(hnp.arrays(np.uint32, st.integers(1, 200)))
+        @hypothesis.settings(max_examples=25, deadline=None)
+        def test_property_any_bits(self, bits):
+            x = bits.view(np.float32)
+            back = bitstream.decompress_f32(bitstream.compress_f32(x))
+            assert np.array_equal(back.view(np.uint32), bits)
+
+    def test_corpus_any_bits(self):
+        for bits in _corpus_arrays(np.uint32, 200):
+            x = bits.view(np.float32)
+            back = bitstream.decompress_f32(bitstream.compress_f32(x))
+            assert np.array_equal(back.view(np.uint32), bits)
 
     def test_checkpoint_integration(self, tmp_path):
         import jax

@@ -33,6 +33,15 @@ class TestForwardEquivalence:
             v, "model", axis=0, tiled=True), x, P("model"), P(None))
         assert jnp.array_equal(got, want)
 
+    @pytest.mark.parametrize("gaxis", [1, 2, -1])
+    def test_all_gather_nonzero_axis(self, mesh8, gaxis):
+        x = data((4, 8, 16))
+        got = run(mesh8, lambda v: C.compressed_all_gather(
+            v, "model", CFG, gather_axis=gaxis), x, P(None), P(None))
+        want = run(mesh8, lambda v: jax.lax.all_gather(
+            v, "model", axis=gaxis % 3, tiled=True), x, P(None), P(None))
+        assert jnp.array_equal(got, want)
+
     def test_psum_bit_exact(self, mesh8):
         x = data()
         got = run(mesh8, lambda v: C.compressed_psum(v, "model", CFG), x)

@@ -1,0 +1,160 @@
+"""Continuous-batching engine tests: the paged, slot-based decode path must
+be token-identical to the fixed-batch prefill+decode baseline for a fixed
+request set — with the LEXI cache codec on and off, across dense / hybrid /
+MoE tiny configs — while exercising mid-flight admission, eviction and page
+reuse (more requests than slots, mixed prompt lengths)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import (MeshConfig, ModelConfig, MoEConfig,
+                                RunConfig, SSMConfig)
+from repro.core import collectives as cl
+from repro.core.collectives import CodecConfig
+from repro.models import cache as cache_mod
+from repro.models import lm, params as PM
+from repro.serve import Request, ServeEngine, engine
+
+RNG = np.random.default_rng(0)
+
+TP = 4
+MAXLEN = 64
+
+CASES = {
+    "dense": ModelConfig(name="t2", family="dense", n_layers=2, d_model=64,
+                         n_heads=8, n_kv_heads=4, d_ff=128, vocab_size=500,
+                         head_dim=16),
+    "hybrid": ModelConfig(
+        name="h", family="hybrid", n_layers=3, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=500, head_dim=16,
+        parallel_hybrid=True, attn_layout="hymba_3global", window=16,
+        ssm=SSMConfig(d_state=16, headdim=8, chunk=16), sub_quadratic=True),
+    "moe": ModelConfig(name="m", family="moe", n_layers=2, d_model=64,
+                       n_heads=4, n_kv_heads=4, d_ff=0, vocab_size=500,
+                       head_dim=16,
+                       moe=MoEConfig(n_experts=8, top_k=2, d_ff=32,
+                                     n_shared=1, capacity_factor=4.0)),
+}
+
+
+def _run_cfg(codec_on: bool) -> RunConfig:
+    import dataclasses
+    codec = (CodecConfig(cache_block=4) if codec_on
+             else dataclasses.replace(CodecConfig.off(), cache_block=4))
+    return RunConfig(codec=codec)
+
+
+def _requests():
+    # mixed lengths + more requests than slots -> admission mid-flight,
+    # eviction, page reuse
+    specs = [(8, 5), (16, 3), (8, 6), (12, 4)]
+    return [Request(uid=i, prompt=RNG.integers(0, 500, (s,)).astype(np.int32),
+                    max_new_tokens=n) for i, (s, n) in enumerate(specs)]
+
+
+def _baseline_tokens(cfg, run, params, req):
+    """Fixed-batch B=1 prefill + decode loop — the reference output."""
+    mesh_cfg = MeshConfig(data=1, model=TP, pod=1)
+    mesh = jax.make_mesh((1, TP), ("data", "model"))
+    table = lm.lm_table(cfg, mesh_cfg, run)
+    dims = lm.lm_fsdp_dims(table)
+    pspecs = PM.param_pspecs(table)
+
+    def f(pp, toks):
+        lg, st = engine.prefill(cfg, run, pp, dims, toks, MAXLEN, TP)
+        tok = engine.greedy_token(cfg, lg, TP)
+        outs = [tok]
+        for _ in range(req.max_new_tokens - 1):
+            lg, st = engine.decode_step(cfg, run, pp, dims, st, tok, TP)
+            tok = engine.greedy_token(cfg, lg, TP)
+            outs.append(tok)
+        return jnp.concatenate(outs, axis=1)
+
+    fj = jax.jit(cl.shmap(f, mesh, (pspecs, P(None, None)), P(None, None)))
+    return np.asarray(fj(params, jnp.asarray(req.prompt)[None]))[0].tolist()
+
+
+@pytest.mark.parametrize("codec_on", [True, False], ids=["codec", "raw"])
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_continuous_matches_fixed_batch(case, codec_on):
+    cfg = CASES[case]
+    run = _run_cfg(codec_on)
+    eng = ServeEngine(cfg, run, tp=TP, n_slots=2, max_len=MAXLEN, seed=1)
+    reqs = _requests()
+    results, stats = eng.run(reqs)
+
+    assert stats.n_requests == len(reqs)
+    assert stats.decode_steps > 0
+    if cfg.n_heads > 0:
+        assert stats.peak_pages > 0
+        if codec_on:  # compressed pages must be smaller than raw bf16
+            assert stats.peak_cache_bytes < stats.peak_cache_raw_bytes
+        else:
+            assert stats.peak_cache_bytes == stats.peak_cache_raw_bytes
+
+    for req, res in zip(reqs, results):
+        assert len(res.tokens) == req.max_new_tokens
+        want = _baseline_tokens(cfg, run, eng.params, req)
+        assert res.tokens == want, (case, codec_on, req.uid)
+
+
+def test_pages_released_after_run():
+    """Eviction returns every page to the pool."""
+    cfg = CASES["dense"]
+    eng = ServeEngine(cfg, _run_cfg(True), tp=TP, n_slots=2, max_len=MAXLEN,
+                      seed=1)
+    results, stats = eng.run(_requests())
+    assert stats.peak_pages > 0
+    assert int(np.asarray(eng.state.kv.page_used).sum()) == 0
+    assert int(np.asarray(eng.state.active).sum()) == 0
+
+
+def test_scheduler_validation():
+    cfg = CASES["dense"]
+    eng = ServeEngine(cfg, _run_cfg(True), tp=TP, n_slots=2, max_len=MAXLEN)
+    bad_len = Request(uid=0, prompt=np.zeros((7,), np.int32),
+                      max_new_tokens=2)
+    with pytest.raises(ValueError):
+        eng.scheduler.submit(bad_len)
+    too_long = Request(uid=1, prompt=np.zeros((60,), np.int32),
+                       max_new_tokens=16)
+    with pytest.raises(ValueError):
+        eng.scheduler.submit(too_long)
+    dup = [Request(uid=7, prompt=np.zeros((8,), np.int32), max_new_tokens=2),
+           Request(uid=7, prompt=np.zeros((8,), np.int32), max_new_tokens=2)]
+    with pytest.raises(ValueError, match="unique"):
+        eng.run(dup)
+
+
+def test_page_pool_oversubscription_rejected():
+    cfg = CASES["dense"]
+    run = _run_cfg(True)
+    with pytest.raises(ValueError, match="oversubscription"):
+        cache_mod.empty_paged_kv(cfg, run, n_slots=2, max_len=MAXLEN,
+                                 tp=TP, n_pages=1)
+
+
+def test_analytic_page_count_matches_device():
+    """The scheduler's host-side page metric must mirror the device's
+    flush rule exactly (one admitted request, no decode steps yet)."""
+    cfg = CASES["dense"]
+    eng = ServeEngine(cfg, _run_cfg(True), tp=TP, n_slots=2, max_len=MAXLEN,
+                      seed=1)
+    prompt = jnp.asarray(RNG.integers(0, 500, (16,)), jnp.int32)[None]
+    fn = eng._admit_for(16)
+    _, eng.state = fn(eng.params, eng.state, prompt,
+                      jnp.asarray(0, jnp.int32))
+    want = eng._pages_for_length(16)
+    assert want > 0
+    assert eng._pages_in_use() == want
+
+
+def test_page_bytes_accounting():
+    cfg = CASES["dense"]
+    stored, raw = cache_mod.page_bytes(cfg, _run_cfg(True))
+    assert stored < raw
+    stored_off, raw_off = cache_mod.page_bytes(cfg, _run_cfg(False))
+    assert stored_off == raw_off
