@@ -3,5 +3,5 @@
 verify:            ## tier-1 test suite (same command everywhere)
 	./scripts/verify.sh
 
-bench-serving:     ## continuous-batching serving benchmark (codec on/off)
-	PYTHONPATH=src python -m benchmarks.run --only serving
+bench-serving:     ## serving + decode-kernel benchmarks (writes BENCH_*.json)
+	PYTHONPATH=src python -m benchmarks.run --only serving,decode_kernel

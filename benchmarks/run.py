@@ -175,16 +175,30 @@ def bench_kernels() -> None:
     emit("kernel.decompress_matmul.128x512x512", us, "fused JIT decode")
 
 
+def _repo_root():
+    import pathlib
+    return pathlib.Path(__file__).resolve().parent.parent
+
+
 def bench_serving() -> None:
     """Serving throughput: continuous batching over the paged LEXI cache.
 
     Runs a fixed request stream (more requests than decode slots, mixed
-    prompt lengths) through ``repro.serve.ServeEngine`` with the cache
-    codec on and off; reports requests/s, tokens/s and the peak paged-cache
-    footprint (stored vs raw bytes) — the serving analogue of Table 3's
-    wire-byte accounting.  tp=1 so it runs on a single host device.
+    prompt lengths) through ``repro.serve.ServeEngine`` for the cache codec
+    on/off x decode backend (pure-JAX scan vs the fused Pallas kernels in
+    interpret mode); reports requests/s, tokens/s, latency percentiles and
+    the peak paged-cache footprint (stored vs raw bytes) — the serving
+    analogue of Table 3's wire-byte accounting.  tp=1 so it runs on a
+    single host device.
+
+    Also writes machine-readable ``BENCH_serving.json`` at the repo root so
+    future PRs have a recorded perf baseline to regress against.  (Numbers
+    include jit compile time and, on CPU, the interpret backend measures
+    the Pallas *interpreter* — the cross-backend comparison is a
+    correctness/trajectory record, not a TPU roofline.)
     """
     import dataclasses
+    import json
     from repro.configs.base import ModelConfig, RunConfig
     from repro.core.collectives import CodecConfig
     from repro.serve import Request, ServeEngine
@@ -193,24 +207,105 @@ def bench_serving() -> None:
                       n_heads=8, n_kv_heads=4, d_ff=128, vocab_size=512,
                       head_dim=16)
     rng = np.random.default_rng(0)
+    scenarios = []
     for label, codec in (
             ("on", CodecConfig(cache_block=8)),
             ("off", dataclasses.replace(CodecConfig.off(), cache_block=8))):
-        run = RunConfig(codec=codec)
-        eng = ServeEngine(cfg, run, tp=1, n_slots=2, max_len=96, seed=1)
-        reqs = [Request(uid=i,
-                        prompt=rng.integers(0, 512, (16 if i % 2 else 24,)
-                                            ).astype(np.int32),
-                        max_new_tokens=8)
-                for i in range(6)]
-        results, st = eng.run(reqs)
-        assert all(len(r.tokens) == 8 for r in results)
-        emit(f"serving.continuous.codec_{label}", st.wall_s * 1e6,
-             f"req_s={st.requests_per_s:.2f} tok_s={st.tokens_per_s:.1f} "
-             f"steps={st.decode_steps} peak_pages={st.peak_pages} "
-             f"cache_kB={st.peak_cache_bytes / 1e3:.1f} "
-             f"raw_kB={st.peak_cache_raw_bytes / 1e3:.1f} "
-             f"ratio={st.cache_ratio:.2f}x")
+        for backend in ("jax", "interpret"):
+            run = RunConfig(codec=dataclasses.replace(
+                codec, decode_backend=backend))
+            eng = ServeEngine(cfg, run, tp=1, n_slots=2, max_len=96, seed=1)
+            reqs = [Request(uid=i,
+                            prompt=rng.integers(0, 512,
+                                                (16 if i % 2 else 24,)
+                                                ).astype(np.int32),
+                            max_new_tokens=8)
+                    for i in range(6)]
+            results, st = eng.run(reqs)
+            assert all(len(r.tokens) == 8 for r in results)
+            emit(f"serving.continuous.codec_{label}.{backend}",
+                 st.wall_s * 1e6,
+                 f"req_s={st.requests_per_s:.2f} "
+                 f"tok_s={st.tokens_per_s:.1f} steps={st.decode_steps} "
+                 f"dispatches={st.n_dispatches} "
+                 f"p50_ms={st.latency_p50_s * 1e3:.0f} "
+                 f"p95_ms={st.latency_p95_s * 1e3:.0f} "
+                 f"peak_pages={st.peak_pages} "
+                 f"cache_kB={st.peak_cache_bytes / 1e3:.1f} "
+                 f"raw_kB={st.peak_cache_raw_bytes / 1e3:.1f} "
+                 f"ratio={st.cache_ratio:.2f}x")
+            scenarios.append({
+                "codec": label, "decode_backend": st.decode_backend,
+                "n_requests": st.n_requests, "n_tokens": st.n_tokens,
+                "decode_steps": st.decode_steps,
+                "n_dispatches": st.n_dispatches,
+                "wall_s": st.wall_s,
+                "requests_per_s": st.requests_per_s,
+                "tokens_per_s": st.tokens_per_s,
+                "latency_mean_ms": st.mean_latency_s * 1e3,
+                "latency_p50_ms": st.latency_p50_s * 1e3,
+                "latency_p95_ms": st.latency_p95_s * 1e3,
+                "peak_pages": st.peak_pages,
+                "peak_cache_bytes": st.peak_cache_bytes,
+                "peak_cache_raw_bytes": st.peak_cache_raw_bytes,
+            })
+    out = {"bench": "serving", "model": cfg.name,
+           "jax_backend": __import__("jax").default_backend(),
+           "includes_compile": True, "scenarios": scenarios}
+    path = _repo_root() / "BENCH_serving.json"
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    emit("serving.json", 0.0, f"wrote {path.name} "
+         f"({len(scenarios)} scenarios)")
+
+
+def bench_decode_kernel() -> None:
+    """Microbench: the fused paged decompress+attend kernel vs the pure-JAX
+    page-scan reference on a serving-shaped problem (per-slot lengths,
+    page-table indirection).  On CPU the kernel runs under the Pallas
+    interpreter, so treat these as trajectory numbers; writes
+    ``BENCH_decode_kernel.json`` next to the serving baseline."""
+    import json
+    import jax
+    import jax.numpy as jnp
+    from repro.core import fixed
+    from repro.kernels import ops as kops
+    from repro.kernels import ref as kref
+
+    rng = np.random.default_rng(0)
+    n_s, maxp, blk, hkv, hd, h = 4, 6, 16, 4, 32, 8
+    w = 2 * hkv * hd
+    n_pages = n_s * maxp
+    kv_idx = tuple(min(i // (h // hkv), hkv - 1) for i in range(h))
+    pages = jnp.asarray(rng.normal(0, 0.5, (n_pages, blk, w)), jnp.bfloat16)
+    ring = jnp.asarray(rng.normal(0, 0.5, (n_s, blk, w)), jnp.bfloat16)
+    pt = jnp.asarray(rng.integers(0, n_pages, (n_s, maxp)), jnp.int32)
+    lengths = jnp.asarray(rng.integers(blk, maxp * blk, (n_s,)), jnp.int32)
+    q = jnp.asarray(rng.normal(0, 1, (n_s, h, hd)), jnp.bfloat16)
+    cts = jax.vmap(lambda v: fixed.compress(v, k=5))(pages)
+    scale = hd ** -0.5
+
+    fused = jax.jit(lambda q_: kops.decode_attend_paged(
+        q_, cts.signman, cts.planes, cts.dict_syms, cts.esc_raw, None, ring,
+        pt, lengths, 0, kops.WINDOW_NONE, k=5, hkv=hkv, hd=hd, kv_idx=kv_idx,
+        scale=scale, tp=1, interpret=not kops.on_tpu())[0])
+    pure = jax.jit(lambda q_: kref.paged_decode_attend_ref(
+        q_, jax.vmap(fixed.decompress)(cts), pt, lengths, ring,
+        kv_idx=kv_idx, scale=scale, tp=1, ti=0))
+    rows = {}
+    for name, fn in (("fused_kernel", fused), ("pure_jax", pure)):
+        us = timeit(fn, q, iters=3)
+        rows[name] = us
+        emit(f"decode_kernel.paged.{name}", us,
+             f"S={n_s} maxp={maxp} blk={blk} Hq={h} Hkv={hkv} hd={hd}")
+    out = {"bench": "decode_kernel",
+           "backend": "interpret" if not kops.on_tpu() else "pallas",
+           "jax_backend": jax.default_backend(),
+           "shape": {"slots": n_s, "maxp": maxp, "block": blk, "heads": h,
+                     "kv_heads": hkv, "head_dim": hd},
+           "us_per_call": rows}
+    path = _repo_root() / "BENCH_decode_kernel.json"
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    emit("decode_kernel.json", 0.0, f"wrote {path.name}")
 
 
 def bench_codec_throughput() -> None:
@@ -236,6 +331,7 @@ ALL = {
     "table4": table4_area_power,
     "kernels": bench_kernels,
     "serving": bench_serving,
+    "decode_kernel": bench_decode_kernel,
     "codec": bench_codec_throughput,
 }
 

@@ -40,6 +40,10 @@ class CodecConfig:
     k: int = fixed.DEFAULT_K            # dictionary index width (bits)
     esc_frac: int = fixed.DEFAULT_ESC_FRAC  # escape capacity = N // esc_frac
     cache_block: int = 256              # tokens per compressed KV block
+    # decode-attention backend: auto | pallas | interpret | jax (see
+    # repro.kernels.ops.resolve_decode_backend).  auto = pallas on TPU,
+    # pure-JAX elsewhere; interpret runs the fused kernels on CPU.
+    decode_backend: str = "auto"
 
     def esc_capacity(self, n: int) -> int:
         return max(n // self.esc_frac, 8)

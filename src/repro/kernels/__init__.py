@@ -4,8 +4,13 @@
   lexi_unpack       -- ingress decoder (bit-plane unpack + dict select-sum)
   exp_histogram     -- 256-bin exponent histogram via one MXU matmul
   decompress_matmul -- fused JIT weight decompression + MXU matmul
+  decode_attend     -- fused decompress+attend over the fixed-batch KV
+                       block store (ring fused as the final grid step)
+  decode_attend_paged -- the same through a scalar-prefetch page table
+                       (the continuous-batching serving decode path)
 
-``ops`` holds the jit'd public wrappers (auto interpret=True off-TPU);
+``ops`` holds the jit'd public wrappers plus the decode-attention backend
+dispatch (``resolve_decode_backend``: auto | pallas | interpret | jax);
 ``ref`` holds the pure-jnp oracles every kernel is tested against.
 """
 

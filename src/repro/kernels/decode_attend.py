@@ -1,24 +1,59 @@
-"""Pallas TPU kernel: decode attention over a LEXI-compressed KV cache.
+"""Pallas TPU kernels: decode attention over a LEXI-compressed KV cache.
 
-The paper's decode-phase story fused into one kernel: each grid step streams
-ONE compressed cache block HBM→VMEM ({sign·mantissa bytes, bit-plane packed
-exponent codes, 32-entry dictionary}), decodes it on the VPU, and runs one
-online-softmax attention step on the MXU — the decompressed block never
-touches HBM, so cache bandwidth is the packed size (the −16 % §Perf decode
-win executes HERE on real hardware).
+The paper's decode-phase story fused into one kernel family: each grid step
+streams ONE compressed cache block HBM→VMEM ({sign·mantissa bytes, bit-plane
+packed exponent codes, 2^k-entry dictionary, escape side channel}), decodes
+it on the VPU, and runs one online-softmax attention step on the MXU — the
+decompressed block never touches HBM, so cache bandwidth is the packed size
+(the −16 % §Perf decode win executes HERE on real hardware).
 
-    q        (B, H, hd)                      one decode token, full heads
-    signman  (nblk, B, blk, W) u8            W = 2*Hkv*hd (K‖V interleaved)
-    planes   (nblk, k, B*blk*W/32) u32
-    dicts    (nblk, 2^k) u8
-    valid    (nblk, blk) bool                live-slot mask (positions/window)
-    -> out   (B, H, hd) f32 unnormalized, m (B, H), l (B, H)
+Two entry points share the decode + attend body:
 
-Grid iterates cache blocks; the (out, m, l) partials accumulate in the
-output refs exactly like ``models.cache.attend_cache`` does in pure JAX —
-that function is this kernel's oracle (``ref.decode_attend_ref``).
-GQA mapping uses a static per-q-head kv index table (one-hot select-sum,
-no dynamic gather on the TPU path).
+``decode_attend``  — fixed-batch block store (``models.cache.KVBlocks``).
+    Blocks are indexed directly by the grid; all B sequences share one
+    traced ``length``.  Grid = (nblk + 1,): the final step attends over the
+    raw bf16 ring (the in-flight partial block) instead of a decoded block.
+
+``decode_attend_paged`` — paged store (``models.cache.PagedKV``), the
+    continuous-batching serving path.  **Page-table calling convention**:
+    the kernel reads through per-slot page-id indirection — ``page_ids``
+    (S, maxp + 1) int32 is a scalar-prefetch operand, and the BlockSpec
+    index_map of every compressed field is ``lambda s, i, pids, ...:
+    pids[s, i]``, so the DMA engine fetches slot ``s``'s ``i``-th page
+    directly from the page pool with no gather materialised in HBM.
+    Unmapped table entries must be clipped to a valid page id by the caller
+    (they are masked dead in-kernel); column ``maxp`` is the ring step and
+    its page id is ignored.  ``lengths`` (S,) holds per-slot token counts
+    (post-append); grid = (S, maxp + 1) with the page axis innermost, so
+    each slot's online-softmax accumulator lives in VMEM across its pages.
+
+Shared in-kernel features (exactly mirroring the pure-JAX oracle
+``models.cache`` scan path — see ``ref.decode_attend_ref`` /
+``ref.paged_decode_attend_ref``):
+
+* live-slot masking from lengths: shard ``ti`` owns interleaved global
+  positions {p : p % tp == ti}; a full block ``i`` is live iff
+  ``i < loc_len // blk``; the ring covers local slots
+  [nfull*blk, loc_len).
+* windowed attention: positions must satisfy ``pos > L - 1 - window``
+  (callers pass a huge sentinel for non-windowed layers, so the mask is
+  uniform data — no retrace per layer).
+* GQA/MQA head mapping via a static per-q-head kv index table (one-hot
+  select-sum, no dynamic gather on the TPU path).
+* MLA payloads (``mla_lora`` set): the block payload IS the shared latent —
+  every query head attends the same k = (blk, lora+rope); v = k[:, :lora].
+* logit soft-capping (gemma2) with the same op order as
+  ``layers.attention_partial``.
+* escape patching: the side channel stores (position-ordered) raw exponents
+  for codes == ESCAPE, so the kernel recovers them with a cumsum rank +
+  gather from the per-block ``esc_raw`` — bit-exact with
+  ``fixed.decompress`` whenever ``n_escapes <= C`` (and identical overflow
+  behaviour beyond: dict slot ESCAPE decodes as exponent 0).
+  [TPU note: the rank gather is `jnp.take` — validated in interpret mode;
+  the compiled TPU lowering may need a one-hot rewrite, see ROADMAP.]
+
+Outputs are unnormalised partials (out f32, m, l) — merge across shards
+with ``layers.merge_partials`` exactly like the pure-JAX path.
 """
 
 from __future__ import annotations
@@ -27,101 +62,350 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-LANES = 32
 NEG_INF = -2.0e38
+WINDOW_NONE = 1 << 30      # matches models.attention.GLOBAL_WINDOW
 
 
-def _kernel(q_ref, sm_ref, planes_ref, dict_ref, valid_ref,
-            out_ref, m_ref, l_ref, *, k: int, hkv: int, hd: int,
-            kv_idx: tuple, scale: float):
-    b, h, _ = q_ref.shape
-    blk = valid_ref.shape[-1]
-    w = 2 * hkv * hd
+def _iota(n: int) -> jax.Array:
+    """(n,) int32 iota via 2D broadcasted_iota (TPU needs >=2D)."""
+    return jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)[0]
 
-    # ---- decode the block: planes -> codes -> exponents -> bf16 ----------
-    words = planes_ref[0]                               # (k, n/32) u32
-    lane = jnp.arange(LANES, dtype=jnp.uint32)
-    codes = jnp.zeros(words.shape[1:] + (LANES,), jnp.uint32)
+
+# ---------------------------------------------------------------------------
+# shared kernel body pieces
+# ---------------------------------------------------------------------------
+
+def _decode_vals(sm_ref, planes_ref, dict_ref, esc_ref, shape, k: int):
+    """Decode one compressed block to bf16 ``shape`` (flat size n).
+
+    planes -> codes -> dictionary exponents -> escape patch -> bf16.
+    The bit-plane stream is padded to a multiple of 32 elements (pad codes
+    are 0, never ESCAPE); the tail is decoded and discarded.
+    """
+    n = 1
+    for d in shape:
+        n *= d
+    words = planes_ref[0]                               # (k, npad/32) u32
+    lane = jnp.arange(32, dtype=jnp.uint32)
+    codes = jnp.zeros(words.shape[1:] + (32,), jnp.uint32)
     for bit in range(k):                                # unrolled
         bits = (words[bit][:, None] >> lane) & jnp.uint32(1)
         codes = codes | (bits << jnp.uint32(bit))
-    codes = codes.reshape(b, blk, w)
+    codes = codes.reshape(-1)[:n]
     d = dict_ref[0]
-    exp = jnp.zeros((b, blk, w), jnp.uint16)
+    exp = jnp.zeros((n,), jnp.uint16)
     for j in range(d.shape[0]):                         # unrolled 2^k selects
         exp = jnp.where(codes == jnp.uint32(j), jnp.uint16(0) + d[j], exp)
-    smu = sm_ref[0].astype(jnp.uint16)                  # (b, blk, w)
-    u16 = ((smu & jnp.uint16(0x80)) << 8) | (exp << 7) | (smu & jnp.uint16(0x7F))
-    kv = jax.lax.bitcast_convert_type(u16, jnp.bfloat16)
-    kv = kv.reshape(b, blk, hkv, 2, hd)
-    kmat = kv[:, :, :, 0]                               # (b, blk, hkv, hd)
-    vmat = kv[:, :, :, 1]
+    # escape patch: side-channel entries are position-ordered, so the r-th
+    # escape element takes esc_raw[r]; beyond capacity the dict's ESCAPE
+    # slot (exponent 0) stands, matching fixed.decompress overflow.
+    esc_code = jnp.uint32((1 << k) - 1)
+    is_esc = codes == esc_code
+    rank = jnp.cumsum(is_esc.astype(jnp.int32)) - 1
+    esc_raw = esc_ref[0]                                # (C,) u8
+    c = esc_raw.shape[0]
+    patched = jnp.take(esc_raw, jnp.clip(rank, 0, c - 1)).astype(jnp.uint16)
+    exp = jnp.where(is_esc & (rank < c), patched, exp)
+    smu = sm_ref[0].reshape(n).astype(jnp.uint16)
+    u16 = ((smu & jnp.uint16(0x80)) << 8) | (exp << 7) \
+        | (smu & jnp.uint16(0x7F))
+    return jax.lax.bitcast_convert_type(u16, jnp.bfloat16).reshape(shape)
 
-    # ---- per-query-head kv select (static table, one-hot sum) ------------
-    # k_sel/v_sel: (b, blk, h, hd)
-    k_sel = jnp.zeros((b, blk, h, hd), jnp.bfloat16)
-    v_sel = jnp.zeros((b, blk, h, hd), jnp.bfloat16)
+
+def _split_heads(vals, h: int, hkv: int, hd: int, kv_idx, mla_lora):
+    """(..., blk, W) payload -> (k_sel, v_sel) per-query-head views.
+
+    GQA: W = 2*hkv*hd K‖V interleaved, static one-hot head table.
+    MLA: the latent is shared by all heads — k = vals, v = vals[..., :lora].
+    """
+    if mla_lora is not None:
+        return vals, vals[..., :mla_lora]
+    lead = vals.shape[:-2]
+    blk = vals.shape[-2]
+    kv = vals.reshape(lead + (blk, hkv, 2, hd))
+    kmat = kv[..., 0, :]                                # (..., blk, hkv, hd)
+    vmat = kv[..., 1, :]
+    k_sel = jnp.zeros(lead + (blk, h, hd), jnp.bfloat16)
+    v_sel = jnp.zeros(lead + (blk, h, hd), jnp.bfloat16)
     for qh, kh in enumerate(kv_idx):                    # unrolled h selects
-        k_sel = k_sel.at[:, :, qh].set(kmat[:, :, kh])
-        v_sel = v_sel.at[:, :, qh].set(vmat[:, :, kh])
+        k_sel = k_sel.at[..., qh, :].set(kmat[..., kh, :])
+        v_sel = v_sel.at[..., qh, :].set(vmat[..., kh, :])
+    return k_sel, v_sel
 
-    # ---- one online-softmax step over this block --------------------------
-    qv = q_ref[...]                                     # (b, h, hd)
-    s = jnp.einsum("bhd,bnhd->bhn", qv, k_sel,
-                   preferred_element_type=jnp.float32) * scale
-    ok = valid_ref[0]                                   # (b, blk)
-    s = jnp.where(ok[:, None, :], s, NEG_INF)
 
-    @pl.when(pl.program_id(0) == 0)
+def _block_partial(q, k_sel, v_sel, ok, scale, softcap, mla: bool):
+    """One block's attention partial, mirroring ``layers.attention_partial``.
+
+    q (B?, H, hd); k_sel/v_sel (B?, blk, [H,] hd); ok (B?, blk) bool.
+    Returns (po (B?, H, hd_v) f32, m (B?, H), l (B?, H)).
+    """
+    if mla:
+        s = jnp.einsum("...hd,...nd->...hn", q, k_sel,
+                       preferred_element_type=jnp.float32) * scale
+    else:
+        s = jnp.einsum("...hd,...nhd->...hn", q, k_sel,
+                       preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    okb = ok[..., None, :]                              # (B?, 1, blk)
+    s = jnp.where(okb, s, NEG_INF)
+    m = s.max(-1)
+    p = jnp.where(okb, jnp.exp(s - m[..., None]), 0.0)
+    l = p.sum(-1)
+    if mla:
+        po = jnp.einsum("...hn,...nd->...hd", p, v_sel.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+    else:
+        po = jnp.einsum("...hn,...nhd->...hd", p, v_sel.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+    return po, m, l
+
+
+def _accumulate(out_ref, m_ref, l_ref, po, pm, pl_, init_pred):
+    """Online-softmax merge of one partial into the output refs — the same
+    arithmetic as ``models.cache.merge_partial`` so backends agree."""
+    @pl.when(init_pred)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
     m_old = m_ref[...]
-    m_new = jnp.maximum(m_old, s.max(-1))
-    p = jnp.exp(s - m_new[..., None])
-    p = jnp.where(ok[:, None, :], p, 0.0)
-    alpha = jnp.exp(m_old - m_new)
-    l_ref[...] = l_ref[...] * alpha + p.sum(-1)
-    pv = jnp.einsum("bhn,bnhd->bhd", p, v_sel.astype(jnp.float32),
-                    preferred_element_type=jnp.float32)
-    out_ref[...] = out_ref[...] * alpha[..., None] + pv
+    m_new = jnp.maximum(m_old, pm)
+    a_old = jnp.exp(m_old - m_new)
+    a_new = jnp.exp(pm - m_new)
+    out_ref[...] = out_ref[...] * a_old[..., None] + po * a_new[..., None]
+    l_ref[...] = l_ref[...] * a_old + pl_ * a_new
     m_ref[...] = m_new
 
 
-@functools.partial(jax.jit, static_argnames=("k", "hkv", "hd", "kv_idx",
-                                             "scale", "interpret"))
-def decode_attend(q, signman, planes, dicts, valid, *, k: int, hkv: int,
-                  hd: int, kv_idx: tuple, scale: float,
-                  interpret: bool = True):
-    """Returns (out (B,H,hd) f32 unnormalized, m (B,H), l (B,H)) —
-    merge across shards with ``layers.merge_partials`` as usual."""
-    nblk, b, blk, w = signman.shape
-    h = q.shape[1]
-    return pl.pallas_call(
-        functools.partial(_kernel, k=k, hkv=hkv, hd=hd, kv_idx=kv_idx,
-                          scale=scale),
-        grid=(nblk,),
-        in_specs=[
-            pl.BlockSpec((b, h, hd), lambda i: (0, 0, 0)),
-            pl.BlockSpec((1, b, blk, w), lambda i: (i, 0, 0, 0)),
-            pl.BlockSpec((1, k, planes.shape[-1]), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, dicts.shape[-1]), lambda i: (i, 0)),
-            pl.BlockSpec((1, b, blk), lambda i: (i, 0, 0)),
-        ],
+def _live_masks(L, i, is_ring, blk: int, tp: int, ti, window):
+    """(blk,)-shaped live mask for block ``i`` / the ring, per slot.
+
+    L may be a scalar (fixed store) or the final axis broadcasts over it.
+    """
+    loc_len = jnp.maximum((L - 1 - ti) // tp + 1, 0)
+    nfull = loc_len // blk
+    sl = jnp.where(is_ring, nfull * blk, i * blk)[..., None] + _iota(blk)
+    pos = sl * tp + ti
+    ok = (pos < L[..., None]) & (pos > L[..., None] - 1 - window)
+    live = jnp.where(is_ring, sl < loc_len[..., None],
+                     i < nfull[..., None])
+    return ok & live
+
+
+# ---------------------------------------------------------------------------
+# fixed-batch store kernel
+# ---------------------------------------------------------------------------
+
+def _fixed_kernel(len_ref, meta_ref, q_ref, *rest, k: int, hkv: int, hd: int,
+                  kv_idx: tuple, scale: float, softcap, mla_lora, tp: int,
+                  blk: int, nblk: int, codec_on: bool):
+    if codec_on:
+        sm_ref, planes_ref, dict_ref, esc_ref, ring_ref = rest[:5]
+        out_ref, m_ref, l_ref = rest[5:]
+    else:
+        raw_ref, ring_ref = rest[:2]
+        out_ref, m_ref, l_ref = rest[2:]
+    b, h, _ = q_ref.shape
+    w = ring_ref.shape[-1]
+    i = pl.program_id(0)
+    is_ring = i == nblk
+    ti, window = meta_ref[0], meta_ref[1]
+    L = len_ref[0].reshape(())
+
+    if codec_on:
+        vals = _decode_vals(sm_ref, planes_ref, dict_ref, esc_ref,
+                            (b, blk, w), k)
+    else:
+        vals = raw_ref[0]
+    vals = jnp.where(is_ring, ring_ref[...], vals)      # (b, blk, w)
+
+    ok = _live_masks(L[None], i, is_ring, blk, tp, ti, window)  # (1, blk)
+    ok = jnp.broadcast_to(ok, (b, blk))
+    k_sel, v_sel = _split_heads(vals, h, hkv, hd, kv_idx, mla_lora)
+    po, pm, pl_ = _block_partial(q_ref[...], k_sel, v_sel, ok, scale,
+                                 softcap, mla_lora is not None)
+    _accumulate(out_ref, m_ref, l_ref, po, pm, pl_, i == 0)
+
+
+def decode_attend(q, signman, planes, dicts, esc_raw, raw_blocks, ring,
+                  length, ti, window, *, k: int, hkv: int, hd: int,
+                  kv_idx: tuple, scale: float, softcap=None, mla_lora=None,
+                  tp: int = 1, interpret: bool = True):
+    """Fused decompress+attend over a fixed-batch block store + its ring.
+
+    q (B, H, hd); codec on: signman (nblk, B*blk*W) u8, planes
+    (nblk, k, n/32) u32, dicts (nblk, 2^k) u8, esc_raw (nblk, C) u8;
+    codec off: raw_blocks (nblk, B, blk, W) bf16.  ring (B, blk, W) bf16;
+    length/ti/window are traced scalars.  Returns (out (B,H,hd_v) f32
+    unnormalized, m (B,H), l (B,H)) — merge across shards with
+    ``layers.merge_partials`` as usual.
+    """
+    codec_on = signman is not None
+    b, h, _ = q.shape
+    blk, w = ring.shape[-2], ring.shape[-1]
+    nblk = signman.shape[0] if codec_on else raw_blocks.shape[0]
+    hd_v = mla_lora if mla_lora is not None else hd
+    lens = jnp.asarray(length, jnp.int32).reshape(1)
+    meta = jnp.stack([jnp.asarray(ti, jnp.int32),
+                      jnp.asarray(window, jnp.int32)])
+
+    nsp = 2
+    if codec_on:
+        n = b * blk * w
+        in_specs = [
+            pl.BlockSpec((b, h, q.shape[-1]), lambda i, *s: (0, 0, 0)),
+            pl.BlockSpec((1, n), lambda i, *s: (jnp.minimum(i, nblk - 1), 0)),
+            pl.BlockSpec((1, k, planes.shape[-1]),
+                         lambda i, *s: (jnp.minimum(i, nblk - 1), 0, 0)),
+            pl.BlockSpec((1, dicts.shape[-1]),
+                         lambda i, *s: (jnp.minimum(i, nblk - 1), 0)),
+            pl.BlockSpec((1, esc_raw.shape[-1]),
+                         lambda i, *s: (jnp.minimum(i, nblk - 1), 0)),
+            pl.BlockSpec((b, blk, w), lambda i, *s: (0, 0, 0)),
+        ]
+        operands = (q, signman, planes, dicts, esc_raw, ring)
+    else:
+        in_specs = [
+            pl.BlockSpec((b, h, q.shape[-1]), lambda i, *s: (0, 0, 0)),
+            pl.BlockSpec((1, b, blk, w),
+                         lambda i, *s: (jnp.minimum(i, nblk - 1), 0, 0, 0)),
+            pl.BlockSpec((b, blk, w), lambda i, *s: (0, 0, 0)),
+        ]
+        operands = (q, raw_blocks, ring)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=nsp,
+        grid=(nblk + 1,),
+        in_specs=in_specs,
         out_specs=[
-            pl.BlockSpec((b, h, hd), lambda i: (0, 0, 0)),
-            pl.BlockSpec((b, h), lambda i: (0, 0)),
-            pl.BlockSpec((b, h), lambda i: (0, 0)),
-        ],
+            pl.BlockSpec((b, h, hd_v), lambda i, *s: (0, 0, 0)),
+            pl.BlockSpec((b, h), lambda i, *s: (0, 0)),
+            pl.BlockSpec((b, h), lambda i, *s: (0, 0)),
+        ])
+    kern = functools.partial(
+        _fixed_kernel, k=k, hkv=hkv, hd=hd, kv_idx=tuple(kv_idx),
+        scale=scale, softcap=softcap, mla_lora=mla_lora, tp=tp, blk=blk,
+        nblk=nblk, codec_on=codec_on)
+    return pl.pallas_call(
+        kern, grid_spec=grid_spec,
         out_shape=[
-            jax.ShapeDtypeStruct((b, h, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, hd_v), jnp.float32),
             jax.ShapeDtypeStruct((b, h), jnp.float32),
             jax.ShapeDtypeStruct((b, h), jnp.float32),
         ],
         interpret=interpret,
-    )(q, signman, planes, dicts, valid)
+    )(lens, meta, *operands)
+
+
+# ---------------------------------------------------------------------------
+# paged store kernel (continuous batching)
+# ---------------------------------------------------------------------------
+
+def _paged_kernel(pid_ref, len_ref, meta_ref, q_ref, *rest, k: int, hkv: int,
+                  hd: int, kv_idx: tuple, scale: float, softcap, mla_lora,
+                  tp: int, blk: int, maxp: int, codec_on: bool):
+    if codec_on:
+        sm_ref, planes_ref, dict_ref, esc_ref, ring_ref = rest[:5]
+        out_ref, m_ref, l_ref = rest[5:]
+    else:
+        raw_ref, ring_ref = rest[:2]
+        out_ref, m_ref, l_ref = rest[2:]
+    _, h, _ = q_ref.shape
+    w = ring_ref.shape[-1]
+    s = pl.program_id(0)
+    i = pl.program_id(1)
+    is_ring = i == maxp
+    ti, window = meta_ref[0], meta_ref[1]
+    L = len_ref[s].reshape(())
+
+    if codec_on:
+        vals = _decode_vals(sm_ref, planes_ref, dict_ref, esc_ref,
+                            (blk, w), k)
+    else:
+        vals = raw_ref[0]
+    vals = jnp.where(is_ring, ring_ref[0], vals)        # (blk, w)
+
+    ok = _live_masks(L[None], i, is_ring, blk, tp, ti, window)[0]  # (blk,)
+    k_sel, v_sel = _split_heads(vals, h, hkv, hd, kv_idx, mla_lora)
+    po, pm, pl_ = _block_partial(q_ref[0], k_sel, v_sel, ok, scale,
+                                 softcap, mla_lora is not None)
+    _accumulate(out_ref, m_ref, l_ref, po[None], pm[None], pl_[None],
+                i == 0)
+
+
+def decode_attend_paged(q, signman, planes, dicts, esc_raw, raw_pages, ring,
+                        page_ids, lengths, ti, window, *, k: int, hkv: int,
+                        hd: int, kv_idx: tuple, scale: float, softcap=None,
+                        mla_lora=None, tp: int = 1, interpret: bool = True):
+    """Fused decompress+attend through a page table (see module docstring).
+
+    q (S, H, hd); page pool fields have leading n_pages; ring (S, blk, W);
+    page_ids (S, maxp) int32 with unmapped entries ALREADY clipped to a
+    valid id (they are masked dead in-kernel); lengths (S,) post-append
+    token counts; ti/window traced scalars.  Returns per-slot partials
+    (out (S,H,hd_v) f32, m (S,H), l (S,H)).
+    """
+    codec_on = signman is not None
+    n_s, h, _ = q.shape
+    blk, w = ring.shape[-2], ring.shape[-1]
+    maxp = page_ids.shape[1]
+    hd_v = mla_lora if mla_lora is not None else hd
+    # column maxp = ring step (page id unused; any valid id keeps DMA legal)
+    pids = jnp.concatenate(
+        [page_ids, jnp.zeros((n_s, 1), jnp.int32)], axis=1)
+    lens = jnp.asarray(lengths, jnp.int32).reshape(n_s)
+    meta = jnp.stack([jnp.asarray(ti, jnp.int32),
+                      jnp.asarray(window, jnp.int32)])
+
+    if codec_on:
+        n = blk * w
+        in_specs = [
+            pl.BlockSpec((1, h, q.shape[-1]),
+                         lambda s, i, pid, *r: (s, 0, 0)),
+            pl.BlockSpec((1, n), lambda s, i, pid, *r: (pid[s, i], 0)),
+            pl.BlockSpec((1, k, planes.shape[-1]),
+                         lambda s, i, pid, *r: (pid[s, i], 0, 0)),
+            pl.BlockSpec((1, dicts.shape[-1]),
+                         lambda s, i, pid, *r: (pid[s, i], 0)),
+            pl.BlockSpec((1, esc_raw.shape[-1]),
+                         lambda s, i, pid, *r: (pid[s, i], 0)),
+            pl.BlockSpec((1, blk, w), lambda s, i, pid, *r: (s, 0, 0)),
+        ]
+        operands = (q, signman, planes, dicts, esc_raw, ring)
+    else:
+        in_specs = [
+            pl.BlockSpec((1, h, q.shape[-1]),
+                         lambda s, i, pid, *r: (s, 0, 0)),
+            pl.BlockSpec((1, blk, w),
+                         lambda s, i, pid, *r: (pid[s, i], 0, 0)),
+            pl.BlockSpec((1, blk, w), lambda s, i, pid, *r: (s, 0, 0)),
+        ]
+        operands = (q, raw_pages, ring)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(n_s, maxp + 1),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, h, hd_v), lambda s, i, *r: (s, 0, 0)),
+            pl.BlockSpec((1, h), lambda s, i, *r: (s, 0)),
+            pl.BlockSpec((1, h), lambda s, i, *r: (s, 0)),
+        ])
+    kern = functools.partial(
+        _paged_kernel, k=k, hkv=hkv, hd=hd, kv_idx=tuple(kv_idx),
+        scale=scale, softcap=softcap, mla_lora=mla_lora, tp=tp, blk=blk,
+        maxp=maxp, codec_on=codec_on)
+    return pl.pallas_call(
+        kern, grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n_s, h, hd_v), jnp.float32),
+            jax.ShapeDtypeStruct((n_s, h), jnp.float32),
+            jax.ShapeDtypeStruct((n_s, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pids, lens, meta, *operands)

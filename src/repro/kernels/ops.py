@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from repro.core import entropy as E
 from repro.core import fixed
 from . import ref
+from .decode_attend import (WINDOW_NONE, decode_attend,  # noqa: F401
+                            decode_attend_paged)
 from .decompress_matmul import decompress_matmul as _dm
 from .exp_histogram import exp_histogram as _hist
 from .lexi_pack import lexi_pack as _pack
@@ -32,6 +34,35 @@ def on_tpu() -> bool:
 
 def _interpret() -> bool:
     return not on_tpu()
+
+
+# ---------------------------------------------------------------------------
+# decode-attention backend dispatch
+#
+# ``CodecConfig.decode_backend`` selects how the serving decode path computes
+# cache attention; ``models.cache.attend_cache``/``attend_paged`` both route
+# through here so fixed-batch and paged decode cannot diverge:
+#
+#   auto      -- pallas on TPU, jax elsewhere (the only sane defaults)
+#   pallas    -- the fused decompress+attend kernels, compiled (TPU)
+#   interpret -- the same kernels under the Pallas interpreter (CPU testing:
+#                exercises the exact kernel logic, slowly)
+#   jax       -- the pure-JAX block/page scan (reference semantics)
+# ---------------------------------------------------------------------------
+
+DECODE_BACKENDS = ("auto", "pallas", "interpret", "jax")
+
+
+def resolve_decode_backend(codec=None) -> str:
+    """Resolve a CodecConfig's decode_backend to a concrete backend name."""
+    be = getattr(codec, "decode_backend", "auto") if codec is not None \
+        else "auto"
+    if be not in DECODE_BACKENDS:
+        raise ValueError(f"decode_backend must be one of {DECODE_BACKENDS}, "
+                         f"got {be!r}")
+    if be == "auto":
+        return "pallas" if on_tpu() else "jax"
+    return be
 
 
 def _blockify(x: jax.Array, block: int) -> Tuple[jax.Array, int]:

@@ -93,29 +93,96 @@ def compress_weight_2d(w: jax.Array, k: int = 6):
     return signman, planes, dict_syms, n_escapes
 
 
-def decode_attend_ref(q, blocks_bf16, valid, kv_idx, scale):
-    """Oracle for ``decode_attend``: q (B,H,hd); blocks (nblk,B,blk,2*Hkv*hd)
-    decompressed bf16; valid (nblk,blk).  Returns (out f32 unnorm, m, l)."""
-    nblk, b, blk, w = blocks_bf16.shape
-    h = q.shape[1]
-    hd = q.shape[-1]
+from .decode_attend import WINDOW_NONE  # one sentinel everywhere
+
+
+def _softmax_attend(q, k, v, ok, scale, softcap, mla: bool):
+    """Single-pass masked softmax attention (independent summation order
+    from the kernels' online accumulation — a true oracle).
+
+    q (B,H,hd); k/v (B,L,[H,]hd); ok (B,L).  Returns normalized (B,H,hd_v).
+    """
+    if mla:
+        s = jnp.einsum("bhd,bnd->bhn", q, k,
+                       preferred_element_type=jnp.float32) * scale
+    else:
+        s = jnp.einsum("bhd,bnhd->bhn", q, k,
+                       preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    s = jnp.where(ok[:, None, :], s, -2.0e38)
+    m = s.max(-1)
+    p = jnp.where(ok[:, None, :], jnp.exp(s - m[..., None]), 0.0)
+    l = jnp.maximum(p.sum(-1), 1e-30)
+    if mla:
+        out = jnp.einsum("bhn,bnd->bhd", p, v.astype(jnp.float32),
+                         preferred_element_type=jnp.float32)
+    else:
+        out = jnp.einsum("bhn,bnhd->bhd", p, v.astype(jnp.float32),
+                         preferred_element_type=jnp.float32)
+    return out / l[..., None]
+
+
+def _head_views(vals, kv_idx, hd, mla_lora):
+    """(B, L, W) payload -> per-head (k, v) for the oracle attention."""
+    if mla_lora is not None:
+        return vals, vals[..., :mla_lora]
+    b, L, w = vals.shape
     hkv = w // (2 * hd)
-    kv = blocks_bf16.reshape(nblk, b, blk, hkv, 2, hd)
+    kv = vals.reshape(b, L, hkv, 2, hd)
     kidx = jnp.asarray(kv_idx)
-    k = jnp.take(kv[:, :, :, :, 0], kidx, axis=3)   # (nblk,b,blk,h,hd)
-    v = jnp.take(kv[:, :, :, :, 1], kidx, axis=3)
-    s = jnp.einsum("bhd,nbkhd->nbhk", q, k,
-                   preferred_element_type=jnp.float32) * scale
-    s = jnp.where(valid[:, :, None, :], s, -2.0e38)
-    s2 = jnp.moveaxis(s, 0, 2).reshape(b, h, -1)    # (b,h,nblk*blk)
-    m = s2.max(-1)
-    p = jnp.exp(s2 - m[..., None])
-    msk = jnp.moveaxis(jnp.broadcast_to(valid[:, :, None, :],
-                                        (nblk, b, h, blk)), 0, 2
-                       ).reshape(b, h, -1)
-    p = jnp.where(msk, p, 0.0)
-    l = p.sum(-1)
-    v2 = jnp.moveaxis(v, 0, 1).reshape(b, -1, h, hd)   # (b, nblk*blk, h, hd)
-    out = jnp.einsum("bhk,bkhd->bhd", p, v2.astype(jnp.float32),
-                     preferred_element_type=jnp.float32)
-    return out, m, l
+    k = jnp.take(kv[..., 0, :], kidx, axis=2)       # (B, L, H, hd)
+    v = jnp.take(kv[..., 1, :], kidx, axis=2)
+    return k, v
+
+
+def decode_attend_ref(q, blocks_bf16, ring, length, *, kv_idx, scale,
+                      softcap=None, mla_lora=None, window=WINDOW_NONE,
+                      tp=1, ti=0):
+    """Oracle for ``decode_attend`` (fixed store): q (B,H,hd); blocks
+    (nblk,B,blk,W) decompressed bf16; ring (B,blk,W); length/ti python ints.
+    Returns the NORMALIZED single-shard attention (B,H,hd_v) f32 — compare
+    against the kernel's out/l."""
+    nblk, b, blk, w = blocks_bf16.shape
+    loc_len = max((length - 1 - ti) // tp + 1, 0)
+    nfull = loc_len // blk
+    vals = jnp.concatenate(
+        [jnp.moveaxis(blocks_bf16, 0, 1).reshape(b, nblk * blk, w), ring],
+        axis=1)
+    sl = jnp.concatenate([jnp.arange(nblk * blk),
+                          nfull * blk + jnp.arange(blk)])
+    live = jnp.concatenate([jnp.arange(nblk * blk) // blk < nfull,
+                            nfull * blk + jnp.arange(blk) < loc_len])
+    pos = sl * tp + ti
+    ok = live & (pos < length) & (pos > length - 1 - window)
+    k, v = _head_views(vals, kv_idx, q.shape[-1], mla_lora)
+    return _softmax_attend(q, k, v, jnp.broadcast_to(ok[None], (b, ok.size)),
+                           scale, softcap, mla_lora is not None)
+
+
+def paged_decode_attend_ref(q, pages_bf16, page_table, lengths, ring, *,
+                            kv_idx, scale, softcap=None, mla_lora=None,
+                            window=WINDOW_NONE, tp=1, ti=0):
+    """Oracle for ``decode_attend_paged``: q (S,H,hd); pages (P,blk,W)
+    decompressed bf16; page_table (S,maxp) int32 (-1 unmapped); lengths (S,)
+    ints; ring (S,blk,W).  Returns normalized (S,H,hd_v) f32."""
+    n_s, maxp = page_table.shape
+    _, blk, w = pages_bf16.shape
+    lengths = jnp.asarray(lengths, jnp.int32)
+    loc_len = jnp.maximum((lengths - 1 - ti) // tp + 1, 0)      # (S,)
+    nfull = loc_len // blk
+    gathered = pages_bf16[jnp.clip(page_table, 0, None)]        # (S,maxp,blk,W)
+    vals = jnp.concatenate([gathered.reshape(n_s, maxp * blk, w), ring],
+                           axis=1)
+    sl = jnp.concatenate(
+        [jnp.broadcast_to(jnp.arange(maxp * blk)[None], (n_s, maxp * blk)),
+         nfull[:, None] * blk + jnp.arange(blk)[None]], axis=1)
+    live = jnp.concatenate(
+        [jnp.arange(maxp * blk)[None] // blk < nfull[:, None],
+         nfull[:, None] * blk + jnp.arange(blk)[None] < loc_len[:, None]],
+        axis=1)
+    pos = sl * tp + ti
+    ok = live & (pos < lengths[:, None]) \
+        & (pos > lengths[:, None] - 1 - window)
+    k, v = _head_views(vals, kv_idx, q.shape[-1], mla_lora)
+    return _softmax_attend(q, k, v, ok, scale, softcap, mla_lora is not None)

@@ -44,14 +44,23 @@ def main(argv=None) -> int:
                     help="continuous mode: number of queued requests")
     ap.add_argument("--slots", type=int, default=4,
                     help="continuous mode: decode slots")
+    ap.add_argument("--decode-backend", default="auto",
+                    choices=["auto", "pallas", "interpret", "jax"],
+                    help="decode-attention backend (fused Pallas kernels "
+                         "vs pure-JAX scan)")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="continuous mode: evict a slot when it emits "
+                         "this token id")
     args = ap.parse_args(argv)
 
     d, m = (int(x) for x in args.mesh.split("x"))
     mesh_cfg = MeshConfig(data=d, model=m, pod=1)
     mesh = make_mesh_from_config(mesh_cfg)
+    import dataclasses
     codec = {"full": CodecConfig(cache_block=32),
              "weights": CodecConfig.weights_only(),
              "off": CodecConfig.off()}[args.codec]
+    codec = dataclasses.replace(codec, decode_backend=args.decode_backend)
     run = RunConfig(codec=codec)
     cfg = get_config(args.arch)
     if args.reduced:
@@ -115,11 +124,11 @@ def _serve_continuous(cfg, run, tp: int, args) -> int:
         run, cfg.vocab_size, tp, args.prompt_len, args.new_tokens,
         args.requests)
     eng = ServeEngine(cfg, run, tp=tp, n_slots=args.slots, max_len=max_len,
-                      seed=run.seed)
+                      seed=run.seed, eos_id=args.eos_id)
     results, st = eng.run(reqs)
     print("[serve] continuous:", format_stats(st))
     print("[serve] sample continuations:",
-          [r.tokens[:6] for r in results[:2]])
+          [(r.tokens[:6], r.stop_reason) for r in results[:2]])
     return 0
 
 

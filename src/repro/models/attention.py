@@ -27,12 +27,15 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, RunConfig
 from repro.core import collectives as cl
+from repro.kernels.decode_attend import WINDOW_NONE
 from . import layers
 from .layers import AttnSpec, apply_rope, pdot, rope_tables
 from .params import PDef
 
 
-GLOBAL_WINDOW = 1 << 30   # "no window" sentinel for traced per-layer windows
+# "no window" sentinel for traced per-layer windows — shared with the
+# decode kernels/cache masking so every window comparison uses one value.
+GLOBAL_WINDOW = WINDOW_NONE
 
 
 def kv_mode(cfg: ModelConfig, tp: int) -> str:

@@ -34,8 +34,11 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig, RunConfig
 from repro.core import fixed, packing
 from repro.core.collectives import CodecConfig
+from repro.kernels import ops as kops
 from . import layers
 from .ssm import SSMState
+
+WINDOW_NONE = kops.WINDOW_NONE     # "no window" sentinel (huge i32)
 
 
 class KVBlocks(NamedTuple):
@@ -186,6 +189,93 @@ def merge_partial(carry, po, pm, pl):
     return (out * a_old[..., None] + po * a_new[..., None],
             m_new, l * a_old + pl * a_new)
 
+
+# ---------------------------------------------------------------------------
+# decode attention: shared masking + streaming helpers and backend dispatch
+#
+# Both cache stores (fixed-batch blocks, paged pool) stream [compressed
+# blocks ‖ raw ring] with the same live-slot arithmetic; the per-block scan
+# body exists ONCE here (the "jax" backend), and the fused Pallas kernels
+# (``kernels.decode_attend``) implement identical semantics for the
+# pallas/interpret backends — selected via ``run.codec.decode_backend``
+# (see ``kernels.ops.resolve_decode_backend``).
+# ---------------------------------------------------------------------------
+
+
+def effective_window(spec: layers.AttnSpec, window):
+    """Traced window size with the huge-sentinel convention: masking is
+    always ``pos > L - 1 - window``, so non-windowed layers pass a value
+    no live position can fail."""
+    if spec.windowed and window is not None:
+        return jnp.asarray(window, jnp.int32)
+    return jnp.asarray(WINDOW_NONE, jnp.int32)
+
+
+def stream_mask(lengths, i, blk: int, tp: int, ti, window, ring: bool):
+    """Live mask (..., blk) for block ``i`` (or the ring) of the slot
+    stream.  ``lengths`` is () for the fixed store or (S,) for the paged
+    store; shard ``ti`` owns interleaved global positions p % tp == ti."""
+    lengths = jnp.asarray(lengths, jnp.int32)
+    loc_len = jnp.maximum((lengths - 1 - ti) // tp + 1, 0)
+    nfull = loc_len // blk
+    if ring:
+        sl = nfull[..., None] * blk + jnp.arange(blk)
+        live = sl < loc_len[..., None]
+    else:
+        sl = jnp.broadcast_to(i * blk + jnp.arange(blk),
+                              lengths.shape + (blk,))
+        live = jnp.broadcast_to((i < nfull)[..., None], sl.shape)
+    pos = sl * tp + ti
+    ok = (pos < lengths[..., None]) & (pos > lengths[..., None] - 1 - window)
+    return ok & live
+
+
+def gqa_head_table(cfg: ModelConfig, hq: int) -> tuple:
+    """Static per-query-head kv index table (pad heads clip onto the last
+    kv head) — must match ``split_kv_payload``'s dynamic take."""
+    import numpy as _np
+    g_real = max(cfg.n_heads // max(cfg.n_kv_heads, 1), 1)
+    return tuple(int(x) for x in
+                 _np.clip(_np.arange(hq) // g_real, 0, cfg.n_kv_heads - 1))
+
+
+def _attend_scan_jax(cfg, q, spec, hq, load_fn, n_steps, valid_fn,
+                     ring_kv, ring_ok):
+    """The ONE pure-JAX streaming-attention body: scan compressed blocks,
+    then the raw ring, with online-softmax partial merging."""
+    b = q.shape[0]
+    hd_v = (cfg.mla.kv_lora_rank if cfg.mla is not None else cfg.head_dim)
+
+    def scan_blk(carry, i):
+        k, v = split_kv_payload(cfg, load_fn(i), hq)
+        po, pm, pl = layers.attention_partial(q, k, v, valid_fn(i), spec)
+        return merge_partial(carry, po, pm, pl), None
+
+    init = (jnp.zeros((b, hq, 1, hd_v), jnp.float32),
+            jnp.full((b, hq, 1), layers.NEG_INF, jnp.float32),
+            jnp.zeros((b, hq, 1), jnp.float32))
+    (out, m, l), _ = jax.lax.scan(scan_blk, init, jnp.arange(n_steps))
+
+    kr, vr = split_kv_payload(cfg, ring_kv, hq)
+    po, pm, pl = layers.attention_partial(q, kr, vr, ring_ok, spec)
+    return merge_partial((out, m, l), po, pm, pl)
+
+
+def _kernel_statics(cfg: ModelConfig, run: RunConfig, q: jax.Array,
+                    spec: layers.AttnSpec):
+    """Static kwargs shared by both fused-kernel entry points."""
+    hq = q.shape[1]
+    hd = q.shape[-1]
+    return dict(
+        k=run.codec.k,
+        hkv=cfg.n_kv_heads,
+        hd=cfg.head_dim,
+        kv_idx=(() if cfg.mla is not None else gqa_head_table(cfg, hq)),
+        scale=(spec.scale if spec.scale is not None else hd ** -0.5),
+        softcap=spec.softcap,
+        mla_lora=(cfg.mla.kv_lora_rank if cfg.mla is not None else None))
+
+
 def append_token(cfg: ModelConfig, run: RunConfig, kv: KVBlocks,
                  new_vals: jax.Array, tp: int) -> KVBlocks:
     """Append one token's KV/latent (B, W) at global position kv.length.
@@ -218,61 +308,44 @@ def append_token(cfg: ModelConfig, run: RunConfig, kv: KVBlocks,
 
 def attend_cache(cfg: ModelConfig, run: RunConfig, kv: KVBlocks,
                  q: jax.Array, spec: layers.AttnSpec, tp: int,
-                 window=None, mla_ctx=None) -> jax.Array:
+                 window=None) -> jax.Array:
     """Decode attention: q (B,Hq,1,hd) FULL heads on every shard; streams
     this shard's compressed blocks + ring; merges across shards.
 
-    For MLA pass ``mla_ctx = (w_uk_full, w_uv_full ... )``?  No — MLA decode
-    uses the *absorbed* form and calls this with q already projected into
-    latent space (hd = lora+rope) and hd_v = lora; the caller then applies
-    the value up-projection.  ``kv_width`` matches in both cases.
+    MLA decode uses the *absorbed* form and calls this with q already
+    projected into latent space (hd = lora+rope) and hd_v = lora; the
+    caller then applies the value up-projection.
 
-    Returns (B,Hq,1,hd_v) bf16, fully normalized across shards.
+    The backend (fused Pallas kernel vs pure-JAX scan) comes from
+    ``run.codec.decode_backend``.  Returns (B,Hq,1,hd_v) bf16, fully
+    normalized across shards.
     """
     b, hq, _, _ = q.shape
     blk = run.codec.cache_block
     w = kv_width(cfg)
     ti = jax.lax.axis_index("model")
     length = kv.length
-    loc_len = jnp.maximum((length - 1 - ti) // tp + 1, 0)
-    nfull = loc_len // blk
+    win = effective_window(spec, window)
+    backend = kops.resolve_decode_backend(run.codec)
 
-    def valid_for(i0):
-        sl = i0 + jnp.arange(blk)
-        pos = sl * tp + ti
-        ok = pos < length
-        if spec.windowed and window is not None:
-            ok &= pos > (length - 1 - window)
-        return ok
+    if backend != "jax":
+        out, m, l = kops.decode_attend(
+            q[:, :, 0], kv.signman, kv.planes, kv.dict_syms, kv.esc_raw,
+            kv.raw_blocks, kv.ring, length, ti, win, tp=tp,
+            interpret=(backend == "interpret"),
+            **_kernel_statics(cfg, run, q, spec))
+        return layers.merge_partials(out[:, :, None, :], m[..., None],
+                                     l[..., None], "model")
 
     nblk = (kv.signman.shape[0] if run.codec.cache
             else kv.raw_blocks.shape[0])
-    hd_v = (cfg.mla.kv_lora_rank if cfg.mla is not None else cfg.head_dim)
-
-    def scan_blk(carry, i):
-        vals = load_block(kv, i, b, blk, w, run.codec)
-        ok = valid_for(i * blk) & (i < nfull)
-        k, v = split_kv_payload(cfg, vals, hq)
-        po, pm, pl = layers.attention_partial(
-            q, k, v, jnp.broadcast_to(ok[None], (b, blk)), spec)
-        return merge_partial(carry, po, pm, pl), None
-
-    init = (jnp.zeros((b, hq, 1, hd_v), jnp.float32),
-            jnp.full((b, hq, 1), layers.NEG_INF, jnp.float32),
-            jnp.zeros((b, hq, 1), jnp.float32))
-    (out, m, l), _ = jax.lax.scan(scan_blk, init, jnp.arange(nblk))
-
-    # ring (raw, partially filled): local slots [nfull*blk, loc_len)
-    sl_r = nfull * blk + jnp.arange(blk)
-    pos_r = sl_r * tp + ti
-    ok_r = (sl_r < loc_len) & (pos_r < length)
-    if spec.windowed and window is not None:
-        ok_r &= pos_r > (length - 1 - window)
-    kr, vr = split_kv_payload(cfg, kv.ring, hq)
-    po, pm, pl = layers.attention_partial(
-        q, kr, vr, jnp.broadcast_to(ok_r[None], (b, blk)), spec)
-    out, m, l = merge_partial((out, m, l), po, pm, pl)
-
+    load = lambda i: load_block(kv, i, b, blk, w, run.codec)
+    valid = lambda i: jnp.broadcast_to(
+        stream_mask(length, i, blk, tp, ti, win, ring=False)[None], (b, blk))
+    ring_ok = jnp.broadcast_to(
+        stream_mask(length, 0, blk, tp, ti, win, ring=True)[None], (b, blk))
+    out, m, l = _attend_scan_jax(cfg, q, spec, hq, load, nblk, valid,
+                                 kv.ring, ring_ok)
     return layers.merge_partials(out, m, l, "model")
 
 
@@ -456,43 +529,32 @@ def attend_paged(cfg: ModelConfig, run: RunConfig, pkv: PagedKV,
     shard; streams each slot's pages via its page table, then the rings;
     merges across shards.  ``lengths`` (S,) are post-append token counts.
 
-    Returns (S,Hq,1,hd_v) bf16, fully normalized across shards.
+    The backend (fused page-table Pallas kernel vs pure-JAX scan) comes
+    from ``run.codec.decode_backend``.  Returns (S,Hq,1,hd_v) bf16, fully
+    normalized across shards.
     """
     b, hq, _, _ = q.shape
     blk = run.codec.cache_block
     w = kv_width(cfg)
     ti = jax.lax.axis_index("model")
-    loc_len = jnp.maximum((lengths - 1 - ti) // tp + 1, 0)     # (S,)
-    nfull = loc_len // blk
     maxp = pkv.page_table.shape[1]
-    hd_v = (cfg.mla.kv_lora_rank if cfg.mla is not None else cfg.head_dim)
+    win = effective_window(spec, window)
+    backend = kops.resolve_decode_backend(run.codec)
 
-    def scan_blk(carry, i):
-        vals = load_pages(pkv, pkv.page_table[:, i], blk, w, run.codec)
-        sl = i * blk + jnp.arange(blk)
-        posb = sl * tp + ti                              # (blk,)
-        ok = (posb[None] < lengths[:, None]) & (i < nfull)[:, None]
-        if spec.windowed and window is not None:
-            ok &= posb[None] > (lengths[:, None] - 1 - window)
-        k, v = split_kv_payload(cfg, vals, hq)
-        po, pm, pl = layers.attention_partial(q, k, v, ok, spec)
-        return merge_partial(carry, po, pm, pl), None
+    if backend != "jax":
+        out, m, l = kops.decode_attend_paged(
+            q[:, :, 0], pkv.signman, pkv.planes, pkv.dict_syms, pkv.esc_raw,
+            pkv.raw_pages, pkv.ring, jnp.clip(pkv.page_table, 0, None),
+            lengths, ti, win, tp=tp, interpret=(backend == "interpret"),
+            **_kernel_statics(cfg, run, q, spec))
+        return layers.merge_partials(out[:, :, None, :], m[..., None],
+                                     l[..., None], "model")
 
-    init = (jnp.zeros((b, hq, 1, hd_v), jnp.float32),
-            jnp.full((b, hq, 1), layers.NEG_INF, jnp.float32),
-            jnp.zeros((b, hq, 1), jnp.float32))
-    (out, m, l), _ = jax.lax.scan(scan_blk, init, jnp.arange(maxp))
-
-    # rings (raw, partially filled): slot s covers [nfull_s*blk, loc_len_s)
-    sl_r = nfull[:, None] * blk + jnp.arange(blk)[None]       # (S, blk)
-    pos_r = sl_r * tp + ti
-    ok_r = (sl_r < loc_len[:, None]) & (pos_r < lengths[:, None])
-    if spec.windowed and window is not None:
-        ok_r &= pos_r > (lengths[:, None] - 1 - window)
-    kr, vr = split_kv_payload(cfg, pkv.ring, hq)
-    po, pm, pl = layers.attention_partial(q, kr, vr, ok_r, spec)
-    out, m, l = merge_partial((out, m, l), po, pm, pl)
-
+    load = lambda i: load_pages(pkv, pkv.page_table[:, i], blk, w, run.codec)
+    valid = lambda i: stream_mask(lengths, i, blk, tp, ti, win, ring=False)
+    ring_ok = stream_mask(lengths, 0, blk, tp, ti, win, ring=True)
+    out, m, l = _attend_scan_jax(cfg, q, spec, hq, load, maxp, valid,
+                                 pkv.ring, ring_ok)
     return layers.merge_partials(out, m, l, "model")
 
 
@@ -503,32 +565,43 @@ def paged_insert(cfg: ModelConfig, run: RunConfig, pkv: PagedKV,
     The compressed layout of a (1, blk, W) block equals a (blk, W) page
     byte-for-byte (same element count, same dictionary build), so full
     blocks transfer by array copy; the partial tail transfers as the ring.
-    ``seq_len`` must be a static multiple of tp, so every shard owns
-    exactly seq_len/tp slots and the full-block count is static.
+    ``seq_len`` is a static int but need NOT be a multiple of tp (prompt
+    bucketing): shards then own differing interleaved slot counts, so the
+    per-shard full-block count is traced and copies are masked via the
+    sentinel-drop scatter (a block beyond this shard's count is dropped).
     """
     blk = run.codec.cache_block
-    assert seq_len % tp == 0, (seq_len, tp)
-    nfull = (seq_len // tp) // blk
+    ti = jax.lax.axis_index("model")
+    loc_len = jnp.maximum((seq_len - 1 - ti) // tp + 1, 0)
+    nfull = loc_len // blk                           # traced (per shard)
+    nfull_max = (-(-seq_len // tp)) // blk           # static ceil bound
     maxp = pkv.page_table.shape[1]
-    assert nfull <= maxp, (nfull, maxp)
+    n_pages = pkv.page_used.shape[0]
+    assert nfull_max <= maxp, (nfull_max, maxp)
 
     pt_row = jnp.full((maxp,), -1, jnp.int32)
     used = pkv.page_used
     free_order = jnp.argsort(used)                   # free pages first
-    for i in range(nfull):                           # static, small
+    for i in range(nfull_max):                       # static, small
         page = free_order[i]
+        tgt = jnp.where(i < nfull, page, n_pages)    # sentinel drops
         if run.codec.cache:
             pkv = pkv._replace(
-                signman=pkv.signman.at[page].set(kvb.signman[i]),
-                planes=pkv.planes.at[page].set(kvb.planes[i]),
-                dict_syms=pkv.dict_syms.at[page].set(kvb.dict_syms[i]),
-                esc_pos=pkv.esc_pos.at[page].set(kvb.esc_pos[i]),
-                esc_raw=pkv.esc_raw.at[page].set(kvb.esc_raw[i]))
+                signman=pkv.signman.at[tgt].set(kvb.signman[i],
+                                                mode="drop"),
+                planes=pkv.planes.at[tgt].set(kvb.planes[i], mode="drop"),
+                dict_syms=pkv.dict_syms.at[tgt].set(kvb.dict_syms[i],
+                                                    mode="drop"),
+                esc_pos=pkv.esc_pos.at[tgt].set(kvb.esc_pos[i],
+                                                mode="drop"),
+                esc_raw=pkv.esc_raw.at[tgt].set(kvb.esc_raw[i],
+                                                mode="drop"))
         else:
             pkv = pkv._replace(
-                raw_pages=pkv.raw_pages.at[page].set(kvb.raw_blocks[i, 0]))
-        used = used.at[page].set(True)
-        pt_row = pt_row.at[i].set(page)
+                raw_pages=pkv.raw_pages.at[tgt].set(kvb.raw_blocks[i, 0],
+                                                    mode="drop"))
+        used = used.at[tgt].set(True, mode="drop")
+        pt_row = pt_row.at[i].set(jnp.where(i < nfull, page, -1))
     slot = jnp.asarray(slot, jnp.int32)
     pt = jax.lax.dynamic_update_index_in_dim(pkv.page_table, pt_row, slot, 0)
     ring = jax.lax.dynamic_update_index_in_dim(pkv.ring, kvb.ring[0], slot, 0)

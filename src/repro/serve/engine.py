@@ -585,7 +585,9 @@ def insert_sequence(cfg: ModelConfig, run: RunConfig, state: PagedState,
                     ) -> PagedState:
     """Insert a B=1 prefilled ``DecodeState`` into paged slot ``slot``.
 
-    ``seq_len`` (the prompt length) must be a static multiple of tp.  The
+    ``seq_len`` (the prompt length) is a static int — any length (prompt
+    bucketing replays the unaligned tail through decode steps before the
+    insert, so the store invariants hold for unaligned lengths too).  The
     slot must be free (its pages released); the caller tracks occupancy.
     """
     slot = jnp.asarray(slot, jnp.int32)

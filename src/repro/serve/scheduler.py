@@ -6,11 +6,17 @@ one ``PagedState``; ``RequestScheduler`` is the admission queue.  The loop:
 
     while work:
         admit   — pop queued requests into free slots: jitted prefill(B=1)
-                  → ``insert_sequence`` (compressed blocks copy into pages)
-        step    — one ``paged_decode_step`` for ALL slots (each at its own
-                  length), one greedy token per active slot
-        evict   — slots that hit their token budget release their pages
-                  (``release_slots``) and free up for the next admission
+                  on the floor-of-tp prompt trunk + exact decode-step
+                  replay of the (< tp) tail (prompt bucketing: any length
+                  >= tp admits) → ``insert_sequence`` (compressed blocks
+                  copy into pages)
+        step    — ONE dispatch runs K fused ``paged_decode_step``s as a
+                  ``lax.scan`` (K bounded by the earliest budget-finish
+                  event, so streams are byte-identical to stepping one
+                  token at a time), one greedy token per active slot/step
+        evict   — slots that hit their token budget or emit ``eos_id``
+                  release their pages (``release_slots``) at the window
+                  boundary and free up for the next admission
 
 Device state crosses jit boundaries as global arrays with one leading
 "model"-sharded axis per leaf (each shard's page pool / page table / ring
@@ -20,8 +26,8 @@ shard_map boundary.
 
 Constraints (documented, validated in ``submit``):
   * decoder-only families (dense / MoE / SSM / hybrid); no enc-dec.
-  * prompt lengths must be multiples of the model-parallel degree (the
-    sequence-sharded prefill trunk interleaves positions across shards).
+  * prompt lengths >= the model-parallel degree (any length admits via
+    bucketing; the sequence-sharded trunk needs one slot per shard).
   * prompt_len + max_new_tokens <= max_len (page-pool capacity).
 """
 
@@ -39,6 +45,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import MeshConfig, ModelConfig, RunConfig
 from repro.core import collectives as cl
+from repro.kernels import ops as kernel_ops
 from repro.models import cache as cache_mod
 from repro.models import lm, params as PM
 from . import engine
@@ -46,25 +53,29 @@ from . import engine
 
 @dataclasses.dataclass
 class Request:
-    """One generation request (greedy decoding, fixed token budget)."""
+    """One generation request (greedy decoding, token budget + optional
+    EOS).  ``eos_id`` overrides the engine-level default when set."""
     uid: int
-    prompt: np.ndarray               # (S,) int32, S % tp == 0
+    prompt: np.ndarray               # (S,) int32, S >= tp (any length)
     max_new_tokens: int
+    eos_id: Optional[int] = None
 
 
 @dataclasses.dataclass
 class RequestResult:
     uid: int
     prompt_len: int
-    tokens: List[int]                # generated tokens (len == max_new)
+    tokens: List[int]                # generated tokens (incl. EOS if hit)
     latency_s: float                 # admit (incl. own prefill) -> finish
+    stop_reason: str = "budget"      # budget | eos
 
 
 @dataclasses.dataclass
 class ServeStats:
     n_requests: int
     n_tokens: int
-    decode_steps: int
+    decode_steps: int                # total decode steps executed
+    n_dispatches: int                # device dispatches issuing those steps
     wall_s: float
     requests_per_s: float
     tokens_per_s: float
@@ -72,6 +83,9 @@ class ServeStats:
     peak_cache_bytes: int            # stored bytes of those pages
     peak_cache_raw_bytes: int        # bf16 bytes of the same pages
     mean_latency_s: float
+    latency_p50_s: float
+    latency_p95_s: float
+    decode_backend: str              # resolved pallas | interpret | jax
 
     @property
     def cache_ratio(self) -> float:
@@ -79,7 +93,13 @@ class ServeStats:
 
 
 class RequestScheduler:
-    """FIFO admission queue with capacity validation."""
+    """FIFO admission queue with capacity validation.
+
+    Prompt lengths need not be multiples of tp: admission buckets each
+    prompt to its floor multiple of tp for the sequence-sharded trunk and
+    replays the (< tp) leftover tokens through exact single-token decode
+    steps, so any length >= tp is accepted.
+    """
 
     def __init__(self, tp: int, max_len: int):
         self.tp = tp
@@ -88,10 +108,10 @@ class RequestScheduler:
 
     def submit(self, req: Request) -> None:
         s = len(req.prompt)
-        if s % self.tp != 0:
+        if s < self.tp:
             raise ValueError(
-                f"prompt length {s} must be a multiple of tp={self.tp} "
-                "(sequence-sharded prefill)")
+                f"prompt length {s} must be >= tp={self.tp} "
+                "(the sequence-sharded trunk needs one slot per shard)")
         if s + req.max_new_tokens > self.max_len:
             raise ValueError(
                 f"request needs {s + req.max_new_tokens} tokens > "
@@ -112,12 +132,17 @@ class ServeEngine:
 
     def __init__(self, cfg: ModelConfig, run: RunConfig, *, tp: int = 1,
                  n_slots: int = 4, max_len: int = 256, params=None,
-                 seed: int = 0):
+                 seed: int = 0, eos_id: Optional[int] = None,
+                 max_fuse_steps: int = 32):
         if cfg.encdec or cfg.frontend != "none":
             raise ValueError("continuous batching covers decoder-only, "
                              "text-frontend architectures")
+        if max_fuse_steps < 1:
+            raise ValueError("max_fuse_steps must be >= 1")
         self.cfg, self.run_cfg, self.tp = cfg, run, tp
         self.n_slots, self.max_len = n_slots, max_len
+        self.eos_id = eos_id
+        self.max_fuse_steps = max_fuse_steps
         mesh_cfg = MeshConfig(data=1, model=tp, pod=1)
         self.mesh = jax.make_mesh((1, tp), ("data", "model"))
         self.table = lm.lm_table(cfg, mesh_cfg, run)
@@ -134,10 +159,7 @@ class ServeEngine:
             lambda a: jnp.broadcast_to(a[None], (tp,) + a.shape), shard)
 
         self._admit_cache: Dict[int, object] = {}
-        self._decode = jax.jit(cl.shmap(
-            self._decode_fn, self.mesh,
-            (self._pspecs, self._sspec, P(None, None)),
-            (P(None, None), self._sspec)))
+        self._decode_cache: Dict[int, object] = {}
         self._release = jax.jit(cl.shmap(
             self._release_fn, self.mesh, (self._sspec, P(None)),
             self._sspec))
@@ -152,27 +174,74 @@ class ServeEngine:
     def _unsqueeze(st):
         return jax.tree_util.tree_map(lambda a: a[None], st)
 
-    def _decode_fn(self, pp, st_g, toks):
-        st = self._squeeze(st_g)
-        logits, st = engine.paged_decode_step(
-            self.cfg, self.run_cfg, pp, self.dims, st, toks, self.tp)
-        tok = engine.greedy_token(self.cfg, logits, self.tp)
-        return tok, self._unsqueeze(st)
-
     def _release_fn(self, st_g, mask):
         return self._unsqueeze(engine.release_slots(self._squeeze(st_g),
                                                     mask))
 
+    def _decode_for(self, n_steps: int):
+        """One jitted K-step fused decode per distinct K.
+
+        The K decode steps run as one ``lax.scan`` inside one dispatch, so
+        host overhead amortizes over K tokens; the scanned body is exactly
+        ``paged_decode_step`` + greedy, so the emitted (K, S, 1) token block
+        is byte-identical to K single-step dispatches.
+        """
+        fn = self._decode_cache.get(n_steps)
+        if fn is not None:
+            return fn
+
+        def decode(pp, st_g, toks):
+            st = self._squeeze(st_g)
+
+            def body(carry, _):
+                st_c, tok = carry
+                logits, st_c = engine.paged_decode_step(
+                    self.cfg, self.run_cfg, pp, self.dims, st_c, tok,
+                    self.tp)
+                tok = engine.greedy_token(self.cfg, logits, self.tp)
+                return (st_c, tok), tok
+
+            (st, _), seq = jax.lax.scan(body, (st, toks), None,
+                                        length=n_steps)
+            return seq, self._unsqueeze(st)
+
+        fn = jax.jit(cl.shmap(
+            decode, self.mesh,
+            (self._pspecs, self._sspec, P(None, None)),
+            (P(None, None, None), self._sspec)))
+        self._decode_cache[n_steps] = fn
+        return fn
+
+    def _fuse_steps(self, bound: int) -> int:
+        """Decode steps to fuse into the next dispatch: the largest power
+        of two <= the earliest slot-finish event (so eviction/admission
+        still happen at window boundaries and the jit cache stays at
+        O(log max_new_tokens) entries), capped by ``max_fuse_steps``."""
+        k = 1 << (max(bound, 1).bit_length() - 1)
+        return min(k, self.max_fuse_steps)
+
     def _admit_for(self, prompt_len: int):
-        """One jitted admit per distinct prompt length (static shapes)."""
+        """One jitted admit per distinct prompt length (static shapes).
+
+        Prompt bucketing: the sequence-sharded trunk runs on the floor
+        multiple of tp; the (< tp) leftover prompt tokens replay through
+        exact fixed-batch decode steps before the sequence is inserted —
+        identical numerics to an aligned prefill at every position, for
+        every architecture (attention, SSM, MoE), with no masking."""
         fn = self._admit_cache.get(prompt_len)
         if fn is not None:
             return fn
+        s0 = (prompt_len // self.tp) * self.tp
+        tail = prompt_len - s0
 
         def admit(pp, st_g, prompt, slot):
             st = self._squeeze(st_g)
             logits, d = engine.prefill(self.cfg, self.run_cfg, pp, self.dims,
-                                       prompt, self.max_len, self.tp)
+                                       prompt[:, :s0], self.max_len, self.tp)
+            for j in range(tail):                    # static, < tp
+                logits, d = engine.decode_step(
+                    self.cfg, self.run_cfg, pp, self.dims, d,
+                    prompt[:, s0 + j:s0 + j + 1], self.tp)
             tok = engine.greedy_token(self.cfg, logits, self.tp)
             st = engine.insert_sequence(self.cfg, self.run_cfg, st, d, slot,
                                         prompt_len, self.tp)
@@ -208,10 +277,23 @@ class ServeEngine:
 
     # -- the serving loop --------------------------------------------------
 
+    def _req_eos(self, req: Request) -> Optional[int]:
+        return req.eos_id if req.eos_id is not None else self.eos_id
+
     def run(self, requests: List[Request]
             ) -> Tuple[List[RequestResult], ServeStats]:
         """Serve a request list to completion; returns results in input
-        order plus engine-level stats."""
+        order plus engine-level stats.
+
+        Decode steps are fused: each dispatch runs K steps as one scan,
+        where K is bounded by the earliest slot-finish event computed
+        host-side from the known token budgets — so eviction and admission
+        still happen at window boundaries and token streams are
+        byte-identical to the one-dispatch-per-token loop.  An EOS inside a
+        window finishes that request at its EOS position (its slot idles
+        until the window ends; other slots are independent, so no stream
+        changes — only the eviction happens at the boundary).
+        """
         uids = [r.uid for r in requests]
         if len(set(uids)) != len(uids):
             raise ValueError("request uids must be unique (token streams "
@@ -219,12 +301,15 @@ class ServeEngine:
         for r in requests:
             self.scheduler.submit(r)
         slot_req: List[Optional[Request]] = [None] * self.n_slots
+        done = [False] * self.n_slots     # finished, awaiting eviction
+        reason = [""] * self.n_slots
         emitted: Dict[int, List[int]] = {}
         admit_t: Dict[int, float] = {}
         results: Dict[int, RequestResult] = {}
         cur = np.zeros((self.n_slots, 1), np.int32)
         slot_len = [0] * self.n_slots     # host mirror of cache lengths
         steps = 0
+        dispatches = 0
         peak_pages = 0
         stored_pb, raw_pb = cache_mod.page_bytes(self.cfg, self.run_cfg)
         t0 = time.perf_counter()
@@ -235,20 +320,28 @@ class ServeEngine:
                         for s, r in enumerate(slot_req) if r is not None)
             peak_pages = max(peak_pages, pages)
 
+        def check_done(s: int, req: Request) -> None:
+            toks = emitted[req.uid]
+            eos = self._req_eos(req)
+            if eos is not None and toks and toks[-1] == eos:
+                done[s], reason[s] = True, "eos"
+            elif len(toks) >= req.max_new_tokens:
+                done[s], reason[s] = True, "budget"
+
         def finish_ready():
-            nonlocal peak_pages
             mask = np.zeros((self.n_slots,), bool)
             for s, req in enumerate(slot_req):
-                if req is None:
+                if req is None or not done[s]:
                     continue
-                if len(emitted[req.uid]) >= req.max_new_tokens:
-                    now = time.perf_counter()
-                    results[req.uid] = RequestResult(
-                        uid=req.uid, prompt_len=len(req.prompt),
-                        tokens=emitted[req.uid][:req.max_new_tokens],
-                        latency_s=now - admit_t[req.uid])
-                    slot_req[s] = None
-                    mask[s] = True
+                now = time.perf_counter()
+                results[req.uid] = RequestResult(
+                    uid=req.uid, prompt_len=len(req.prompt),
+                    tokens=emitted[req.uid][:req.max_new_tokens],
+                    latency_s=now - admit_t[req.uid],
+                    stop_reason=reason[s])
+                slot_req[s] = None
+                done[s], reason[s] = False, ""
+                mask[s] = True
             if mask.any():
                 self.state = self._release(self.state, jnp.asarray(mask))
 
@@ -268,37 +361,51 @@ class ServeEngine:
                 cur[s] = t
                 slot_req[s] = req
                 slot_len[s] = len(req.prompt)
+                check_done(s, req)    # budget-1 / instant-EOS end at admit
             track_peak()
-            finish_ready()            # budget-1 requests end at admit
-            if not any(r is not None for r in slot_req):
+            finish_ready()
+            live = [s for s, r in enumerate(slot_req) if r is not None]
+            if not live:
                 continue
 
-            toks, self.state = self._decode(self.params, self.state,
-                                            jnp.asarray(cur))
-            steps += 1
-            toks = np.asarray(toks)
-            for s, req in enumerate(slot_req):
-                if req is None:
-                    continue
-                t = int(toks[s, 0])
-                emitted[req.uid].append(t)
-                cur[s] = t
-                slot_len[s] += 1          # the step appended one token
-            track_peak()
+            # one dispatch covers K steps; K bounded by the earliest finish
+            bound = min(slot_req[s].max_new_tokens - len(emitted[
+                slot_req[s].uid]) for s in live)
+            n_steps = self._fuse_steps(bound)
+            seq, self.state = self._decode_for(n_steps)(
+                self.params, self.state, jnp.asarray(cur))
+            steps += n_steps
+            dispatches += 1
+            seq = np.asarray(seq)                     # (K, n_slots, 1)
+            for t_i in range(n_steps):
+                for s in live:
+                    req = slot_req[s]
+                    slot_len[s] += 1  # device appends even past host-done
+                    if done[s]:
+                        continue
+                    t = int(seq[t_i, s, 0])
+                    emitted[req.uid].append(t)
+                    cur[s] = t
+                    check_done(s, req)
+                track_peak()
             finish_ready()
 
         wall = time.perf_counter() - t0
         n_tok = sum(len(r.tokens) for r in results.values())
-        lats = [r.latency_s for r in results.values()]
+        lats = sorted(r.latency_s for r in results.values())
+        pct = (lambda q: float(np.percentile(lats, q)) if lats else 0.0)
         stats = ServeStats(
             n_requests=len(results), n_tokens=n_tok, decode_steps=steps,
-            wall_s=wall,
+            n_dispatches=dispatches, wall_s=wall,
             requests_per_s=len(results) / max(wall, 1e-9),
             tokens_per_s=n_tok / max(wall, 1e-9),
             peak_pages=peak_pages,
             peak_cache_bytes=peak_pages * stored_pb,
             peak_cache_raw_bytes=peak_pages * raw_pb,
-            mean_latency_s=float(np.mean(lats)) if lats else 0.0)
+            mean_latency_s=float(np.mean(lats)) if lats else 0.0,
+            latency_p50_s=pct(50), latency_p95_s=pct(95),
+            decode_backend=kernel_ops.resolve_decode_backend(
+                self.run_cfg.codec))
         return [results[r.uid] for r in requests], stats
 
 
@@ -331,7 +438,8 @@ def demo_serving_setup(run: RunConfig, vocab_size: int, tp: int,
 
 def format_stats(st: ServeStats) -> str:
     """Two-line human summary of a serving run (demo output)."""
-    return (f"{st.n_requests} reqs, {st.decode_steps} decode steps, "
+    return (f"{st.n_requests} reqs, {st.decode_steps} decode steps in "
+            f"{st.n_dispatches} dispatches ({st.decode_backend} backend), "
             f"{st.requests_per_s:.2f} req/s, {st.tokens_per_s:.1f} tok/s "
             f"(incl. compile)\n"
             f"paged cache peak {st.peak_pages} pages: "

@@ -95,35 +95,157 @@ class TestDecompressMatmul:
         assert jnp.array_equal(out.astype(jnp.bfloat16), w)
 
 
+def _normalized(out, l):
+    return np.asarray(out) / np.maximum(np.asarray(l)[..., None], 1e-30)
+
+
 class TestDecodeAttend:
-    """Fused decompress+attend kernel vs the pure-jnp oracle."""
+    """Fused decompress+attend kernel (fixed store) vs the pure-jnp oracle.
+
+    The kernel computes masks in-kernel from (length, ti, window) and fuses
+    the raw ring as its final grid step, so the oracle receives the same
+    scalars and the comparison covers the whole decode-attention semantics.
+    """
 
     @pytest.mark.parametrize("cfg", [(2, 4, 2, 16, 3, 32),
                                      (1, 5, 1, 16, 2, 32),
                                      (2, 8, 4, 32, 2, 64)])
-    def test_matches_ref(self, cfg):
+    @pytest.mark.parametrize("codec_on", [True, False], ids=["codec", "raw"])
+    def test_matches_ref(self, cfg, codec_on):
         b, h, hkv, hd, nblk, blk = cfg
         from repro.core import fixed
-        from repro.kernels.decode_attend import decode_attend
+        from repro.kernels.decode_attend import WINDOW_NONE, decode_attend
         w = 2 * hkv * hd
         g = max(h // hkv, 1)
         kv_idx = tuple(min(i // g, hkv - 1) for i in range(h))
         scale = hd ** -0.5
         blocks = bf16((nblk, b, blk, w), 0.5)
-        valid = jnp.asarray(RNG.random((nblk, blk)) > 0.2)
-        valid = valid.at[0, 0].set(True)
-        cts = jax.vmap(lambda v: fixed.compress(v, k=5))(blocks)
-        assert int(cts.n_escapes.max()) == 0
+        ring = bf16((b, blk, w), 0.5)
+        length = (nblk - 1) * blk + blk // 2   # nblk-1 full blocks + ring
         q = bf16((b, h, hd), 1.0)
+        if codec_on:
+            cts = jax.vmap(lambda v: fixed.compress(v, k=5))(blocks)
+            args = (q, cts.signman.reshape(nblk, -1), cts.planes,
+                    cts.dict_syms, cts.esc_raw, None, ring)
+        else:
+            args = (q, None, None, None, None, blocks, ring)
+        out, m, l = decode_attend(*args, length, 0, WINDOW_NONE, k=5,
+                                  hkv=hkv, hd=hd, kv_idx=kv_idx, scale=scale,
+                                  tp=1, interpret=True)
+        want = ref.decode_attend_ref(q, blocks, ring, length, kv_idx=kv_idx,
+                                     scale=scale)
+        np.testing.assert_allclose(_normalized(out, l), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_windowed_and_sharded_positions(self):
+        b, h, hkv, hd, nblk, blk = 2, 4, 2, 16, 3, 8
+        from repro.core import fixed
+        from repro.kernels.decode_attend import decode_attend
+        w = 2 * hkv * hd
+        kv_idx = (0, 0, 1, 1)
+        scale = hd ** -0.5
+        blocks = bf16((nblk, b, blk, w), 0.5)
+        ring = bf16((b, blk, w), 0.5)
+        q = bf16((b, h, hd), 1.0)
+        cts = jax.vmap(lambda v: fixed.compress(v, k=5))(blocks)
+        for tp, ti, length, window in [(2, 0, 37, 11), (2, 1, 37, 11),
+                                       (4, 3, 61, 5)]:
+            out, m, l = decode_attend(
+                q, cts.signman.reshape(nblk, -1), cts.planes, cts.dict_syms,
+                cts.esc_raw, None, ring, length, ti, window, k=5, hkv=hkv,
+                hd=hd, kv_idx=kv_idx, scale=scale, tp=tp, interpret=True)
+            want = ref.decode_attend_ref(q, blocks, ring, length,
+                                         kv_idx=kv_idx, scale=scale,
+                                         window=window, tp=tp, ti=ti)
+            np.testing.assert_allclose(_normalized(out, l), np.asarray(want),
+                                       rtol=1e-4, atol=1e-4, err_msg=(tp, ti))
+
+    def test_escapes_patched_in_kernel(self):
+        """Values outside the k=4 dictionary recover via the side channel."""
+        b, h, hkv, hd, nblk, blk = 1, 4, 2, 16, 2, 8
+        from repro.core import fixed
+        from repro.kernels.decode_attend import WINDOW_NONE, decode_attend
+        w = 2 * hkv * hd
+        x = np.asarray(bf16((nblk, b, blk, w), 0.5), np.float32)
+        x[0, :, ::3, ::5] = RNG.uniform(1e28, 1e36, x[0, :, ::3, ::5].shape)
+        blocks = jnp.asarray(x).astype(jnp.bfloat16)
+        ring = bf16((b, blk, w), 0.5)
+        q = bf16((b, h, hd), 1.0)
+        cts = jax.vmap(lambda v: fixed.compress(v, k=4))(blocks)
+        assert int(cts.n_escapes.max()) > 0
         out, m, l = decode_attend(
-            q, cts.signman.reshape(nblk, b, blk, w), cts.planes,
-            cts.dict_syms, jnp.broadcast_to(valid[:, None], (nblk, b, blk)),
-            k=5, hkv=hkv, hd=hd, kv_idx=kv_idx, scale=scale)
-        ro, rm, rl = ref.decode_attend_ref(
-            q, blocks, jnp.broadcast_to(valid[:, None], (nblk, b, blk)),
-            kv_idx, scale)
-        np.testing.assert_allclose(np.asarray(m), np.asarray(rm), atol=1e-5)
-        np.testing.assert_allclose(np.asarray(l), np.asarray(rl),
-                                   rtol=1e-5, atol=1e-5)
-        np.testing.assert_allclose(np.asarray(out), np.asarray(ro),
+            q, cts.signman.reshape(nblk, -1), cts.planes, cts.dict_syms,
+            cts.esc_raw, None, ring, nblk * blk + 2, 0, WINDOW_NONE, k=4,
+            hkv=hkv, hd=hd, kv_idx=(0, 0, 1, 1), scale=hd ** -0.5, tp=1,
+            interpret=True)
+        want = ref.decode_attend_ref(q, blocks, ring, nblk * blk + 2,
+                                     kv_idx=(0, 0, 1, 1), scale=hd ** -0.5)
+        np.testing.assert_allclose(_normalized(out, l), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestDecodeAttendPaged:
+    """Page-table kernel vs the pure-jnp oracle: per-slot lengths, unmapped
+    pages, GQA vs MQA, windowed/full, codec on/off, MLA."""
+
+    @pytest.mark.parametrize("heads", [(4, 2), (5, 1), (8, 8)],
+                             ids=["gqa", "mqa", "mha"])
+    @pytest.mark.parametrize("codec_on", [True, False], ids=["codec", "raw"])
+    @pytest.mark.parametrize("window", [None, 9], ids=["full", "windowed"])
+    def test_matches_ref(self, heads, codec_on, window):
+        h, hkv = heads
+        hd, blk, n_s, maxp, n_pages = 16, 8, 3, 3, 9
+        from repro.core import fixed
+        from repro.kernels.decode_attend import (WINDOW_NONE,
+                                                 decode_attend_paged)
+        w = 2 * hkv * hd
+        g = max(h // hkv, 1)
+        kv_idx = tuple(min(i // g, hkv - 1) for i in range(h))
+        scale = hd ** -0.5
+        tp, ti = 2, 1
+        pages = bf16((n_pages, blk, w), 0.5)
+        ring = bf16((n_s, blk, w), 0.5)
+        pt = jnp.asarray(RNG.integers(0, n_pages, (n_s, maxp)), jnp.int32)
+        pt = pt.at[1, 1:].set(-1)                # short slot: unmapped tail
+        lengths = jnp.asarray([2 * blk * tp + 3, 2, maxp * blk * tp],
+                              jnp.int32)
+        q = bf16((n_s, h, hd), 1.0)
+        if codec_on:
+            cts = jax.vmap(lambda v: fixed.compress(v, k=5))(pages)
+            args = (q, cts.signman, cts.planes, cts.dict_syms, cts.esc_raw,
+                    None, ring)
+        else:
+            args = (q, None, None, None, None, pages, ring)
+        win = WINDOW_NONE if window is None else window
+        out, m, l = decode_attend_paged(
+            *args, jnp.clip(pt, 0, None), lengths, ti, win, k=5, hkv=hkv,
+            hd=hd, kv_idx=kv_idx, scale=scale, tp=tp, interpret=True)
+        want = ref.paged_decode_attend_ref(
+            q, pages, pt, lengths, ring, kv_idx=kv_idx, scale=scale,
+            window=win, tp=tp, ti=ti)
+        np.testing.assert_allclose(_normalized(out, l), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_mla_latent_payload(self):
+        lora, rope, h, blk, n_s, maxp, n_pages = 24, 8, 4, 8, 2, 2, 5
+        from repro.core import fixed
+        from repro.kernels.decode_attend import (WINDOW_NONE,
+                                                 decode_attend_paged)
+        w = lora + rope
+        pages = bf16((n_pages, blk, w), 0.5)
+        ring = bf16((n_s, blk, w), 0.5)
+        pt = jnp.asarray(RNG.integers(0, n_pages, (n_s, maxp)), jnp.int32)
+        lengths = jnp.asarray([blk + 3, 2 * blk], jnp.int32)
+        q = bf16((n_s, h, w), 1.0)
+        cts = jax.vmap(lambda v: fixed.compress(v, k=5))(pages)
+        out, m, l = decode_attend_paged(
+            q, cts.signman, cts.planes, cts.dict_syms, cts.esc_raw, None,
+            ring, jnp.clip(pt, 0, None), lengths, 0, WINDOW_NONE, k=5,
+            hkv=1, hd=w, kv_idx=(), scale=w ** -0.5, mla_lora=lora, tp=1,
+            interpret=True)
+        want = ref.paged_decode_attend_ref(
+            q, pages, pt, lengths, ring, kv_idx=(), scale=w ** -0.5,
+            mla_lora=lora, tp=1, ti=0)
+        assert out.shape == (n_s, h, lora)
+        np.testing.assert_allclose(_normalized(out, l), np.asarray(want),
                                    rtol=1e-4, atol=1e-4)

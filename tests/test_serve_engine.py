@@ -115,10 +115,15 @@ def test_pages_released_after_run():
 def test_scheduler_validation():
     cfg = CASES["dense"]
     eng = ServeEngine(cfg, _run_cfg(True), tp=TP, n_slots=2, max_len=MAXLEN)
-    bad_len = Request(uid=0, prompt=np.zeros((7,), np.int32),
-                      max_new_tokens=2)
-    with pytest.raises(ValueError):
-        eng.scheduler.submit(bad_len)
+    too_short = Request(uid=0, prompt=np.zeros((TP - 1,), np.int32),
+                        max_new_tokens=2)
+    with pytest.raises(ValueError, match=">= tp"):
+        eng.scheduler.submit(too_short)
+    unaligned = Request(uid=3, prompt=np.zeros((7,), np.int32),
+                        max_new_tokens=2)
+    eng.scheduler.submit(unaligned)      # bucketing: no % tp requirement
+    assert len(eng.scheduler) == 1
+    eng.scheduler.pop()
     too_long = Request(uid=1, prompt=np.zeros((60,), np.int32),
                        max_new_tokens=16)
     with pytest.raises(ValueError):
@@ -158,3 +163,133 @@ def test_page_bytes_accounting():
     assert stored < raw
     stored_off, raw_off = cache_mod.page_bytes(cfg, _run_cfg(False))
     assert stored_off == raw_off
+
+
+# ---------------------------------------------------------------------------
+# PR 2: fused multi-step decode, EOS termination, prompt bucketing,
+# decode-backend parity
+# ---------------------------------------------------------------------------
+
+TP2 = 2
+
+
+def _tp2_requests(n=3, max_new=6):
+    specs = [(8, max_new), (12, max_new - 1), (8, max_new)][:n]
+    return [Request(uid=i, prompt=RNG.integers(0, 500, (s,)).astype(np.int32),
+                    max_new_tokens=m) for i, (s, m) in enumerate(specs)]
+
+
+def test_multi_step_scan_token_identity():
+    """K-fused decode dispatches emit byte-identical streams to the
+    one-dispatch-per-token loop, with fewer dispatches than steps."""
+    cfg = CASES["dense"]
+    run = _run_cfg(True)
+    reqs = _tp2_requests()
+    fused = ServeEngine(cfg, run, tp=TP2, n_slots=2, max_len=MAXLEN, seed=1)
+    res_f, st_f = fused.run(reqs)
+    stepped = ServeEngine(cfg, run, tp=TP2, n_slots=2, max_len=MAXLEN,
+                          seed=1, max_fuse_steps=1)
+    res_s, st_s = stepped.run([Request(uid=r.uid, prompt=r.prompt,
+                                       max_new_tokens=r.max_new_tokens)
+                               for r in reqs])
+    for a, b in zip(res_f, res_s):
+        assert a.tokens == b.tokens, a.uid
+        assert a.stop_reason == b.stop_reason == "budget"
+    assert st_s.n_dispatches == st_s.decode_steps
+    assert st_f.n_dispatches < st_f.decode_steps    # >1 step per dispatch
+    assert st_f.decode_steps >= st_s.decode_steps   # window may overshoot EOS
+
+
+def test_eos_termination():
+    """A slot evicts on eos_id; the result reports the stop reason and the
+    stream is the budget-run prefix up to (and including) the EOS."""
+    cfg = CASES["dense"]
+    run = _run_cfg(True)
+    probe = ServeEngine(cfg, run, tp=TP2, n_slots=2, max_len=MAXLEN, seed=1)
+    reqs = _tp2_requests(n=1, max_new=6)
+    (full,), _ = probe.run(reqs)
+    assert full.stop_reason == "budget"
+    eos = full.tokens[2]                 # force a mid-stream stop
+    eng = ServeEngine(cfg, run, tp=TP2, n_slots=2, max_len=MAXLEN, seed=1,
+                      eos_id=eos)
+    (res,), _ = eng.run([Request(uid=9, prompt=reqs[0].prompt,
+                                 max_new_tokens=6)])
+    stop = full.tokens.index(eos)
+    assert res.stop_reason == "eos"
+    assert res.tokens == full.tokens[:stop + 1]
+    assert int(np.asarray(eng.state.active).sum()) == 0   # slot evicted
+    # per-request override beats the engine default (no EOS -> budget)
+    (res2,), _ = eng.run([Request(uid=10, prompt=reqs[0].prompt,
+                                  max_new_tokens=4, eos_id=-1)])
+    assert res2.stop_reason == "budget" and len(res2.tokens) == 4
+
+
+def test_prompt_bucketing_matches_trunk_tail_baseline():
+    """Unaligned prompts (len % tp != 0) admit and match the fixed-batch
+    trunk + per-token-tail reference exactly."""
+    cfg = CASES["dense"]
+    run = _run_cfg(True)
+    eng = ServeEngine(cfg, run, tp=TP2, n_slots=2, max_len=MAXLEN, seed=1)
+    reqs = [Request(uid=0, prompt=RNG.integers(0, 500, (9,)).astype(np.int32),
+                    max_new_tokens=4),
+            Request(uid=1, prompt=RNG.integers(0, 500, (13,)).astype(np.int32),
+                    max_new_tokens=3)]
+    results, stats = eng.run(reqs)
+    assert stats.n_requests == 2
+
+    mesh = jax.make_mesh((1, TP2), ("data", "model"))
+    mesh_cfg = MeshConfig(data=1, model=TP2, pod=1)
+    table = lm.lm_table(cfg, mesh_cfg, run)
+    dims = lm.lm_fsdp_dims(table)
+    pspecs = PM.param_pspecs(table)
+
+    def baseline(req):
+        s = len(req.prompt)
+        s0 = (s // TP2) * TP2
+
+        def f(pp, toks):
+            lg, st = engine.prefill(cfg, run, pp, dims, toks[:, :s0],
+                                    MAXLEN, TP2)
+            for j in range(s - s0):
+                lg, st = engine.decode_step(cfg, run, pp, dims, st,
+                                            toks[:, s0 + j:s0 + j + 1], TP2)
+            tok = engine.greedy_token(cfg, lg, TP2)
+            outs = [tok]
+            for _ in range(req.max_new_tokens - 1):
+                lg, st = engine.decode_step(cfg, run, pp, dims, st, tok, TP2)
+                tok = engine.greedy_token(cfg, lg, TP2)
+                outs.append(tok)
+            return jnp.concatenate(outs, axis=1)
+
+        fj = jax.jit(cl.shmap(f, mesh, (pspecs, P(None, None)),
+                              P(None, None)))
+        return np.asarray(fj(eng.params,
+                             jnp.asarray(req.prompt)[None]))[0].tolist()
+
+    for req, res in zip(reqs, results):
+        assert res.tokens == baseline(req), req.uid
+
+
+def test_interpret_backend_serving_token_identity():
+    """The fused-kernel decode path (Pallas interpret mode) serves token-
+    identical streams to the pure-JAX backend — the acceptance bar for
+    routing both stores through the kernels."""
+    import dataclasses
+    cfg = CASES["dense"]
+    run_jax = _run_cfg(True)
+    reqs = _tp2_requests(n=2, max_new=4)
+    eng_jax = ServeEngine(cfg, run_jax, tp=TP2, n_slots=2, max_len=MAXLEN,
+                          seed=1)
+    res_jax, st_jax = eng_jax.run(reqs)
+    assert st_jax.decode_backend == "jax"
+
+    run_k = dataclasses.replace(run_jax, codec=dataclasses.replace(
+        run_jax.codec, decode_backend="interpret"))
+    eng_k = ServeEngine(cfg, run_k, tp=TP2, n_slots=2, max_len=MAXLEN,
+                        seed=1)
+    res_k, st_k = eng_k.run([Request(uid=r.uid, prompt=r.prompt,
+                                     max_new_tokens=r.max_new_tokens)
+                             for r in reqs])
+    assert st_k.decode_backend == "interpret"
+    for a, b in zip(res_jax, res_k):
+        assert a.tokens == b.tokens, a.uid
