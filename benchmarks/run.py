@@ -180,22 +180,30 @@ def _repo_root():
     return pathlib.Path(__file__).resolve().parent.parent
 
 
+SMOKE = False   # set by --smoke: tiny single-scenario pass, no JSON writes
+
+
 def bench_serving() -> None:
     """Serving throughput: continuous batching over the paged LEXI cache.
 
-    Runs a fixed request stream (more requests than decode slots, mixed
-    prompt lengths) through ``repro.serve.ServeEngine`` for the cache codec
-    on/off x decode backend (pure-JAX scan vs the fused Pallas kernels in
-    interpret mode); reports requests/s, tokens/s, latency percentiles and
-    the peak paged-cache footprint (stored vs raw bytes) — the serving
-    analogue of Table 3's wire-byte accounting.  tp=1 so it runs on a
-    single host device.
+    Runs a SHARED-PREFIX request stream (more requests than decode slots,
+    mixed prompt lengths, duplicated/extended prompts) through
+    ``repro.serve.ServeEngine`` for the cache codec on/off x decode backend
+    (pure-JAX scan vs the fused Pallas kernels in interpret mode).  Each
+    scenario runs twice on the same engine: a COLD pass (includes every
+    jit compile) and a WARM pass (steady state, ``includes_compile:
+    false``) — plus a prefix-sharing-off comparison run per codec so the
+    page-memory win of sharing is recorded.  Reports requests/s, tokens/s,
+    latency percentiles, admission dispatch/compile counts, shared-page
+    hits and the peak paged-cache footprint (stored vs raw bytes) — the
+    serving analogue of Table 3's wire-byte accounting.  tp=1 so it runs
+    on a single host device.
 
-    Also writes machine-readable ``BENCH_serving.json`` at the repo root so
-    future PRs have a recorded perf baseline to regress against.  (Numbers
-    include jit compile time and, on CPU, the interpret backend measures
-    the Pallas *interpreter* — the cross-backend comparison is a
-    correctness/trajectory record, not a TPU roofline.)
+    Writes machine-readable ``BENCH_serving.json`` at the repo root so
+    future PRs have a recorded perf baseline to regress against (skipped
+    under --smoke).  (On CPU the interpret backend measures the Pallas
+    *interpreter* — the cross-backend comparison is a correctness/
+    trajectory record, not a TPU roofline.)
     """
     import dataclasses
     import json
@@ -207,51 +215,108 @@ def bench_serving() -> None:
                       n_heads=8, n_kv_heads=4, d_ff=128, vocab_size=512,
                       head_dim=16)
     rng = np.random.default_rng(0)
+    base_a = rng.integers(0, 512, (24,)).astype(np.int32)   # 3 page columns
+    base_b = rng.integers(0, 512, (16,)).astype(np.int32)
+    forked = np.concatenate([base_a[:16],
+                             rng.integers(0, 512, (8,)).astype(np.int32)])
+    n_req = 3 if SMOKE else 6
+
+    def make_reqs():
+        # duplicates + a prefix fork; budgets are STAGGERED so base_a's
+        # slot outlives its neighbours — the duplicate/fork admissions
+        # overlap base_a's residency and hit its live prefix pages
+        # (refcount-zero frees mean sharing needs concurrent residency)
+        prompts = [base_a, base_b, base_a, forked, base_b, base_a]
+        budgets = [12, 4, 10, 8, 4, 6]
+        return [Request(uid=i, prompt=prompts[i],
+                        max_new_tokens=budgets[i]) for i in range(n_req)]
+
+    def row(st, includes_compile: bool):
+        return {
+            "includes_compile": includes_compile,
+            "n_requests": st.n_requests, "n_tokens": st.n_tokens,
+            "decode_steps": st.decode_steps,
+            "n_dispatches": st.n_dispatches,
+            "n_admit_dispatches": st.n_admit_dispatches,
+            "n_replay_dispatches": st.n_replay_dispatches,
+            "n_admit_compiles": st.n_admit_compiles,
+            "shared_page_hits": st.shared_page_hits,
+            "wall_s": st.wall_s,
+            "requests_per_s": st.requests_per_s,
+            "tokens_per_s": st.tokens_per_s,
+            "latency_mean_ms": st.mean_latency_s * 1e3,
+            "latency_p50_ms": st.latency_p50_s * 1e3,
+            "latency_p95_ms": st.latency_p95_s * 1e3,
+            "peak_pages": st.peak_pages,
+            "peak_cache_bytes": st.peak_cache_bytes,
+            "peak_cache_raw_bytes": st.peak_cache_raw_bytes,
+        }
+
     scenarios = []
-    for label, codec in (
-            ("on", CodecConfig(cache_block=8)),
-            ("off", dataclasses.replace(CodecConfig.off(), cache_block=8))):
-        for backend in ("jax", "interpret"):
+    codecs = (("on", CodecConfig(cache_block=8)),
+              ("off", dataclasses.replace(CodecConfig.off(), cache_block=8)))
+    if SMOKE:
+        codecs = codecs[:1]
+    backends = ("jax",) if SMOKE else ("jax", "interpret")
+    for label, codec in codecs:
+        for backend in backends:
             run = RunConfig(codec=dataclasses.replace(
                 codec, decode_backend=backend))
             eng = ServeEngine(cfg, run, tp=1, n_slots=2, max_len=96, seed=1)
-            reqs = [Request(uid=i,
-                            prompt=rng.integers(0, 512,
-                                                (16 if i % 2 else 24,)
-                                                ).astype(np.int32),
-                            max_new_tokens=8)
-                    for i in range(6)]
+            reqs = make_reqs()
             results, st = eng.run(reqs)
-            assert all(len(r.tokens) == 8 for r in results)
-            emit(f"serving.continuous.codec_{label}.{backend}",
-                 st.wall_s * 1e6,
-                 f"req_s={st.requests_per_s:.2f} "
-                 f"tok_s={st.tokens_per_s:.1f} steps={st.decode_steps} "
-                 f"dispatches={st.n_dispatches} "
-                 f"p50_ms={st.latency_p50_s * 1e3:.0f} "
-                 f"p95_ms={st.latency_p95_s * 1e3:.0f} "
-                 f"peak_pages={st.peak_pages} "
-                 f"cache_kB={st.peak_cache_bytes / 1e3:.1f} "
-                 f"raw_kB={st.peak_cache_raw_bytes / 1e3:.1f} "
-                 f"ratio={st.cache_ratio:.2f}x")
+            assert all(len(r.tokens) == q.max_new_tokens
+                       for r, q in zip(results, reqs))
+            assert st.shared_page_hits > 0
+            assert st.n_admit_dispatches < st.n_requests
+            # warm pass: same engine, identical fresh requests -> steady
+            # state (no new compiles; admission fns are bucket-keyed)
+            results_w, st_w = eng.run(make_reqs())
+            assert st_w.n_admit_compiles == st.n_admit_compiles
+            assert [r.tokens for r in results_w] == \
+                   [r.tokens for r in results]
+            for tag, s in (("cold", st), ("warm", st_w)):
+                emit(f"serving.continuous.codec_{label}.{backend}.{tag}",
+                     s.wall_s * 1e6,
+                     f"req_s={s.requests_per_s:.2f} "
+                     f"tok_s={s.tokens_per_s:.1f} steps={s.decode_steps} "
+                     f"dispatches={s.n_dispatches} "
+                     f"admit={s.n_admit_dispatches}+{s.n_replay_dispatches}r "
+                     f"hits={s.shared_page_hits} "
+                     f"p50_ms={s.latency_p50_s * 1e3:.0f} "
+                     f"p95_ms={s.latency_p95_s * 1e3:.0f} "
+                     f"peak_pages={s.peak_pages} "
+                     f"cache_kB={s.peak_cache_bytes / 1e3:.1f} "
+                     f"raw_kB={s.peak_cache_raw_bytes / 1e3:.1f} "
+                     f"ratio={s.cache_ratio:.2f}x")
             scenarios.append({
                 "codec": label, "decode_backend": st.decode_backend,
-                "n_requests": st.n_requests, "n_tokens": st.n_tokens,
-                "decode_steps": st.decode_steps,
-                "n_dispatches": st.n_dispatches,
-                "wall_s": st.wall_s,
-                "requests_per_s": st.requests_per_s,
-                "tokens_per_s": st.tokens_per_s,
-                "latency_mean_ms": st.mean_latency_s * 1e3,
-                "latency_p50_ms": st.latency_p50_s * 1e3,
-                "latency_p95_ms": st.latency_p95_s * 1e3,
-                "peak_pages": st.peak_pages,
-                "peak_cache_bytes": st.peak_cache_bytes,
-                "peak_cache_raw_bytes": st.peak_cache_raw_bytes,
-            })
+                "cold": row(st, True), "warm": row(st_w, False)})
+
+        # prefix-sharing-off comparison (jax backend): same stream, no
+        # page sharing -> more admit prefills + higher page peak
+        run = RunConfig(codec=dataclasses.replace(codec,
+                                                  decode_backend="jax"))
+        eng_off = ServeEngine(cfg, run, tp=1, n_slots=2, max_len=96, seed=1,
+                              prefix_sharing=False)
+        results_o, st_o = eng_off.run(make_reqs())
+        assert [r.tokens for r in results_o] == [r.tokens for r in results]
+        assert st_o.shared_page_hits == 0
+        assert st.peak_cache_bytes < st_o.peak_cache_bytes
+        emit(f"serving.continuous.codec_{label}.no_sharing",
+             st_o.wall_s * 1e6,
+             f"admit={st_o.n_admit_dispatches} hits=0 "
+             f"peak_pages={st_o.peak_pages} "
+             f"cache_kB={st_o.peak_cache_bytes / 1e3:.1f}")
+        scenarios.append({
+            "codec": label, "decode_backend": "jax",
+            "prefix_sharing": False, "cold": row(st_o, True)})
+    if SMOKE:
+        emit("serving.smoke", 0.0, "smoke pass ok (no JSON written)")
+        return
     out = {"bench": "serving", "model": cfg.name,
            "jax_backend": __import__("jax").default_backend(),
-           "includes_compile": True, "scenarios": scenarios}
+           "scenarios": scenarios}
     path = _repo_root() / "BENCH_serving.json"
     path.write_text(json.dumps(out, indent=2) + "\n")
     emit("serving.json", 0.0, f"wrote {path.name} "
@@ -339,7 +404,12 @@ ALL = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fast pass (CI wiring check): shrinks the "
+                         "serving scenario and skips BENCH_*.json writes")
     args = ap.parse_args()
+    global SMOKE
+    SMOKE = args.smoke
     names = args.only.split(",") if args.only else list(ALL)
     print("name,us_per_call,derived")
     for n in names:

@@ -47,6 +47,8 @@ def main() -> int:
                          "continuous-batching engine")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="disable prefix-cache page sharing (continuous)")
     args = ap.parse_args()
 
     d, m = (int(x) for x in args.mesh.split("x"))
@@ -65,7 +67,8 @@ def main() -> int:
         run, max_len, reqs = demo_serving_setup(
             run, cfg.vocab_size, tp, S, N, args.requests)
         eng = ServeEngine(cfg, run, tp=tp, n_slots=args.slots,
-                          max_len=max_len, params=None, seed=0)
+                          max_len=max_len, params=None, seed=0,
+                          prefix_sharing=not args.no_prefix_sharing)
         results, st = eng.run(reqs)
         print("[serve] continuous:", format_stats(st))
         print("[serve] continuations[0][:10] =", results[0].tokens[:10])

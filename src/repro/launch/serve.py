@@ -51,6 +51,9 @@ def main(argv=None) -> int:
     ap.add_argument("--eos-id", type=int, default=None,
                     help="continuous mode: evict a slot when it emits "
                          "this token id")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="continuous mode: disable prefix-cache page "
+                         "sharing between requests")
     args = ap.parse_args(argv)
 
     d, m = (int(x) for x in args.mesh.split("x"))
@@ -124,7 +127,8 @@ def _serve_continuous(cfg, run, tp: int, args) -> int:
         run, cfg.vocab_size, tp, args.prompt_len, args.new_tokens,
         args.requests)
     eng = ServeEngine(cfg, run, tp=tp, n_slots=args.slots, max_len=max_len,
-                      seed=run.seed, eos_id=args.eos_id)
+                      seed=run.seed, eos_id=args.eos_id,
+                      prefix_sharing=not args.no_prefix_sharing)
     results, st = eng.run(reqs)
     print("[serve] continuous:", format_stats(st))
     print("[serve] sample continuations:",

@@ -377,6 +377,23 @@ class PagedKV(NamedTuple):
     """Per-layer, per-shard paged KV store (one sequence per slot).
 
     Page payload shape: (block, W); compressed fields have leading n_pages.
+
+    **Page lifecycle (refcount / copy-on-write convention).**  A page is
+    immutable once full: it is written exactly once (trunk insert via
+    ``paged_insert_many`` or a ring flush in ``append_token_paged``) and
+    never rewritten while ``page_used`` is set.  That immutability is what
+    makes prefix sharing safe: several slots' page-table rows may point at
+    the SAME page id (mapped by ``map_prefix_pages``), and the only mutable
+    per-sequence state — the partially filled tail block — lives in each
+    slot's private ``ring`` row, so "copy-on-write" is simply "the tail is
+    never shared" (a slot that outgrows a shared prefix flushes its ring
+    into a freshly allocated page, never into a shared one).  Reference
+    counts are HOST-side state (the serving scheduler owns them, keyed by
+    prefix content with per-shard page-id vectors, because page ids may
+    diverge across shards after unaligned releases); the device-side
+    contract is only: ``release_pages(..., free_mask)`` clears exactly the
+    pages the host decided hit refcount zero, while shared pages stay
+    ``page_used`` until their last referencing slot releases.
     """
     signman: Optional[jax.Array]    # (P, N) u8, N = block*W
     planes: Optional[jax.Array]     # (P, k, Npad/32) u32
@@ -558,62 +575,109 @@ def attend_paged(cfg: ModelConfig, run: RunConfig, pkv: PagedKV,
     return layers.merge_partials(out, m, l, "model")
 
 
-def paged_insert(cfg: ModelConfig, run: RunConfig, pkv: PagedKV,
-                 kvb: KVBlocks, slot, seq_len: int, tp: int) -> PagedKV:
-    """Copy a B=1 prefilled block store into paged slot ``slot``.
+def paged_insert_many(cfg: ModelConfig, run: RunConfig, pkv: PagedKV,
+                      kvb: KVBlocks, slots: jax.Array, seq_len: int,
+                      tp: int) -> PagedKV:
+    """Scatter ``B`` prefilled B=1 block stores into paged slots ``slots``.
 
-    The compressed layout of a (1, blk, W) block equals a (blk, W) page
-    byte-for-byte (same element count, same dictionary build), so full
-    blocks transfer by array copy; the partial tail transfers as the ring.
-    ``seq_len`` is a static int but need NOT be a multiple of tp (prompt
-    bucketing): shards then own differing interleaved slot counts, so the
-    per-shard full-block count is traced and copies are masked via the
-    sentinel-drop scatter (a block beyond this shard's count is dropped).
+    ``kvb`` is a stack of B independent B=1 fixed stores (leading batch
+    axis, as produced by a vmapped prefill): the compressed layout of a
+    (1, blk, W) block equals a (blk, W) page byte-for-byte (same element
+    count, same dictionary build), so full blocks transfer by one batched
+    array scatter; each partial tail transfers as that slot's ring row.
+
+    ``seq_len`` is a static int and MUST be a multiple of tp (the admission
+    trunk is bucket-aligned; unaligned leftovers replay through
+    ``append_token_paged`` afterwards), so every shard owns the same static
+    number of full blocks — which also keeps page-id allocation in lockstep
+    across shards for freshly admitted trunks.
     """
+    assert seq_len % tp == 0, (seq_len, tp)
     blk = run.codec.cache_block
-    ti = jax.lax.axis_index("model")
-    loc_len = jnp.maximum((seq_len - 1 - ti) // tp + 1, 0)
-    nfull = loc_len // blk                           # traced (per shard)
-    nfull_max = (-(-seq_len // tp)) // blk           # static ceil bound
+    nb = kvb.ring.shape[0]
+    nfull = (seq_len // tp) // blk                   # static, same per shard
     maxp = pkv.page_table.shape[1]
-    n_pages = pkv.page_used.shape[0]
-    assert nfull_max <= maxp, (nfull_max, maxp)
+    assert nfull <= maxp, (nfull, maxp)
 
-    pt_row = jnp.full((maxp,), -1, jnp.int32)
     used = pkv.page_used
-    free_order = jnp.argsort(used)                   # free pages first
-    for i in range(nfull_max):                       # static, small
-        page = free_order[i]
-        tgt = jnp.where(i < nfull, page, n_pages)    # sentinel drops
+    if nfull:
+        free_order = jnp.argsort(used)               # free pages first
+        pages = free_order[:nb * nfull].reshape(nb, nfull)
+        tgt = pages.reshape(-1)                      # distinct ids
         if run.codec.cache:
             pkv = pkv._replace(
-                signman=pkv.signman.at[tgt].set(kvb.signman[i],
-                                                mode="drop"),
-                planes=pkv.planes.at[tgt].set(kvb.planes[i], mode="drop"),
-                dict_syms=pkv.dict_syms.at[tgt].set(kvb.dict_syms[i],
-                                                    mode="drop"),
-                esc_pos=pkv.esc_pos.at[tgt].set(kvb.esc_pos[i],
-                                                mode="drop"),
-                esc_raw=pkv.esc_raw.at[tgt].set(kvb.esc_raw[i],
-                                                mode="drop"))
+                signman=pkv.signman.at[tgt].set(
+                    kvb.signman[:, :nfull].reshape((nb * nfull,) +
+                                                   pkv.signman.shape[1:])),
+                planes=pkv.planes.at[tgt].set(
+                    kvb.planes[:, :nfull].reshape((nb * nfull,) +
+                                                  pkv.planes.shape[1:])),
+                dict_syms=pkv.dict_syms.at[tgt].set(
+                    kvb.dict_syms[:, :nfull].reshape((nb * nfull,) +
+                                                     pkv.dict_syms.shape[1:])),
+                esc_pos=pkv.esc_pos.at[tgt].set(
+                    kvb.esc_pos[:, :nfull].reshape((nb * nfull,) +
+                                                   pkv.esc_pos.shape[1:])),
+                esc_raw=pkv.esc_raw.at[tgt].set(
+                    kvb.esc_raw[:, :nfull].reshape((nb * nfull,) +
+                                                   pkv.esc_raw.shape[1:])))
         else:
             pkv = pkv._replace(
-                raw_pages=pkv.raw_pages.at[tgt].set(kvb.raw_blocks[i, 0],
-                                                    mode="drop"))
-        used = used.at[tgt].set(True, mode="drop")
-        pt_row = pt_row.at[i].set(jnp.where(i < nfull, page, -1))
-    slot = jnp.asarray(slot, jnp.int32)
-    pt = jax.lax.dynamic_update_index_in_dim(pkv.page_table, pt_row, slot, 0)
-    ring = jax.lax.dynamic_update_index_in_dim(pkv.ring, kvb.ring[0], slot, 0)
+                raw_pages=pkv.raw_pages.at[tgt].set(
+                    kvb.raw_blocks[:, :nfull, 0].reshape(
+                        (nb * nfull,) + pkv.raw_pages.shape[1:])))
+        used = used.at[tgt].set(True)
+        rows = jnp.concatenate(
+            [pages, jnp.full((nb, maxp - nfull), -1, jnp.int32)], axis=1)
+    else:
+        rows = jnp.full((nb, maxp), -1, jnp.int32)
+    slots = jnp.asarray(slots, jnp.int32)
+    pt = pkv.page_table.at[slots].set(rows)
+    ring = pkv.ring.at[slots].set(kvb.ring[:, 0])
     return pkv._replace(page_table=pt, page_used=used, ring=ring)
 
 
-def release_pages(pkv: PagedKV, slots_mask: jax.Array) -> PagedKV:
-    """Free every page owned by masked slots and unmap their table rows."""
+def map_prefix_pages(pkv: PagedKV, slot, page_ids: jax.Array,
+                     n_cols) -> PagedKV:
+    """Map already-filled shared pages into slot ``slot``'s table row.
+
+    ``page_ids`` (maxp,) holds this shard's page ids for the matched full
+    prefix columns (entries beyond ``n_cols`` are ignored); the slot's ring
+    starts empty (the shared prefix is block-aligned; the tail is private —
+    see the PagedKV lifecycle note).  Zero data moves: sharing is pure
+    page-table indirection, the caller (host scheduler) owns the refcounts.
+    """
+    maxp = pkv.page_table.shape[1]
     n_pages = pkv.page_used.shape[0]
+    cols = jnp.arange(maxp)
+    n_cols = jnp.asarray(n_cols, jnp.int32)
+    row = jnp.where(cols < n_cols, page_ids, -1)
+    slot = jnp.asarray(slot, jnp.int32)
+    pt = jax.lax.dynamic_update_index_in_dim(pkv.page_table, row, slot, 0)
+    # shared pages are live already; the masked set is a no-op re-assert
+    tgt = jnp.where(cols < n_cols, page_ids, n_pages)
+    used = pkv.page_used.at[tgt].set(True, mode="drop")
+    ring = jax.lax.dynamic_update_index_in_dim(
+        pkv.ring, jnp.zeros_like(pkv.ring[0]), slot, 0)
+    return pkv._replace(page_table=pt, page_used=used, ring=ring)
+
+
+def release_pages(pkv: PagedKV, slots_mask: jax.Array,
+                  free_mask: Optional[jax.Array] = None) -> PagedKV:
+    """Unmap masked slots' table rows and free their pages.
+
+    ``free_mask`` None (no sharing): every page referenced by a masked row
+    is freed.  With prefix sharing the host passes ``free_mask`` (n_pages,)
+    bool — exactly the pages whose refcount hit zero — so pages still
+    referenced by other slots' rows stay ``page_used``.
+    """
     pt = pkv.page_table
-    owned = slots_mask[:, None] & (pt >= 0)
-    tgt = jnp.where(owned, pt, n_pages).reshape(-1)  # sentinel drops
-    used = pkv.page_used.at[tgt].set(False, mode="drop")
+    if free_mask is None:
+        n_pages = pkv.page_used.shape[0]
+        owned = slots_mask[:, None] & (pt >= 0)
+        tgt = jnp.where(owned, pt, n_pages).reshape(-1)  # sentinel drops
+        used = pkv.page_used.at[tgt].set(False, mode="drop")
+    else:
+        used = pkv.page_used & ~free_mask
     pt2 = jnp.where(slots_mask[:, None], -1, pt)
     return pkv._replace(page_table=pt2, page_used=used)

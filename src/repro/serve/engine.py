@@ -11,10 +11,14 @@ the dry-run shapes lower and what the correctness tests diff against.
 entry points here): a slot-based engine where each decode slot holds one
 independent request.  The scheduler dataflow is
 
-  request queue ──admit──▶ prefill (B=1 trunk, blocks LEXI-compressed
-                           layer-by-layer) ──▶ ``insert_sequence`` copies
-                           the compressed blocks into free pages of the
-                           ``PagedKV`` pool + the SSM state slot
+  request queue ──admit──▶ vmapped B=1 prefills, ONE dispatch per length
+                           bucket (blocks LEXI-compressed layer-by-layer,
+                           per sequence) ──▶ ``insert_sequences`` scatters
+                           each sequence's compressed blocks into its own
+                           page-table row + SSM state slot; prefix-cache
+                           hits skip prefill entirely (``map_shared_slot``)
+                           and unaligned tails replay per slot through
+                           ``paged_replay_steps``
         slots   ──step───▶ ``paged_decode_step``: every active slot appends
                            at its OWN length (per-slot rope, per-slot ring,
                            page allocation on block boundary) and attends
@@ -38,7 +42,6 @@ hybrid); enc-dec cross-attention memory stays on the fixed-batch path.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -580,37 +583,98 @@ def paged_decode_step(cfg: ModelConfig, run: RunConfig, params, dims,
                               active=state.active)
 
 
-def insert_sequence(cfg: ModelConfig, run: RunConfig, state: PagedState,
-                    d: DecodeState, slot, seq_len: int, tp: int
-                    ) -> PagedState:
-    """Insert a B=1 prefilled ``DecodeState`` into paged slot ``slot``.
+def insert_sequences(cfg: ModelConfig, run: RunConfig, state: PagedState,
+                     d: DecodeState, slots: jax.Array, seq_len: int, tp: int
+                     ) -> PagedState:
+    """Insert B prefilled B=1 ``DecodeState``s (stacked on a leading batch
+    axis, as a vmapped ``prefill`` produces) into paged slots ``slots``.
 
-    ``seq_len`` (the prompt length) is a static int — any length (prompt
-    bucketing replays the unaligned tail through decode steps before the
-    insert, so the store invariants hold for unaligned lengths too).  The
-    slot must be free (its pages released); the caller tracks occupancy.
+    ``seq_len`` is the shared static trunk length and must be a multiple of
+    tp (the admission bucket); unaligned prompt tails replay through
+    ``paged_replay_steps`` afterwards.  The slots must be free (their pages
+    released); the caller tracks occupancy.
     """
-    slot = jnp.asarray(slot, jnp.int32)
+    slots = jnp.asarray(slots, jnp.int32)
     kv = state.kv
     if kv is not None:
-        kv = jax.vmap(lambda pkv, kvb: cache_mod.paged_insert(
-            cfg, run, pkv, kvb, slot, seq_len, tp))(kv, d.kv)
+        # state.kv leaves are (L, ...), d.kv leaves (B, L, ...): map layers
+        kv = jax.vmap(lambda pkv, kvb: cache_mod.paged_insert_many(
+            cfg, run, pkv, kvb, slots, seq_len, tp),
+            in_axes=(0, 1))(kv, d.kv)
     ssm = state.ssm
     if ssm is not None:
         ssm = jax.tree_util.tree_map(
-            lambda a, b: jax.lax.dynamic_update_index_in_dim(
-                a, b[:, 0].astype(a.dtype), slot, 1), ssm, d.ssm)
+            lambda a, b: a.at[:, slots].set(
+                jnp.moveaxis(b[:, :, 0], 0, 1).astype(a.dtype)),
+            ssm, d.ssm)
     return PagedState(
         kv=kv, ssm=ssm,
-        lengths=state.lengths.at[slot].set(seq_len),
+        lengths=state.lengths.at[slots].set(seq_len),
+        active=state.active.at[slots].set(True))
+
+
+def map_shared_slot(state: PagedState, slot, page_ids: jax.Array,
+                    n_cols, base_len) -> PagedState:
+    """Admit a prefix-cache hit: map ``n_cols`` already-filled page columns
+    (per-shard ids ``page_ids`` (maxp,)) into ``slot``'s page-table rows of
+    every layer, with zero prefill FLOPs and zero page copies.  The slot
+    starts at ``base_len`` = n_cols * block * tp tokens; the prompt suffix
+    replays through ``paged_replay_steps``.  Pure-attention-only: recurrent
+    SSM state cannot be reconstructed from shared pages, and MoE/MLA decode
+    is not bit-equal to prefill for the replayed suffix, so the scheduler
+    never takes this path for those architectures.
+    """
+    assert state.ssm is None, "prefix sharing covers attention-only caches"
+    slot = jnp.asarray(slot, jnp.int32)
+    kv = jax.vmap(lambda pkv: cache_mod.map_prefix_pages(
+        pkv, slot, page_ids, n_cols))(state.kv)
+    return PagedState(
+        kv=kv, ssm=state.ssm,
+        lengths=state.lengths.at[slot].set(jnp.asarray(base_len, jnp.int32)),
         active=state.active.at[slot].set(True))
 
 
-def release_slots(state: PagedState, mask: jax.Array) -> PagedState:
-    """Evict finished sequences: free their pages, clear their slots."""
+def paged_replay_steps(cfg: ModelConfig, run: RunConfig, params, dims,
+                       state: PagedState, tokens: jax.Array,
+                       feed: jax.Array, tp: int
+                       ) -> Tuple[jax.Array, PagedState]:
+    """Replay K known tokens through the paged decode path, per slot.
+
+    ``tokens`` (K, n_slots, 1) are fed where ``feed`` (K, n_slots) is True;
+    non-fed slots (mid-decode neighbours, or replaying slots whose shorter
+    tail already finished) are masked inactive for that step, so their
+    cache/SSM state and lengths are untouched.  Returns the per-step greedy
+    tokens (K, n_slots, 1) — the scheduler reads slot s's first generated
+    token from the step that consumed s's last prompt token — plus the new
+    state.  Numerics per step are exactly ``paged_decode_step``; for PURE
+    ATTENTION that makes trunk prefill + replay bit-equal to a full
+    prefill, but MoE/SSM/MLA decode combines shard partials on a different
+    float path than their batched prefill (see ``scheduler._bucket_of``),
+    so for those the scheduler keeps in-prompt replays under tp tokens.
+    """
+    def body(st, xs):
+        tok, fd = xs
+        logits, st2 = paged_decode_step(
+            cfg, run, params, dims, st._replace(active=st.active & fd),
+            tok, tp)
+        return st2._replace(active=st.active), greedy_token(cfg, logits, tp)
+
+    state, seq = jax.lax.scan(body, state, (tokens, feed))
+    return seq, state
+
+
+def release_slots(state: PagedState, mask: jax.Array,
+                  free_mask: Optional[jax.Array] = None) -> PagedState:
+    """Evict finished sequences: free their pages, clear their slots.
+
+    With prefix sharing the host passes ``free_mask`` (n_pages,) — only
+    pages whose refcount hit zero are freed; shared pages survive in other
+    slots' page tables (see the ``PagedKV`` lifecycle note).
+    """
     kv = state.kv
     if kv is not None:
-        kv = jax.vmap(cache_mod.release_pages, in_axes=(0, None))(kv, mask)
+        kv = jax.vmap(cache_mod.release_pages,
+                      in_axes=(0, None, None))(kv, mask, free_mask)
     return PagedState(
         kv=kv, ssm=state.ssm,
         lengths=jnp.where(mask, 0, state.lengths),

@@ -5,18 +5,51 @@ cache (the serving half of the ROADMAP north star).
 one ``PagedState``; ``RequestScheduler`` is the admission queue.  The loop:
 
     while work:
-        admit   — pop queued requests into free slots: jitted prefill(B=1)
-                  on the floor-of-tp prompt trunk + exact decode-step
-                  replay of the (< tp) tail (prompt bucketing: any length
-                  >= tp admits) → ``insert_sequence`` (compressed blocks
-                  copy into pages)
+        admit   — a *batched, prefix-deduplicated fast path*:
+                  (a) queued requests whose prompt prefix matches full
+                      pages already in the cache map those pages into
+                      their page-table row (``map_shared_slot``) with ZERO
+                      prefill FLOPs and zero extra page memory — only the
+                      unmatched suffix replays;
+                  (b) remaining ("cold") requests are drained per length
+                      bucket and prefilled in ONE jitted dispatch — a
+                      vmapped B=1 ``engine.prefill`` over the bucket trunk
+                      feeding ``insert_sequences`` (per-sequence LEXI
+                      block compression is preserved bit-for-bit, so the
+                      blocks scatter straight into pages);
+                  (c) every admitted slot's leftover prompt tokens (trunk
+                      bucket tail or unmatched prefix suffix) replay
+                      per-slot through fused ``paged_replay_steps`` —
+                      exact numerics at every position.
         step    — ONE dispatch runs K fused ``paged_decode_step``s as a
                   ``lax.scan`` (K bounded by the earliest budget-finish
                   event, so streams are byte-identical to stepping one
                   token at a time), one greedy token per active slot/step
         evict   — slots that hit their token budget or emit ``eos_id``
                   release their pages (``release_slots``) at the window
-                  boundary and free up for the next admission
+                  boundary; with prefix sharing a page is freed only when
+                  its host-side refcount hits zero
+
+Admission compile count is bounded: admit functions are keyed by
+(trunk bucket, batch size) where trunk buckets are power-of-two multiples
+of tp — NOT by raw prompt length — so serving arbitrary length mixes
+compiles O(log(max_len/tp) * n_slots) admit functions total
+(``ServeStats.n_admit_compiles`` tracks it).  Exception: MoE / SSM / MLA
+architectures keep the maximal floor-of-tp trunk (see ``_bucket_of`` —
+their decode float path is not bit-equal to prefill, so in-prompt replay
+must stay under tp tokens to preserve the legacy-exact split).
+
+**Prefix sharing bookkeeping (host-side).**  Full pages are immutable
+once LEXI-FW-compressed, so sharing is pure page-table indirection.  The
+host owns a prefix index ``chained digest of the token prefix -> per-
+shard page-id vector`` (32-byte SHA-256 chain links, O(len) to build) plus a refcount per indexed prefix column; page ids are read
+back from the device page table at admit/release boundaries only (no
+per-token sync).  Ids are tracked per shard because unaligned releases
+can permanently permute the free-list order between shards.  Sharing is
+pure-attention-only — recurrent SSM state cannot be reconstructed from
+KV pages, and MoE/MLA decode is not bit-equal to prefill for the suffix
+replay — so those architectures auto-disable it (streams are unchanged
+either way; hits are simply zero).
 
 Device state crosses jit boundaries as global arrays with one leading
 "model"-sharded axis per leaf (each shard's page pool / page table / ring
@@ -34,6 +67,7 @@ Constraints (documented, validated in ``submit``):
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
 from collections import deque
 from typing import Dict, List, Optional, Tuple
@@ -76,6 +110,10 @@ class ServeStats:
     n_tokens: int
     decode_steps: int                # total decode steps executed
     n_dispatches: int                # device dispatches issuing those steps
+    n_admit_dispatches: int          # batched-prefill admit dispatches
+    n_replay_dispatches: int         # fused prompt-tail replay dispatches
+    n_admit_compiles: int            # distinct admit fns compiled (lifetime)
+    shared_page_hits: int            # prefix-index page columns mapped
     wall_s: float
     requests_per_s: float
     tokens_per_s: float
@@ -96,9 +134,11 @@ class RequestScheduler:
     """FIFO admission queue with capacity validation.
 
     Prompt lengths need not be multiples of tp: admission buckets each
-    prompt to its floor multiple of tp for the sequence-sharded trunk and
-    replays the (< tp) leftover tokens through exact single-token decode
-    steps, so any length >= tp is accepted.
+    prompt to a power-of-two-multiple-of-tp trunk and replays the leftover
+    tokens through exact paged decode steps, so any length >= tp is
+    accepted.  Same-bucket requests may admit ahead of a different-bucket
+    request queued earlier in the same admission round (bounded FIFO
+    deviation in exchange for one prefill dispatch per bucket).
     """
 
     def __init__(self, tp: int, max_len: int):
@@ -133,7 +173,7 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, run: RunConfig, *, tp: int = 1,
                  n_slots: int = 4, max_len: int = 256, params=None,
                  seed: int = 0, eos_id: Optional[int] = None,
-                 max_fuse_steps: int = 32):
+                 max_fuse_steps: int = 32, prefix_sharing: bool = True):
         if cfg.encdec or cfg.frontend != "none":
             raise ValueError("continuous batching covers decoder-only, "
                              "text-frontend architectures")
@@ -143,6 +183,14 @@ class ServeEngine:
         self.n_slots, self.max_len = n_slots, max_len
         self.eos_id = eos_id
         self.max_fuse_steps = max_fuse_steps
+        # sharing needs KV pages (attention), no recurrent state (the SSM
+        # state at a prefix boundary is not recoverable from pages), and a
+        # decode path that is bit-equal to prefill for in-prompt positions
+        # (the matched prefix skips prefill; the suffix replays through
+        # decode steps) — which rules out MoE / MLA too, see _bucket_of
+        self.prefix_sharing = bool(prefix_sharing and cfg.n_heads > 0
+                                   and cfg.ssm is None and cfg.moe is None
+                                   and cfg.mla is None)
         mesh_cfg = MeshConfig(data=1, model=tp, pod=1)
         self.mesh = jax.make_mesh((1, tp), ("data", "model"))
         self.table = lm.lm_table(cfg, mesh_cfg, run)
@@ -158,11 +206,29 @@ class ServeEngine:
         self.state = jax.tree_util.tree_map(
             lambda a: jnp.broadcast_to(a[None], (tp,) + a.shape), shard)
 
-        self._admit_cache: Dict[int, object] = {}
+        # tokens covered by one full page column (all shards' owned slots)
+        self.blk_tokens = run.codec.cache_block * tp
+        self._n_pages = (shard.kv.page_used.shape[-1]
+                         if shard.kv is not None else 0)
+        self._maxp = (shard.kv.page_table.shape[-1]
+                      if shard.kv is not None else 0)
+
+        # host-side page-lifecycle bookkeeping (see module docstring):
+        # prefix key = bytes of the token prefix covering cols 0..c
+        self._prefix_index: Dict[bytes, np.ndarray] = {}  # key -> (tp,) ids
+        self._prefix_ref: Dict[bytes, int] = {}           # key -> #slots
+        self._slot_keys: List[List[bytes]] = [[] for _ in range(n_slots)]
+        self._slot_busy = np.zeros((n_slots,), bool)
+
+        self.n_admit_compiles = 0
+        self._admit_cache: Dict[Tuple[int, int], object] = {}
         self._decode_cache: Dict[int, object] = {}
+        self._replay_cache: Dict[int, object] = {}
         self._release = jax.jit(cl.shmap(
             self._release_fn, self.mesh, (self._sspec, P(None)),
             self._sspec))
+        self._release_shared = None
+        self._map_shared = None
 
     # -- shard_map bodies --------------------------------------------------
 
@@ -177,6 +243,34 @@ class ServeEngine:
     def _release_fn(self, st_g, mask):
         return self._unsqueeze(engine.release_slots(self._squeeze(st_g),
                                                     mask))
+
+    def _release_shared_for(self):
+        """(state, slot_mask, free_mask (tp, P)) -> state; frees exactly
+        the pages the host refcounts said hit zero (per-shard masks)."""
+        if self._release_shared is None:
+            def rel(st_g, mask, free_g):
+                st = engine.release_slots(self._squeeze(st_g), mask,
+                                          free_mask=free_g[0])
+                return self._unsqueeze(st)
+
+            self._release_shared = jax.jit(cl.shmap(
+                rel, self.mesh, (self._sspec, P(None), P("model", None)),
+                self._sspec))
+        return self._release_shared
+
+    def _map_shared_for(self):
+        """(state, slot, ids (tp, maxp), n_cols, base_len) -> state."""
+        if self._map_shared is None:
+            def mp(st_g, slot, ids_g, n_cols, base_len):
+                st = engine.map_shared_slot(self._squeeze(st_g), slot,
+                                            ids_g[0], n_cols, base_len)
+                return self._unsqueeze(st)
+
+            self._map_shared = jax.jit(cl.shmap(
+                mp, self.mesh,
+                (self._sspec, P(), P("model", None), P(), P()),
+                self._sspec))
+        return self._map_shared
 
     def _decode_for(self, n_steps: int):
         """One jitted K-step fused decode per distinct K.
@@ -212,6 +306,28 @@ class ServeEngine:
         self._decode_cache[n_steps] = fn
         return fn
 
+    def _replay_for(self, n_steps: int):
+        """One jitted K-step fused prompt replay per distinct K (powers of
+        two, so the cache stays at O(log max prompt length) entries).
+        Feeds known tokens through ``paged_replay_steps`` with a per-step
+        per-slot feed mask — heterogeneous tail lengths replay together."""
+        fn = self._replay_cache.get(n_steps)
+        if fn is not None:
+            return fn
+
+        def replay(pp, st_g, toks, feed):
+            seq, st = engine.paged_replay_steps(
+                self.cfg, self.run_cfg, pp, self.dims, self._squeeze(st_g),
+                toks, feed, self.tp)
+            return seq, self._unsqueeze(st)
+
+        fn = jax.jit(cl.shmap(
+            replay, self.mesh,
+            (self._pspecs, self._sspec, P(None, None, None), P(None, None)),
+            (P(None, None, None), self._sspec)))
+        self._replay_cache[n_steps] = fn
+        return fn
+
     def _fuse_steps(self, bound: int) -> int:
         """Decode steps to fuse into the next dispatch: the largest power
         of two <= the earliest slot-finish event (so eviction/admission
@@ -220,39 +336,176 @@ class ServeEngine:
         k = 1 << (max(bound, 1).bit_length() - 1)
         return min(k, self.max_fuse_steps)
 
-    def _admit_for(self, prompt_len: int):
-        """One jitted admit per distinct prompt length (static shapes).
+    def _bucket_of(self, prompt_len: int) -> int:
+        """Trunk bucket: the largest power-of-two multiple of tp that fits
+        the prompt, for pure-attention architectures — leftover tokens
+        replay through paged decode steps that are bit-identical to the
+        prefill at the same positions, so bucketing never changes streams
+        while bounding the admit compile count at O(log(max_len/tp)).
 
-        Prompt bucketing: the sequence-sharded trunk runs on the floor
-        multiple of tp; the (< tp) leftover prompt tokens replay through
-        exact fixed-batch decode steps before the sequence is inserted —
-        identical numerics to an aligned prefill at every position, for
-        every architecture (attention, SSM, MoE), with no masking."""
-        fn = self._admit_cache.get(prompt_len)
+        Routed / recurrent layers (MoE, SSM, MLA absorbed-form decode)
+        combine shard partials on a different float path at decode than at
+        batched prefill (e.g. MoE decode psums bf16 per-shard partials
+        where prefill a2a-combines expert outputs in f32), so for them an
+        in-prompt replay step is NOT bit-equal to prefilling that position.
+        Those families keep the maximal floor-of-tp trunk (tail < tp, the
+        exact legacy admission split) — their admit compile count grows
+        with distinct aligned lengths, which is the price of exactness."""
+        c = self.cfg
+        exact = (prompt_len // self.tp) * self.tp
+        if c.moe is not None or c.ssm is not None or c.mla is not None:
+            return exact
+        b = self.tp
+        while b * 2 <= prompt_len:
+            b *= 2
+        return b
+
+    def _admit_for(self, trunk_len: int, n_batch: int):
+        """One jitted admit per (trunk bucket, batch size): a vmapped B=1
+        ``engine.prefill`` over the batch (per-sequence numerics AND
+        per-sequence LEXI block compression are bit-identical to separate
+        B=1 prefills — a true B>1 prefill would jointly compress blocks
+        across sequences and couple MoE capacity between them) feeding one
+        vectorized ``insert_sequences`` scatter."""
+        key = (trunk_len, n_batch)
+        fn = self._admit_cache.get(key)
         if fn is not None:
             return fn
-        s0 = (prompt_len // self.tp) * self.tp
-        tail = prompt_len - s0
 
-        def admit(pp, st_g, prompt, slot):
+        def admit(pp, st_g, prompts, slots):
             st = self._squeeze(st_g)
-            logits, d = engine.prefill(self.cfg, self.run_cfg, pp, self.dims,
-                                       prompt[:, :s0], self.max_len, self.tp)
-            for j in range(tail):                    # static, < tp
-                logits, d = engine.decode_step(
-                    self.cfg, self.run_cfg, pp, self.dims, d,
-                    prompt[:, s0 + j:s0 + j + 1], self.tp)
-            tok = engine.greedy_token(self.cfg, logits, self.tp)
-            st = engine.insert_sequence(self.cfg, self.run_cfg, st, d, slot,
-                                        prompt_len, self.tp)
-            return tok, self._unsqueeze(st)
+
+            def one(prompt):
+                logits, d = engine.prefill(
+                    self.cfg, self.run_cfg, pp, self.dims, prompt[None],
+                    self.max_len, self.tp)
+                return engine.greedy_token(self.cfg, logits, self.tp), d
+
+            toks, ds = jax.vmap(one)(prompts)
+            st = engine.insert_sequences(self.cfg, self.run_cfg, st, ds,
+                                         slots, trunk_len, self.tp)
+            return toks[:, 0], self._unsqueeze(st)
 
         fn = jax.jit(cl.shmap(
             admit, self.mesh,
-            (self._pspecs, self._sspec, P(None, None), P()),
+            (self._pspecs, self._sspec, P(None, None), P(None)),
             (P(None, None), self._sspec)))
-        self._admit_cache[prompt_len] = fn
+        self._admit_cache[key] = fn
+        self.n_admit_compiles += 1
         return fn
+
+    # -- prefix index ------------------------------------------------------
+
+    def _prefix_keys(self, prompt: np.ndarray, n_cols: int) -> List[bytes]:
+        """Chained content keys, one per full page column: key c digests
+        (key c-1 ‖ column c's tokens), so building all keys of a prompt is
+        O(len) total instead of O(len^2) for full-prefix bytes, and the
+        index holds 32-byte digests regardless of prompt length."""
+        bt = self.blk_tokens
+        keys: List[bytes] = []
+        h = b""
+        for c in range(n_cols):
+            blk = np.ascontiguousarray(prompt[c * bt:(c + 1) * bt],
+                                       dtype=np.int32).tobytes()
+            h = hashlib.sha256(h + blk).digest()
+            keys.append(h)
+        return keys
+
+    def _prefix_match_cols(self, prompt: np.ndarray
+                           ) -> Tuple[int, List[bytes]]:
+        """(matched column count, their index keys) for this prompt.
+
+        The longest run of leading full page columns present in the index,
+        capped so at least one suffix token remains to replay (the first
+        generated token needs logits from the last prompt position) — and
+        gated on replay cost: a match is only worth taking when the
+        unmatched suffix replay is no longer than the cold path's own
+        bucket-tail replay (plus at most one column), otherwise a shallow
+        hit on a long prompt (e.g. a shared short preamble) would trade one
+        batched prefill dispatch for a long per-token replay.  The matched
+        keys are returned so admission reuses them instead of re-hashing."""
+        if not self.prefix_sharing:
+            return 0, []
+        bt = self.blk_tokens
+        keys = self._prefix_keys(prompt, (len(prompt) - 1) // bt)
+        m = 0
+        while m < len(keys) and keys[m] in self._prefix_index:
+            m += 1
+        if m == 0:
+            return 0, []
+        suffix = len(prompt) - m * bt
+        cold_tail = len(prompt) - self._bucket_of(len(prompt))
+        if suffix > max(cold_tail, bt):
+            return 0, []
+        return m, keys[:m]
+
+    def _register_prefixes(self, slots_prompts) -> None:
+        """Index the freshly admitted slots' full page columns.
+
+        One small device read of the page tables per admission round (rows
+        are read per shard — ids may differ across shards, see module
+        docstring).  Already-indexed keys were mapped shared and counted at
+        map time; new keys start at refcount 1 (their owner slot).
+        """
+        if not self.prefix_sharing or not slots_prompts:
+            return
+        rows = np.asarray(self.state.kv.page_table)[:, 0]  # (tp, S, maxp)
+        for slot, prompt, length in slots_prompts:
+            keys = self._prefix_keys(prompt, length // self.blk_tokens)
+            for c, key in enumerate(keys):
+                if key in self._prefix_index:
+                    continue
+                ids = rows[:, slot, c].copy()
+                assert (ids >= 0).all(), (slot, c, ids)
+                self._prefix_index[key] = ids
+                self._prefix_ref[key] = 1
+                self._slot_keys[slot].append(key)
+
+    # -- slot release (refcounted) -----------------------------------------
+
+    def _free_slots(self, slots: List[int]) -> None:
+        """Evict ``slots``: decrement their prefix refcounts and free
+        exactly the pages that hit zero (all their pages when sharing is
+        off).  Double release is rejected loudly — freeing a slot that is
+        not occupied would hand its (possibly shared) pages back to the
+        allocator while another sequence still reads them."""
+        slots = [int(s) for s in slots]
+        for s in slots:
+            if not self._slot_busy[s]:
+                raise RuntimeError(
+                    f"double release: slot {s} is not occupied")
+        mask = np.zeros((self.n_slots,), bool)
+        mask[slots] = True
+        if not self.prefix_sharing or self.state.kv is None:
+            self.state = self._release(self.state, jnp.asarray(mask))
+        else:
+            rows = np.asarray(self.state.kv.page_table)[:, 0]  # (tp,S,maxp)
+            for s in slots:                       # 1) drop references
+                for key in self._slot_keys[s]:
+                    r = self._prefix_ref[key] - 1
+                    if r < 0:
+                        raise RuntimeError(f"prefix refcount underflow "
+                                           f"for slot {s}")
+                    self._prefix_ref[key] = r
+            free = np.zeros((self.tp, self._n_pages), bool)
+            for s in slots:                       # 2) free non-kept pages
+                for t in range(self.tp):
+                    keep = {int(self._prefix_index[key][t])
+                            for key in self._slot_keys[s]
+                            if self._prefix_ref[key] > 0}
+                    for p in rows[t, s]:
+                        if p >= 0 and int(p) not in keep:
+                            free[t, int(p)] = True
+            for s in slots:                       # 3) drop dead index keys
+                for key in self._slot_keys[s]:
+                    if key in self._prefix_ref and \
+                            self._prefix_ref[key] == 0:
+                        del self._prefix_ref[key]
+                        del self._prefix_index[key]
+                self._slot_keys[s] = []
+            self.state = self._release_shared_for()(
+                self.state, jnp.asarray(mask), jnp.asarray(free))
+        self._slot_busy[mask] = False
 
     # -- metrics -----------------------------------------------------------
 
@@ -268,6 +521,13 @@ class ServeEngine:
             max((length - 1 - t) // self.tp + 1, 0) // blk
             for t in range(self.tp))
         return per_shard * self.cfg.n_layers
+
+    def _shared_page_overcount(self) -> int:
+        """Pages counted multiple times by the per-slot sum because they
+        are prefix-shared: (ref - 1) per indexed column, in physical pages
+        (x tp shards x n_layers)."""
+        over = sum(max(r - 1, 0) for r in self._prefix_ref.values())
+        return over * self.tp * self.cfg.n_layers
 
     def _pages_in_use(self) -> int:
         """Device-truth page count (syncs; for tests/inspection only)."""
@@ -310,6 +570,9 @@ class ServeEngine:
         slot_len = [0] * self.n_slots     # host mirror of cache lengths
         steps = 0
         dispatches = 0
+        admit_dispatches = 0
+        replay_dispatches = 0
+        shared_hits = 0
         peak_pages = 0
         stored_pb, raw_pb = cache_mod.page_bytes(self.cfg, self.run_cfg)
         t0 = time.perf_counter()
@@ -318,6 +581,8 @@ class ServeEngine:
             nonlocal peak_pages
             pages = sum(self._pages_for_length(slot_len[s])
                         for s, r in enumerate(slot_req) if r is not None)
+            if self.prefix_sharing:
+                pages -= self._shared_page_overcount()
             peak_pages = max(peak_pages, pages)
 
         def check_done(s: int, req: Request) -> None:
@@ -329,7 +594,7 @@ class ServeEngine:
                 done[s], reason[s] = True, "budget"
 
         def finish_ready():
-            mask = np.zeros((self.n_slots,), bool)
+            freed = []
             for s, req in enumerate(slot_req):
                 if req is None or not done[s]:
                     continue
@@ -341,27 +606,165 @@ class ServeEngine:
                     stop_reason=reason[s])
                 slot_req[s] = None
                 done[s], reason[s] = False, ""
-                mask[s] = True
-            if mask.any():
-                self.state = self._release(self.state, jnp.asarray(mask))
+                freed.append(s)
+            if freed:
+                self._free_slots(freed)
+
+        def free_slot_ids():
+            return [s for s in range(self.n_slots) if slot_req[s] is None]
+
+        def admit_shared(s: int, req: Request, m: int,
+                         keys: List[bytes]) -> None:
+            """Prefix-cache hit: map m full columns, replay the suffix."""
+            nonlocal shared_hits
+            ids = np.zeros((self.tp, self._maxp), np.int32)
+            for c, key in enumerate(keys):
+                ids[:, c] = self._prefix_index[key]
+                self._prefix_ref[key] += 1
+                self._slot_keys[s].append(key)
+            base_len = m * self.blk_tokens
+            admit_t[req.uid] = time.perf_counter()
+            self.state = self._map_shared_for()(
+                self.state, jnp.asarray(s, jnp.int32), jnp.asarray(ids),
+                jnp.asarray(m, jnp.int32), jnp.asarray(base_len, jnp.int32))
+            shared_hits += m
+            slot_req[s] = req
+            self._slot_busy[s] = True
+            slot_len[s] = base_len
+            emitted[req.uid] = []
+
+        def admit_cold_batch(batch: List[Request], slots: List[int],
+                             trunk: int, replays) -> None:
+            """One vmapped-prefill dispatch admits the whole bucket."""
+            nonlocal admit_dispatches
+            fn = self._admit_for(trunk, len(batch))
+            prompts = np.stack([r.prompt[:trunk] for r in batch])
+            now = time.perf_counter()
+            for r in batch:
+                admit_t[r.uid] = now
+            toks, self.state = fn(self.params, self.state,
+                                  jnp.asarray(prompts, jnp.int32),
+                                  jnp.asarray(slots, jnp.int32))
+            admit_dispatches += 1
+            toks = np.asarray(toks)
+            for j, (req, s) in enumerate(zip(batch, slots)):
+                slot_req[s] = req
+                self._slot_busy[s] = True
+                slot_len[s] = trunk
+                tail = req.prompt[trunk:]
+                if len(tail):
+                    emitted[req.uid] = []
+                    replays.append((s, np.asarray(tail, np.int32)))
+                else:
+                    t = int(toks[j, 0])
+                    emitted[req.uid] = [t]
+                    cur[s] = t
+                    check_done(s, req)
+
+        def run_replays(replays) -> None:
+            """Feed all admitted slots' leftover prompt tokens through
+            fused paged replay dispatches (heterogeneous lengths share the
+            dispatch via the feed mask); each slot's first generated token
+            comes from the step consuming its last prompt token."""
+            nonlocal replay_dispatches
+            rem = {s: tail for s, tail in replays}
+            off = {s: 0 for s in rem}
+            while rem:
+                longest = max(len(rem[s]) - off[s] for s in rem)
+                k = self._fuse_steps(longest)   # same policy as decode
+                toks = np.zeros((k, self.n_slots, 1), np.int32)
+                feed = np.zeros((k, self.n_slots), bool)
+                for s in rem:
+                    t_s = rem[s][off[s]:off[s] + k]
+                    toks[:len(t_s), s, 0] = t_s
+                    feed[:len(t_s), s] = True
+                seq, self.state = self._replay_for(k)(
+                    self.params, self.state, jnp.asarray(toks),
+                    jnp.asarray(feed))
+                replay_dispatches += 1
+                seq = np.asarray(seq)
+                for s in list(rem):
+                    n_fed = min(k, len(rem[s]) - off[s])
+                    off[s] += n_fed
+                    slot_len[s] += n_fed
+                    if off[s] == len(rem[s]):
+                        req = slot_req[s]
+                        t = int(seq[n_fed - 1, s, 0])
+                        emitted[req.uid] = [t]
+                        cur[s] = t
+                        check_done(s, req)
+                        del rem[s]
+                track_peak()
+
+        def admit_phase() -> None:
+            """Admit until slots or admissible requests run out: shared
+            prefix hits first (queue order), then one batched cold
+            dispatch per length bucket; finally replay leftover prompt
+            tokens and index the new slots' full columns."""
+            replays = []
+            new_slots = []
+            blocked = set()       # first-column keys cold-admitted now
+            progress = True
+            while progress:
+                progress = False
+                free = free_slot_ids()
+                if not free or not len(self.scheduler):
+                    break
+                if self.prefix_sharing:       # pass A: prefix-cache hits
+                    rest = deque()
+                    q = self.scheduler.queue
+                    while q and free:
+                        req = q.popleft()
+                        m, mkeys = self._prefix_match_cols(req.prompt)
+                        if m >= 1:
+                            s = free.pop(0)
+                            admit_shared(s, req, m, mkeys)
+                            replays.append(
+                                (s, np.asarray(req.prompt[m * self.blk_tokens:],
+                                               np.int32)))
+                            new_slots.append(s)
+                            progress = True
+                        else:
+                            rest.append(req)
+                    while rest:
+                        q.appendleft(rest.pop())
+                free = free_slot_ids()
+                if free and len(self.scheduler):  # pass B: one cold bucket
+                    batch: List[Request] = []
+                    rest = deque()
+                    bucket = None
+                    q = self.scheduler.queue
+                    while q:
+                        req = q.popleft()
+                        b = self._bucket_of(len(req.prompt))
+                        fk = (self._prefix_keys(req.prompt, 1)[0]
+                              if self.prefix_sharing and
+                              len(req.prompt) > self.blk_tokens else None)
+                        ok = len(batch) < len(free)
+                        if ok and fk is not None and fk in blocked:
+                            ok = False    # dedupe: hits the index next round
+                        if ok and bucket is not None and b != bucket:
+                            ok = False
+                        if ok:
+                            bucket = b
+                            batch.append(req)
+                            if fk is not None:
+                                blocked.add(fk)
+                        else:
+                            rest.append(req)
+                    while rest:
+                        q.appendleft(rest.pop())
+                    if batch:
+                        slots = free[:len(batch)]
+                        admit_cold_batch(batch, slots, bucket, replays)
+                        new_slots.extend(slots)
+                        progress = True
+            run_replays(replays)
+            self._register_prefixes(
+                [(s, slot_req[s].prompt, slot_len[s]) for s in new_slots])
 
         while len(self.scheduler) or any(r is not None for r in slot_req):
-            # admit queued requests into free slots
-            for s in range(self.n_slots):
-                if slot_req[s] is not None or not len(self.scheduler):
-                    continue
-                req = self.scheduler.pop()
-                fn = self._admit_for(len(req.prompt))
-                prompt = jnp.asarray(req.prompt, jnp.int32)[None]
-                admit_t[req.uid] = time.perf_counter()
-                tok, self.state = fn(self.params, self.state, prompt,
-                                     jnp.asarray(s, jnp.int32))
-                t = int(np.asarray(tok)[0, 0])
-                emitted[req.uid] = [t]
-                cur[s] = t
-                slot_req[s] = req
-                slot_len[s] = len(req.prompt)
-                check_done(s, req)    # budget-1 / instant-EOS end at admit
+            admit_phase()
             track_peak()
             finish_ready()
             live = [s for s, r in enumerate(slot_req) if r is not None]
@@ -396,7 +799,12 @@ class ServeEngine:
         pct = (lambda q: float(np.percentile(lats, q)) if lats else 0.0)
         stats = ServeStats(
             n_requests=len(results), n_tokens=n_tok, decode_steps=steps,
-            n_dispatches=dispatches, wall_s=wall,
+            n_dispatches=dispatches,
+            n_admit_dispatches=admit_dispatches,
+            n_replay_dispatches=replay_dispatches,
+            n_admit_compiles=self.n_admit_compiles,
+            shared_page_hits=shared_hits,
+            wall_s=wall,
             requests_per_s=len(results) / max(wall, 1e-9),
             tokens_per_s=n_tok / max(wall, 1e-9),
             peak_pages=peak_pages,
@@ -419,32 +827,40 @@ def demo_serving_setup(run: RunConfig, vocab_size: int, tp: int,
     """(run', max_len, requests) for a demo request stream.
 
     Shrinks the cache block so the paged pool is exercised at demo prompt
-    sizes and generates a mixed-length queue (two admitted prompt shapes).
+    sizes and generates a mixed-length queue with SHARED PREFIXES: two base
+    prompts cycle, repeats of a base reuse its exact tokens, and budgets
+    are staggered (long-prompt requests run longer) so repeats admit while
+    the original still holds its pages — prefix pages are freed at
+    refcount zero, so hits need overlapping residency (watch
+    ``shared_page_hits``).
     """
     rng = np.random.default_rng(seed)
     blk = max(4, (prompt_len // tp) // 4)
     run = dataclasses.replace(
         run, codec=dataclasses.replace(run.codec, cache_block=blk))
-    max_len = prompt_len + new_tokens + blk * tp
+    max_len = prompt_len + 2 * new_tokens + blk * tp
     lens = [prompt_len, max(tp, prompt_len // 2 // tp * tp)]
-    reqs = [Request(uid=i,
-                    prompt=rng.integers(0, vocab_size,
-                                        (lens[i % len(lens)],)
-                                        ).astype(np.int32),
-                    max_new_tokens=new_tokens)
+    bases = [rng.integers(0, vocab_size, (n,)).astype(np.int32)
+             for n in lens]
+    reqs = [Request(uid=i, prompt=bases[i % len(bases)],
+                    max_new_tokens=new_tokens * (2 if i % 2 == 0 else 1))
             for i in range(n_requests)]
     return run, max_len, reqs
 
 
 def format_stats(st: ServeStats) -> str:
-    """Two-line human summary of a serving run (demo output)."""
+    """Three-line human summary of a serving run (demo output)."""
     return (f"{st.n_requests} reqs, {st.decode_steps} decode steps in "
             f"{st.n_dispatches} dispatches ({st.decode_backend} backend), "
             f"{st.requests_per_s:.2f} req/s, {st.tokens_per_s:.1f} tok/s "
             f"(incl. compile)\n"
+            f"admission: {st.n_admit_dispatches} batched prefill dispatches "
+            f"+ {st.n_replay_dispatches} fused replay dispatches "
+            f"({st.n_admit_compiles} admit compiles), "
+            f"{st.shared_page_hits} shared-prefix page hits\n"
             f"paged cache peak {st.peak_pages} pages: "
             f"{st.peak_cache_bytes / 1e3:.1f} kB stored / "
             f"{st.peak_cache_raw_bytes / 1e3:.1f} kB raw "
             f"({st.cache_ratio:.2f}x); mean request latency "
-            f"{st.mean_latency_s * 1e3:.0f} ms (incl. each prompt "
-            f"length's first-use compile)")
+            f"{st.mean_latency_s * 1e3:.0f} ms (incl. each bucket's "
+            f"first-use compile)")

@@ -4,7 +4,7 @@ produce matching results whether they route through the fused Pallas kernels
 windowed and full attention, codec on/off, MLA, and tp in {1, 2}.
 
 The stores are built through the real write paths (``fill_from_prefill`` /
-``paged_insert`` equivalents would drag in the whole engine; instead we
+``paged_insert_many`` equivalents would drag in the whole engine; instead we
 drive ``append_token``/``append_token_paged`` inside shard_map so ring
 state, block flushes and page allocation are all the production article).
 """

@@ -55,21 +55,21 @@ def _requests():
                     max_new_tokens=n) for i, (s, n) in enumerate(specs)]
 
 
-def _baseline_tokens(cfg, run, params, req):
+def _baseline_tokens(cfg, run, params, req, tp=TP):
     """Fixed-batch B=1 prefill + decode loop — the reference output."""
-    mesh_cfg = MeshConfig(data=1, model=TP, pod=1)
-    mesh = jax.make_mesh((1, TP), ("data", "model"))
+    mesh_cfg = MeshConfig(data=1, model=tp, pod=1)
+    mesh = jax.make_mesh((1, tp), ("data", "model"))
     table = lm.lm_table(cfg, mesh_cfg, run)
     dims = lm.lm_fsdp_dims(table)
     pspecs = PM.param_pspecs(table)
 
     def f(pp, toks):
-        lg, st = engine.prefill(cfg, run, pp, dims, toks, MAXLEN, TP)
-        tok = engine.greedy_token(cfg, lg, TP)
+        lg, st = engine.prefill(cfg, run, pp, dims, toks, MAXLEN, tp)
+        tok = engine.greedy_token(cfg, lg, tp)
         outs = [tok]
         for _ in range(req.max_new_tokens - 1):
-            lg, st = engine.decode_step(cfg, run, pp, dims, st, tok, TP)
-            tok = engine.greedy_token(cfg, lg, TP)
+            lg, st = engine.decode_step(cfg, run, pp, dims, st, tok, tp)
+            tok = engine.greedy_token(cfg, lg, tp)
             outs.append(tok)
         return jnp.concatenate(outs, axis=1)
 
@@ -149,9 +149,9 @@ def test_analytic_page_count_matches_device():
     eng = ServeEngine(cfg, _run_cfg(True), tp=TP, n_slots=2, max_len=MAXLEN,
                       seed=1)
     prompt = jnp.asarray(RNG.integers(0, 500, (16,)), jnp.int32)[None]
-    fn = eng._admit_for(16)
+    fn = eng._admit_for(16, 1)
     _, eng.state = fn(eng.params, eng.state, prompt,
-                      jnp.asarray(0, jnp.int32))
+                      jnp.asarray([0], jnp.int32))
     want = eng._pages_for_length(16)
     assert want > 0
     assert eng._pages_in_use() == want
@@ -268,6 +268,200 @@ def test_prompt_bucketing_matches_trunk_tail_baseline():
 
     for req, res in zip(reqs, results):
         assert res.tokens == baseline(req), req.uid
+
+
+# ---------------------------------------------------------------------------
+# PR 3: batched multi-slot admission + refcounted prefix-shared pages
+# ---------------------------------------------------------------------------
+
+
+def _shared_mix():
+    """A prefix-heavy stream: a base prompt A, an exact duplicate, a fork
+    sharing A's first two page columns, and an unrelated B — more requests
+    than slots, staggered budgets so eviction interleaves with sharing
+    (B evicts while A still holds its prefix pages; the duplicate admits
+    into B's slot and maps A's pages; A then releases while shared).
+    Deterministic: runs must be repeatable across engines."""
+    rng = np.random.default_rng(42)
+    a = rng.integers(0, 500, (24,)).astype(np.int32)
+    b = rng.integers(0, 500, (12,)).astype(np.int32)
+    fork = np.concatenate([a[:16], rng.integers(0, 500, (6,)).astype(np.int32)])
+    prompts = [a, b, a.copy(), fork, a.copy()]
+    budgets = [5, 3, 4, 4, 3]
+    return [Request(uid=i, prompt=p, max_new_tokens=m)
+            for i, (p, m) in enumerate(zip(prompts, budgets))]
+
+
+@pytest.mark.parametrize("codec_on", [True, False], ids=["codec", "raw"])
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_prefix_sharing_token_identity(case, codec_on):
+    """Serving a shared-prefix mix with page sharing ON is token-identical
+    to the sharing-OFF engine, across dense/hybrid/MoE and codec on/off —
+    with hits, fewer admit prefills and a lower page peak where sharing
+    applies (hybrid/MoE auto-disable: recurrent state is not in pages and
+    MoE suffix replay is not bit-equal to prefill)."""
+    cfg = CASES[case]
+    run = _run_cfg(codec_on)
+    eng_on = ServeEngine(cfg, run, tp=TP2, n_slots=2, max_len=MAXLEN, seed=1)
+    res_on, st_on = eng_on.run(_shared_mix())
+    eng_off = ServeEngine(cfg, run, tp=TP2, n_slots=2, max_len=MAXLEN,
+                          seed=1, prefix_sharing=False)
+    res_off, st_off = eng_off.run(_shared_mix())
+    for x, y in zip(res_on, res_off):
+        assert x.tokens == y.tokens, (case, codec_on, x.uid)
+    assert st_off.shared_page_hits == 0
+    if case == "dense":
+        assert st_on.shared_page_hits > 0
+        assert st_on.peak_pages < st_off.peak_pages
+        assert st_on.peak_cache_bytes < st_off.peak_cache_bytes
+        assert st_on.n_admit_dispatches < st_on.n_requests
+    else:
+        # hybrid (recurrent state) and MoE (decode float path != prefill)
+        # auto-disable sharing: streams unchanged, hits zero
+        assert st_on.shared_page_hits == 0
+        assert not eng_on.prefix_sharing
+    # pool fully drained, prefix index empty after the last release
+    if cfg.n_heads > 0:
+        assert eng_on._pages_in_use() == 0
+    assert not eng_on._prefix_index and not eng_on._prefix_ref
+    assert not eng_on._slot_busy.any()
+
+
+def test_shared_mix_matches_fixed_batch_baseline():
+    """The shared-prefix stream (sharing ON) is token-identical to the
+    per-request fixed-batch prefill+decode reference."""
+    cfg = CASES["dense"]
+    run = _run_cfg(True)
+    eng = ServeEngine(cfg, run, tp=TP2, n_slots=2, max_len=MAXLEN, seed=1)
+    reqs = _shared_mix()
+    results, stats = eng.run(reqs)
+    assert stats.shared_page_hits > 0
+    for req, res in zip(reqs, results):
+        assert res.tokens == _baseline_tokens(cfg, run, eng.params, req,
+                                              tp=TP2), req.uid
+
+
+def test_prefix_sharing_interpret_backend_identity():
+    """Sharing through the fused-kernel (Pallas interpret) decode backend
+    serves the same streams as the pure-JAX backend, with hits on both."""
+    import dataclasses
+    cfg = CASES["dense"]
+    run_jax = _run_cfg(True)
+    eng_j = ServeEngine(cfg, run_jax, tp=TP2, n_slots=2, max_len=MAXLEN,
+                        seed=1)
+    res_j, st_j = eng_j.run(_shared_mix())
+    run_k = dataclasses.replace(run_jax, codec=dataclasses.replace(
+        run_jax.codec, decode_backend="interpret"))
+    eng_k = ServeEngine(cfg, run_k, tp=TP2, n_slots=2, max_len=MAXLEN,
+                        seed=1)
+    res_k, st_k = eng_k.run(_shared_mix())
+    assert st_k.decode_backend == "interpret"
+    assert st_j.shared_page_hits > 0
+    assert st_k.shared_page_hits == st_j.shared_page_hits
+    for x, y in zip(res_j, res_k):
+        assert x.tokens == y.tokens, x.uid
+
+
+def test_batched_admission_one_dispatch():
+    """Same-bucket cold requests admit in ONE vmapped-prefill dispatch and
+    each stream matches its per-request fixed-batch baseline."""
+    cfg = CASES["dense"]
+    run = _run_cfg(True)
+    eng = ServeEngine(cfg, run, tp=TP2, n_slots=4, max_len=MAXLEN, seed=1)
+    reqs = [Request(uid=i,
+                    prompt=RNG.integers(0, 500, (16,)).astype(np.int32),
+                    max_new_tokens=3) for i in range(4)]
+    results, stats = eng.run(reqs)
+    assert stats.n_admit_dispatches == 1          # one dispatch, 4 slots
+    assert stats.n_admit_compiles == 1
+    assert stats.shared_page_hits == 0            # distinct prompts
+    for req, res in zip(reqs, results):
+        assert res.tokens == _baseline_tokens(cfg, run, eng.params, req,
+                                              tp=TP2), req.uid
+
+
+def test_admit_cache_bucket_keyed():
+    """The admit-fn cache is keyed by (trunk bucket, batch size), so the
+    compile count stops growing with distinct prompt lengths."""
+    cfg = CASES["dense"]
+    run = _run_cfg(True)
+    eng = ServeEngine(cfg, run, tp=TP2, n_slots=2, max_len=MAXLEN, seed=1)
+    reqs = [Request(uid=i,
+                    prompt=RNG.integers(0, 500, (8 + i,)).astype(np.int32),
+                    max_new_tokens=2) for i in range(8)]      # lens 8..15
+    _, st = eng.run(reqs)
+    # every length lands in trunk bucket 8; batch sizes only 1..2 exist
+    assert set(eng._admit_cache) <= {(8, 1), (8, 2)}
+    assert st.n_admit_compiles == len(eng._admit_cache)
+    reqs2 = [Request(uid=100 + i,
+                     prompt=RNG.integers(0, 500, (9 + 2 * i,)
+                                         ).astype(np.int32),
+                     max_new_tokens=2) for i in range(3)]     # lens 9,11,13
+    _, st2 = eng.run(reqs2)
+    assert set(eng._admit_cache) <= {(8, 1), (8, 2)}          # no growth
+    assert st2.n_admit_compiles <= 2
+
+
+def test_page_refcount_lifecycle():
+    """Refcounted sharing end to end, driven at the engine internals:
+    owner registration, zero-copy mapping, release-while-shared keeps the
+    pages, double release is rejected loudly, last release drains."""
+    cfg = CASES["dense"]
+    eng = ServeEngine(cfg, _run_cfg(True), tp=TP2, n_slots=2,
+                      max_len=MAXLEN, seed=1)
+    a = RNG.integers(0, 500, (16,)).astype(np.int32)   # 2 page columns
+    fn = eng._admit_for(16, 1)
+    _, eng.state = fn(eng.params, eng.state, jnp.asarray(a)[None],
+                      jnp.asarray([0], jnp.int32))
+    eng._slot_busy[0] = True
+    eng._register_prefixes([(0, a, 16)])
+    assert len(eng._prefix_index) == 2
+    assert all(r == 1 for r in eng._prefix_ref.values())
+    owner_pages = eng._pages_in_use()
+    assert owner_pages == eng._pages_for_length(16) > 0
+
+    # a matcher whose prompt extends A maps BOTH columns, zero page copies
+    a_ext = np.concatenate([a, RNG.integers(0, 500, (4,)).astype(np.int32)])
+    m, keys = eng._prefix_match_cols(a_ext)
+    assert m == 2
+    ids = np.zeros((TP2, eng._maxp), np.int32)
+    for c, key in enumerate(keys):
+        ids[:, c] = eng._prefix_index[key]
+        eng._prefix_ref[key] += 1
+        eng._slot_keys[1].append(key)
+    eng.state = eng._map_shared_for()(
+        eng.state, jnp.asarray(1, jnp.int32), jnp.asarray(ids),
+        jnp.asarray(m, jnp.int32), jnp.asarray(16, jnp.int32))
+    eng._slot_busy[1] = True
+    assert eng._pages_in_use() == owner_pages          # nothing allocated
+    assert eng._shared_page_overcount() == 2 * TP2 * cfg.n_layers
+
+    eng._free_slots([0])                   # release the OWNER while shared
+    assert eng._pages_in_use() == owner_pages          # refs keep pages
+    assert len(eng._prefix_index) == 2
+    with pytest.raises(RuntimeError, match="double release"):
+        eng._free_slots([0])
+    eng._free_slots([1])                   # last reference: drain + deindex
+    assert eng._pages_in_use() == 0
+    assert not eng._prefix_index and not eng._prefix_ref
+
+
+def test_sharing_oversubscription_stress():
+    """Shared admissions + evictions on an exactly-sized pool never leak or
+    oversubscribe pages: identical long prompts stream through 2 slots."""
+    cfg = CASES["dense"]
+    run = _run_cfg(True)
+    eng = ServeEngine(cfg, run, tp=TP2, n_slots=2, max_len=MAXLEN, seed=1)
+    a = RNG.integers(0, 500, (40,)).astype(np.int32)
+    reqs = [Request(uid=i, prompt=a.copy(), max_new_tokens=4)
+            for i in range(4)]
+    results, st = eng.run(reqs)
+    assert st.shared_page_hits > 0
+    toks0 = results[0].tokens
+    for r in results[1:]:                 # identical prompts, same stream
+        assert r.tokens == toks0
+    assert eng._pages_in_use() == 0
+    assert not eng._prefix_index
 
 
 def test_interpret_backend_serving_token_identity():
