@@ -199,6 +199,13 @@ def bench_serving() -> None:
     serving analogue of Table 3's wire-byte accounting.  tp=1 so it runs
     on a single host device.
 
+    A ``disagg`` scenario then runs the same stream through prefill ->
+    decode replicas over compressed page transfer (``repro.serve.disagg``),
+    asserting stream identity with the monolithic engine and recording the
+    link-byte accounting (wire vs bf16-dense bytes, codec-only vs
+    prefix-dedup, modeled LinkModel latency) — the serving analogue of the
+    paper's Table 3 wire-byte reduction.
+
     Writes machine-readable ``BENCH_serving.json`` at the repo root so
     future PRs have a recorded perf baseline to regress against (skipped
     under --smoke).  (On CPU the interpret backend measures the Pallas
@@ -311,8 +318,64 @@ def bench_serving() -> None:
         scenarios.append({
             "codec": label, "decode_backend": "jax",
             "prefix_sharing": False, "cold": row(st_o, True)})
+    # --- disagg: prefill replicas -> decode replicas over compressed page
+    # transfer.  The link-byte accounting is the serving measurement of the
+    # paper's headline claim (Table 3's wire bytes): every handoff ships
+    # LEXI-FW pages byte-identical to the pool + content-dedups repeated
+    # prefixes, metered against the bf16-dense baseline through
+    # hw.noc.LinkModel.  Token streams must match the monolithic engine.
+    from repro.serve.disagg import DisaggEngine
+    mono_tokens = {}
+    for label, codec in codecs:
+        run = RunConfig(codec=dataclasses.replace(codec,
+                                                  decode_backend="jax"))
+        eng_m = ServeEngine(cfg, run, tp=1, n_slots=2, max_len=96, seed=1)
+        res_m, _ = eng_m.run(make_reqs())
+        mono_tokens[label] = [r.tokens for r in res_m]
+        dis = DisaggEngine(cfg, run, tp=1, n_prefill=1, n_decode=1,
+                           n_slots=2, max_len=96, seed=1)
+        res_d, st_d = dis.run(make_reqs())
+        assert [r.tokens for r in res_d] == mono_tokens[label]
+        assert st_d.n_transfers > 0
+        ratio = st_d.wire_bytes / max(st_d.wire_raw_bytes, 1)
+        if label == "on" and not SMOKE:
+            # acceptance bar: compressed link bytes <= 0.6x raw for the
+            # bf16 cache mix (codec pages + prefix dedup on the wire)
+            assert ratio <= 0.6, ratio
+        emit(f"serving.disagg.codec_{label}", st_d.wall_s * 1e6,
+             f"tok_s={st_d.tokens_per_s:.1f} "
+             f"transfers={st_d.n_transfers} "
+             f"wire_kB={st_d.wire_bytes / 1e3:.1f} "
+             f"raw_kB={st_d.wire_raw_bytes / 1e3:.1f} "
+             f"ratio={ratio:.3f} "
+             f"red={st_d.link_reduction * 100:.1f}% "
+             f"nodedup_kB={st_d.wire_bytes_nodedup / 1e3:.1f} "
+             f"deduped={st_d.dedup_page_refs} "
+             f"link_ms={st_d.link_model_ms:.4f}/"
+             f"{st_d.link_model_ms_raw:.4f}")
+        scenarios.append({
+            "scenario": "disagg", "codec": label,
+            "decode_backend": st_d.decode_backend,
+            "n_prefill": st_d.n_prefill_replicas,
+            "n_decode": st_d.n_decode_replicas,
+            "n_transfers": st_d.n_transfers,
+            "wire_bytes": st_d.wire_bytes,
+            "wire_bytes_nodedup": st_d.wire_bytes_nodedup,
+            "wire_raw_bytes": st_d.wire_raw_bytes,
+            "wire_ratio": ratio,
+            "link_reduction": st_d.link_reduction,
+            "dedup_page_refs": st_d.dedup_page_refs,
+            "link_model_ms": st_d.link_model_ms,
+            "link_model_ms_raw": st_d.link_model_ms_raw,
+            "tokens_per_s": st_d.tokens_per_s,
+            "n_tokens": st_d.n_tokens,
+            "decode_steps": st_d.decode_steps,
+            "n_dispatches": st_d.n_dispatches,
+            "wall_s": st_d.wall_s,
+        })
     if SMOKE:
-        emit("serving.smoke", 0.0, "smoke pass ok (no JSON written)")
+        emit("serving.smoke", 0.0,
+             "smoke pass ok incl. disagg (no JSON written)")
         return
     out = {"bench": "serving", "model": cfg.name,
            "jax_backend": __import__("jax").default_backend(),

@@ -49,6 +49,9 @@ def main() -> int:
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--no-prefix-sharing", action="store_true",
                     help="disable prefix-cache page sharing (continuous)")
+    ap.add_argument("--disagg", action="store_true",
+                    help="continuous mode through disaggregated prefill->"
+                         "decode replicas over compressed page transfer")
     args = ap.parse_args()
 
     d, m = (int(x) for x in args.mesh.split("x"))
@@ -59,18 +62,25 @@ def main() -> int:
     B, S, N = args.batch, args.prompt_len, args.new_tokens
     rng = np.random.default_rng(0)
 
-    if args.continuous:
+    if args.continuous or args.disagg:
         # the engine owns its own 1xTP mesh and params — skip the
         # fixed-path setup entirely
         from repro.serve import ServeEngine
         from repro.serve.scheduler import demo_serving_setup, format_stats
         run, max_len, reqs = demo_serving_setup(
             run, cfg.vocab_size, tp, S, N, args.requests)
-        eng = ServeEngine(cfg, run, tp=tp, n_slots=args.slots,
-                          max_len=max_len, params=None, seed=0,
-                          prefix_sharing=not args.no_prefix_sharing)
-        results, st = eng.run(reqs)
-        print("[serve] continuous:", format_stats(st))
+        if args.disagg:
+            from repro.serve.disagg import DisaggEngine, format_disagg_stats
+            eng = DisaggEngine(cfg, run, tp=tp, n_prefill=1, n_decode=1,
+                               n_slots=args.slots, max_len=max_len, seed=0)
+            results, st = eng.run(reqs)
+            print("[serve] disagg:", format_disagg_stats(st))
+        else:
+            eng = ServeEngine(cfg, run, tp=tp, n_slots=args.slots,
+                              max_len=max_len, params=None, seed=0,
+                              prefix_sharing=not args.no_prefix_sharing)
+            results, st = eng.run(reqs)
+            print("[serve] continuous:", format_stats(st))
         print("[serve] continuations[0][:10] =", results[0].tokens[:10])
         return 0
 

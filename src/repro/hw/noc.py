@@ -28,7 +28,6 @@ from typing import Dict, List, Tuple
 
 MESH_X, MESH_Y = 6, 6
 LINK_GBPS = 100.0                    # paper: 100 Gb/s inter-chiplet links
-LINK_BYTES_PER_NS = LINK_GBPS / 8.0  # 12.5 B/ns
 ROUTER_NS_PER_HOP = 5.0
 CHIPLET_TOPS = 4.0                   # Simba-class chiplet, dense ops/s
 MEM_PORTS = ((0, 0), (0, 2), (0, 3), (0, 5))   # west-edge memory chiplets
@@ -37,6 +36,27 @@ CACHE_REUSE_BLOCK = 256              # decode re-reads history once per block
 
 def _xy_hops(a: Tuple[int, int], b: Tuple[int, int]) -> int:
     return abs(a[0] - b[0]) + abs(a[1] - b[1])
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkModel:
+    """The per-transfer cost model of one inter-chiplet route — the single
+    source of truth for link latency, shared by the phase-level simulator
+    below (``simulate``) and the serving-stack page transport
+    (``repro.serve.transport``), which meters every prefill→decode replica
+    handoff through it to report the paper's link-byte/latency reduction.
+
+    Wormhole routing with a hop-dependent contention factor plus a router
+    pipeline charge per hop (paper §5.1).
+    """
+    gbps: float = LINK_GBPS
+    router_ns_per_hop: float = ROUTER_NS_PER_HOP
+
+    def transfer_ns(self, nbytes: float, hops: int = 1) -> float:
+        hops = max(int(hops), 1)
+        contention = 1.0 + 0.5 * (hops - 1)
+        return (hops * self.router_ns_per_hop
+                + nbytes * contention / (self.gbps / 8.0))
 
 
 def _chiplet_of(layer: int) -> Tuple[int, int]:
@@ -87,16 +107,15 @@ def simulate(cfg, *, in_tokens: int, out_tokens: int,
         ssm_state = (cfg.ssm.n_heads(d) * cfg.ssm.headdim * cfg.ssm.d_state
                      * 2.0 + cfg.ssm.d_inner(d) * (cfg.ssm.d_conv - 1) * 2.0)
 
+    link = LinkModel()
     out: Dict[str, SimResult] = {}
     for mname, mcr in methods.items():
         cls_ns = {"weights": 0.0, "activations": 0.0, "cache": 0.0}
         flops = 0.0
 
         def xfer(src, dst, nbytes, cls):
-            hops = max(_xy_hops(src, dst), 1)
-            cls_ns[cls] += (hops * ROUTER_NS_PER_HOP
-                            + nbytes * (1.0 + 0.5 * (hops - 1))
-                            / LINK_BYTES_PER_NS)
+            cls_ns[cls] += link.transfer_ns(nbytes,
+                                            max(_xy_hops(src, dst), 1))
 
         for li in range(cfg.n_layers):
             c = _chiplet_of(li)

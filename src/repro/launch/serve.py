@@ -54,6 +54,17 @@ def main(argv=None) -> int:
     ap.add_argument("--no-prefix-sharing", action="store_true",
                     help="continuous mode: disable prefix-cache page "
                          "sharing between requests")
+    ap.add_argument("--disagg", action="store_true",
+                    help="serve through disaggregated prefill->decode "
+                         "replicas over compressed page transfer")
+    ap.add_argument("--prefill-replicas", type=int, default=1,
+                    help="--disagg: number of prefill replicas")
+    ap.add_argument("--decode-replicas", type=int, default=1,
+                    help="--disagg: number of decode replicas")
+    ap.add_argument("--stop-seq", type=str, default=None,
+                    help="continuous/disagg: comma-separated token ids; "
+                         "a slot stops when its stream ends with them "
+                         "(stop_reason=stop_string)")
     args = ap.parse_args(argv)
 
     d, m = (int(x) for x in args.mesh.split("x"))
@@ -69,7 +80,7 @@ def main(argv=None) -> int:
     if args.reduced:
         cfg = make_reduced(cfg, tp=m)
 
-    if args.continuous:
+    if args.continuous or args.disagg:
         return _serve_continuous(cfg, run, m, args)
 
     table = lm.lm_table(cfg, mesh_cfg, run)
@@ -120,17 +131,33 @@ def main(argv=None) -> int:
 
 
 def _serve_continuous(cfg, run, tp: int, args) -> int:
-    """Request-stream mode: queue > slots, mixed prompt lengths."""
+    """Request-stream mode: queue > slots, mixed prompt lengths.  With
+    --disagg the stream runs through prefill->decode replicas connected by
+    compressed page transfer instead of one monolithic engine."""
     from repro.serve import ServeEngine
     from repro.serve.scheduler import demo_serving_setup, format_stats
     run, max_len, reqs = demo_serving_setup(
         run, cfg.vocab_size, tp, args.prompt_len, args.new_tokens,
         args.requests)
-    eng = ServeEngine(cfg, run, tp=tp, n_slots=args.slots, max_len=max_len,
-                      seed=run.seed, eos_id=args.eos_id,
-                      prefix_sharing=not args.no_prefix_sharing)
-    results, st = eng.run(reqs)
-    print("[serve] continuous:", format_stats(st))
+    stops = ([tuple(int(t) for t in args.stop_seq.split(","))]
+             if args.stop_seq else None)
+    if args.disagg:
+        from repro.serve.disagg import DisaggEngine, format_disagg_stats
+        eng = DisaggEngine(cfg, run, tp=tp,
+                           n_prefill=args.prefill_replicas,
+                           n_decode=args.decode_replicas,
+                           n_slots=args.slots, max_len=max_len,
+                           seed=run.seed, eos_id=args.eos_id,
+                           stop_seqs=stops)
+        results, st = eng.run(reqs)
+        print("[serve] disagg:", format_disagg_stats(st))
+    else:
+        eng = ServeEngine(cfg, run, tp=tp, n_slots=args.slots,
+                          max_len=max_len, seed=run.seed,
+                          eos_id=args.eos_id, stop_seqs=stops,
+                          prefix_sharing=not args.no_prefix_sharing)
+        results, st = eng.run(reqs)
+        print("[serve] continuous:", format_stats(st))
     print("[serve] sample continuations:",
           [(r.tokens[:6], r.stop_reason) for r in results[:2]])
     return 0

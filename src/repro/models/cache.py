@@ -662,6 +662,190 @@ def map_prefix_pages(pkv: PagedKV, slot, page_ids: jax.Array,
     return pkv._replace(page_table=pt, page_used=used, ring=ring)
 
 
+class PageWire(NamedTuple):
+    """One slot's cache payload in transfer layout (per layer, per shard).
+
+    The dense, slot-ordered view of a sequence's pages that crosses a
+    replica boundary: ``export_sequence`` gathers it out of a pool,
+    ``import_sequence`` scatters it into another pool.  Compressed fields
+    are BYTE-IDENTICAL to the pool pages they came from (no decompress /
+    recompress round trip); page-id indirection never crosses the wire —
+    column order IS the sequence order.
+
+    Leaves are ``None`` exactly as in ``PagedKV`` (codec on: compressed
+    fields; codec off: ``raw_pages``).  Shapes (n_cols = exported full-page
+    columns, the max over shards; trailing invalid columns are zeroed):
+
+      signman   (n_cols, N) u8          N = block*W
+      planes    (n_cols, k, Npad/32) u32
+      dict_syms (n_cols, 2^k) u8
+      esc_pos   (n_cols, C) i32
+      esc_raw   (n_cols, C) u8
+      raw_pages (n_cols, block, W) bf16
+      ring      (block, W) bf16         the in-flight partial tail block
+    """
+    signman: Optional[jax.Array]
+    planes: Optional[jax.Array]
+    dict_syms: Optional[jax.Array]
+    esc_pos: Optional[jax.Array]
+    esc_raw: Optional[jax.Array]
+    raw_pages: Optional[jax.Array]
+    ring: jax.Array
+
+
+def local_full_pages(length, ti, blk: int, tp: int):
+    """Full pages shard ``ti`` holds for a sequence of ``length`` tokens
+    (interleaved ownership: shard t owns positions p % tp == t)."""
+    length = jnp.asarray(length, jnp.int32)
+    loc_len = jnp.maximum((length - 1 - ti) // tp + 1, 0)
+    return loc_len // blk
+
+
+def export_n_cols(length: int, blk: int, tp: int) -> int:
+    """Static page-column count of a wire payload: the max over shards of
+    ``local_full_pages`` — host-side mirror of the device arithmetic."""
+    return max(max((int(length) - 1 - t) // tp + 1, 0) // blk
+               for t in range(tp)) if length > 0 else 0
+
+
+def export_sequence(pkv: PagedKV, slot, n_cols: int, length,
+                    tp: int) -> PageWire:
+    """Gather slot ``slot``'s cache payload into transfer layout.
+
+    The disaggregated-prefill seam: a prefill replica exports each admitted
+    sequence as a :class:`PageWire` whose compressed planes are byte-copied
+    from its pool pages (pages are immutable once full, so the gather IS
+    the serialization — no decompress/recompress round trip), and a decode
+    replica scatters it into its own pool via :func:`import_sequence`.
+
+    ``n_cols`` is static (``export_n_cols``); shards holding fewer full
+    pages (``length % (block*tp) != 0``) zero their trailing columns so the
+    payload is deterministic.  ``slot``/``length`` may be traced.
+
+    **WIRE FORMAT (version 1).**  The byte framing a transport ships (see
+    ``repro.serve.transport.SequenceBlob.to_wire``) — everything little-
+    endian, arrays serialized as raw C-order bytes in exactly this order:
+
+      header:
+        magic      4B  b"LXSQ"
+        version    u8  = 1        (bump on ANY layout change)
+        flags      u8  bit0 codec-on, bit1 KV present, bit2 SSM present
+        tp         u16            per-shard layout: every array below
+        n_layers   u16            carries a leading (tp, n_layers) pair of
+        n_cols     u16            axes, shard-major then layer
+        block      u16            tokens per page per shard
+        w          u32            payload width W (kv_width)
+        k          u16            dictionary index bits
+        esc_cap    u32            C, escape side-channel slots per page
+        npad       u32            N padded to lanes (planes row = npad/32 u32)
+        length     u32            tokens held by the sequence (all shards)
+        cur_token  i32            next decode input (last emitted token)
+        n_emitted  u16            tokens generated so far (normally 1)
+        emitted    n_emitted x i32
+      ssm section (iff flag bit2; dims header then arrays, per shard/layer):
+        nh_loc u16, headdim u16, d_state u16, d_conv-1 u16, di_loc u32
+        h       (tp, L, nh_loc, headdim, d_state) f32
+        conv_x  (tp, L, d_conv-1, di_loc) bf16
+        conv_bc (tp, L, d_conv-1, 2*d_state) bf16
+      ring section (iff flag bit1):
+        ring    (tp, L, block, w) bf16
+      page section (iff flag bit1) — one entry per VALID column, iterated
+      shard-major, then layer, then column (shard t has
+      ``local_full_pages(length, t)`` valid columns):
+        tag     u8   0 = inline payload, 1 = content reference
+        digest  12B  sha256(payload)[:12]
+        payload      iff tag 0: the page's fields back to back —
+                     codec on : signman (N u8) ‖ planes (k*npad/32 u32) ‖
+                                dict_syms (2^k u8) ‖ esc_pos (C i32) ‖
+                                esc_raw (C u8)
+                     codec off: raw page (block*w bf16)
+
+    Tag-1 entries let a transport replace pages the receiver already holds
+    (content-addressed dedup); a receiver resolves them from its digest
+    store and must fail loudly on an unknown digest.
+    """
+    blk, w = pkv.ring.shape[1], pkv.ring.shape[2]
+    ti = jax.lax.axis_index("model")
+    nfull = local_full_pages(length, ti, blk, tp)
+    row = pkv.page_table[jnp.asarray(slot, jnp.int32)]       # (maxp,)
+    cols = jnp.arange(n_cols)
+    valid = cols < nfull
+    pid = jnp.where(valid, jnp.clip(row[:n_cols], 0, None), 0)
+
+    def take(field, zero_dtype):
+        if field is None:
+            return None
+        out = field[pid]
+        mask = valid.reshape((n_cols,) + (1,) * (out.ndim - 1))
+        return jnp.where(mask, out, jnp.zeros((), zero_dtype))
+
+    return PageWire(
+        signman=take(pkv.signman, jnp.uint8),
+        planes=take(pkv.planes, jnp.uint32),
+        dict_syms=take(pkv.dict_syms, jnp.uint8),
+        esc_pos=take(pkv.esc_pos, jnp.int32),
+        esc_raw=take(pkv.esc_raw, jnp.uint8),
+        raw_pages=take(pkv.raw_pages, jnp.bfloat16),
+        ring=pkv.ring[jnp.asarray(slot, jnp.int32)])
+
+
+def import_sequence(pkv: PagedKV, slot, wire: PageWire, length,
+                    tp: int) -> PagedKV:
+    """Scatter a :class:`PageWire` into slot ``slot`` of this pool.
+
+    Exact inverse of :func:`export_sequence` up to page ids: fresh pages
+    come from THIS pool's free list (argsort of ``page_used`` — works for
+    any permutation of the free list, ids need not match the exporting
+    pool's), the compressed fields are byte-copied into them, and the
+    slot's page-table row maps them in sequence order.  Columns beyond this
+    shard's ``local_full_pages`` are dropped via the sentinel-scatter
+    convention.  The re-export of an imported slot is bit-identical to the
+    original wire payload (round-trip proof in ``tests/test_disagg.py``).
+
+    In-graph allocation cannot fail loudly, so the HOST must check pool
+    capacity before dispatching an import (``n_cols <= max pages per slot``
+    and enough free pages on every shard/layer) — see
+    ``repro.serve.disagg.DecodeReplica.import_handoff``, which rejects
+    oversubscription before any device state mutates.
+
+    See the export docstring for the WIRE FORMAT this pair defines.
+    """
+    lead = wire.signman if pkv.signman is not None else wire.raw_pages
+    n_cols = lead.shape[0]
+    blk = pkv.ring.shape[1]
+    maxp = pkv.page_table.shape[1]
+    n_pages = pkv.page_used.shape[0]
+    assert n_cols <= maxp, (n_cols, maxp)
+    ti = jax.lax.axis_index("model")
+    nfull = local_full_pages(length, ti, blk, tp)
+    slot = jnp.asarray(slot, jnp.int32)
+
+    free_order = jnp.argsort(pkv.page_used)          # free pages first
+    pages = free_order[:n_cols] if n_cols else jnp.zeros((0,), jnp.int32)
+    valid = jnp.arange(n_cols) < nfull
+    tgt = jnp.where(valid, pages, n_pages)           # sentinel drops
+    if pkv.signman is not None:
+        pkv = pkv._replace(
+            signman=pkv.signman.at[tgt].set(wire.signman, mode="drop"),
+            planes=pkv.planes.at[tgt].set(wire.planes, mode="drop"),
+            dict_syms=pkv.dict_syms.at[tgt].set(wire.dict_syms, mode="drop"),
+            esc_pos=pkv.esc_pos.at[tgt].set(wire.esc_pos, mode="drop"),
+            esc_raw=pkv.esc_raw.at[tgt].set(wire.esc_raw, mode="drop"))
+    else:
+        pkv = pkv._replace(
+            raw_pages=pkv.raw_pages.at[tgt].set(wire.raw_pages, mode="drop"))
+    used = pkv.page_used.at[tgt].set(True, mode="drop")
+    cols = jnp.arange(maxp)
+    padded = jnp.concatenate(
+        [pages.astype(jnp.int32),
+         jnp.zeros((maxp - n_cols,), jnp.int32)]) if n_cols else \
+        jnp.zeros((maxp,), jnp.int32)
+    row = jnp.where(cols < nfull, padded, -1)
+    pt = jax.lax.dynamic_update_index_in_dim(pkv.page_table, row, slot, 0)
+    ring = jax.lax.dynamic_update_index_in_dim(pkv.ring, wire.ring, slot, 0)
+    return pkv._replace(page_table=pt, page_used=used, ring=ring)
+
+
 def release_pages(pkv: PagedKV, slots_mask: jax.Array,
                   free_mask: Optional[jax.Array] = None) -> PagedKV:
     """Unmap masked slots' table rows and free their pages.

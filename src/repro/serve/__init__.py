@@ -1,5 +1,12 @@
-"""Serving: fixed-batch prefill+decode and continuous batching over the
-paged LEXI-compressed cache (``engine`` device code, ``scheduler`` loop)."""
+"""Serving: fixed-batch prefill+decode, continuous batching over the paged
+LEXI-compressed cache (``engine`` device code, ``scheduler`` loop), and
+disaggregated prefill→decode replicas over compressed page transfer
+(``disagg`` routing, ``transport`` wire format) — see docs/ARCHITECTURE.md
+for the end-to-end walkthrough."""
 from . import engine  # noqa: F401
 from .scheduler import (Request, RequestResult, RequestScheduler,  # noqa: F401
                         ServeEngine, ServeStats)
+from .disagg import (DecodeReplica, DisaggEngine, DisaggStats,  # noqa: F401
+                     PrefillReplica)
+from .transport import (LoopbackTransport, PageTransport,  # noqa: F401
+                        SequenceBlob, TransportStats)

@@ -1,0 +1,422 @@
+"""Disaggregated prefill serving: prefill replicas feeding decode replicas
+through compressed page transfer.
+
+The monolithic ``ServeEngine`` interleaves admission (prefill-heavy, bursty)
+and decode (latency-sensitive, steady) on one set of slots.  Disaggregation
+splits them onto separate replicas — the standard production topology — and
+this module keeps the split EXACT: a decode replica's token streams are
+byte-identical to the monolithic engine's, because
+
+  * the prefill replica runs the *same* admission machinery
+    (``ServeEngine._admit_phase``: batched bucketed prefill, prefix-cache
+    hits, fused tail replay — exact numerics at every position), and
+  * the handoff copies the slot's cache state byte-for-byte: LEXI-FW
+    compressed full pages travel as stored (no decompress/recompress round
+    trip), plus the partial-tail ring, the per-slot length, and the
+    SSM-state slot for hybrids (``repro.serve.transport.SequenceBlob``),
+  * slots are independent in the paged decode path, so the decode replica
+    stepping an imported slot computes exactly what the monolithic engine
+    would have.
+
+Dataflow (see docs/ARCHITECTURE.md for the full picture):
+
+    requests ──► RequestRouter ──► PrefillReplica[0..N) ──┐ admit+replay,
+                      │                                   │ export_slot
+                      │            SequenceBlob bytes ◄───┘
+                      │                 │  PageTransport (meters wire vs
+                      │                 ▼   raw bytes through hw.noc's
+                      └──────────► DecodeReplica[0..M)      LinkModel)
+                                        │ import_slot, fused decode windows
+                 results ◄──────────────┘
+
+The router owns per-replica slot accounting: requests go to the
+least-backlogged prefill replica, finished prefills queue for transfer and
+land on the decode replica with the most free slots; a handoff waits (in
+admission order) whenever every decode slot is busy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.core import packing
+from repro.kernels import ops as kernel_ops
+from repro.models import cache as cache_mod
+from repro.models.ssm import SSMState
+from .scheduler import (Request, RequestResult, ServeEngine, _LoopState)
+from .transport import (LoopbackTransport, PageTransport, SequenceBlob,
+                        TransportStats)
+
+
+@dataclasses.dataclass
+class Handoff:
+    """One admitted sequence in flight between replicas (host envelope:
+    the request routing metadata stays host-side; only the cache state in
+    ``blob`` crosses the modeled link)."""
+    req: Request
+    blob: SequenceBlob
+    admit_t: float
+
+
+@dataclasses.dataclass
+class DisaggStats:
+    """Aggregate stats of a disaggregated serving run."""
+    n_requests: int
+    n_tokens: int
+    decode_steps: int
+    n_dispatches: int              # decode dispatches, all decode replicas
+    n_admit_dispatches: int        # batched prefills, all prefill replicas
+    n_replay_dispatches: int
+    n_prefill_replicas: int
+    n_decode_replicas: int
+    n_transfers: int               # sequences shipped prefill -> decode
+    wire_bytes: int                # bytes that crossed the modeled link
+    wire_bytes_nodedup: int        # same transfers without page dedup
+    wire_raw_bytes: int            # bf16-dense bytes of the same payloads
+    dedup_page_refs: int           # pages that shipped as 13B references
+    link_model_ms: float           # LinkModel latency of the wire bytes
+    link_model_ms_raw: float       # ... of the bf16-dense baseline
+    wall_s: float
+    requests_per_s: float
+    tokens_per_s: float
+    mean_latency_s: float
+    latency_p50_s: float
+    latency_p95_s: float
+    decode_backend: str
+
+    @property
+    def link_reduction(self) -> float:
+        """Fractional link-byte reduction vs shipping the cache bf16-dense
+        — the serving-stack analogue of the paper's Table 3 column."""
+        return 1.0 - self.wire_bytes / max(self.wire_raw_bytes, 1)
+
+
+def _blob_geometry(eng: ServeEngine):
+    """(blk, w, k, esc_cap, npad) of one page in ``eng``'s pool."""
+    codec = eng.run_cfg.codec
+    blk = codec.cache_block
+    w = cache_mod.kv_width(eng.cfg) if eng.cfg.n_heads > 0 else 0
+    n = blk * w
+    if n == 0:
+        return blk, 0, codec.k, 0, 0
+    return blk, w, codec.k, codec.esc_capacity(n), packing.pad_to_lanes(n)
+
+
+class PrefillReplica:
+    """One admission-only replica: runs the engine's batched/bucketed
+    admission (+ prefix sharing + tail replay) on its own pool, then
+    exports every admitted sequence instead of decoding it.  Requests that
+    finish AT admission (budget of 1, EOS or stop on the first token)
+    complete here and never transfer."""
+
+    def __init__(self, engine: ServeEngine):
+        self.engine = engine
+        self.ls: _LoopState = engine._new_loop()
+
+    @property
+    def backlog(self) -> int:
+        return len(self.engine.scheduler) + len(self.ls.live_slots())
+
+    def submit(self, req: Request) -> None:
+        self.engine.scheduler.submit(req)   # validates length/budget
+
+    def idle(self) -> bool:
+        return not len(self.engine.scheduler) and not self.ls.live_slots()
+
+    def admit_step(self) -> Tuple[List[RequestResult], List[Handoff]]:
+        """One admission round: admit into every free slot, replay prompt
+        tails, then export + release every live slot as a handoff."""
+        eng, ls = self.engine, self.ls
+        eng._admit_phase(ls)
+        eng._track_peak(ls)
+        finished = eng._finish_ready(ls)    # done at admission: no transfer
+        handoffs: List[Handoff] = []
+        exported = []
+        for s in list(ls.live_slots()):
+            req = ls.slot_req[s]
+            handoffs.append(Handoff(
+                req=req, blob=self._export_blob(s),
+                admit_t=ls.admit_t[req.uid]))
+            ls.slot_req[s] = None
+            ls.slot_len[s] = 0
+            exported.append(s)
+        if exported:
+            eng._free_slots(exported)       # one release dispatch
+        return finished, handoffs
+
+    def _export_blob(self, s: int) -> SequenceBlob:
+        eng, ls = self.engine, self.ls
+        req = ls.slot_req[s]
+        length = ls.slot_len[s]
+        blk, w, k, esc_cap, npad = _blob_geometry(eng)
+        n_cols = (cache_mod.export_n_cols(length, blk, eng.tp)
+                  if eng.cfg.n_heads > 0 else 0)
+        kvw, ssm, dev_len = eng._export_for(n_cols)(
+            eng.state, jnp.asarray(s, jnp.int32))
+        assert int(np.asarray(dev_len)) == length, (s, length)
+        codec_on = bool(eng.run_cfg.codec.cache)
+        kv = None
+        if kvw is not None:
+            if codec_on:
+                kv = {f: np.asarray(getattr(kvw, f)) for f in
+                      ("signman", "planes", "dict_syms", "esc_pos",
+                       "esc_raw")}
+            else:
+                kv = {"raw_pages": np.asarray(kvw.raw_pages)}
+            kv["ring"] = np.asarray(kvw.ring)
+        ssm_t = None
+        if ssm is not None:
+            ssm_t = (np.asarray(ssm.h), np.asarray(ssm.conv_x),
+                     np.asarray(ssm.conv_bc))
+        return SequenceBlob(
+            codec_on=codec_on, tp=eng.tp, n_layers=eng.cfg.n_layers,
+            n_cols=n_cols, blk=blk, w=w, k=k, esc_cap=esc_cap, npad=npad,
+            length=length, cur_token=int(ls.cur[s, 0]),
+            emitted=list(ls.emitted[req.uid]), kv=kv, ssm=ssm_t)
+
+
+class DecodeReplica:
+    """One decode-only replica: sequences arrive as wire blobs, scatter
+    into its own pool (fresh pages from ITS free list), and step through
+    the engine's fused decode windows until termination."""
+
+    def __init__(self, engine: ServeEngine):
+        self.engine = engine
+        self.ls: _LoopState = engine._new_loop()
+
+    def free_slots(self) -> int:
+        return len(self.engine._free_slot_ids(self.ls))
+
+    def idle(self) -> bool:
+        return not self.ls.live_slots()
+
+    def import_handoff(self, h: Handoff) -> int:
+        """Scatter a transferred sequence into a free slot; returns the
+        slot id.  All validation happens BEFORE any device dispatch, so a
+        rejected import leaves the pool untouched:
+
+          * geometry (tp / layers / page shape / codec flag) must match,
+          * a free slot must exist,
+          * the sequence must fit a page-table row (``n_cols <= maxp``),
+          * every shard/layer pool must hold enough FREE pages — in-graph
+            allocation cannot fail loudly, so oversubscription is rejected
+            here (device truth read at this admission boundary only).
+        """
+        eng, ls, blob = self.engine, self.ls, h.blob
+        blk, w, k, esc_cap, npad = _blob_geometry(eng)
+        want = (eng.tp, eng.cfg.n_layers, blk, w, k, esc_cap, npad,
+                bool(eng.run_cfg.codec.cache), eng.cfg.ssm is not None)
+        got = (blob.tp, blob.n_layers, blob.blk, blob.w, blob.k,
+               blob.esc_cap, blob.npad, blob.codec_on, blob.ssm is not None)
+        if want != got:
+            raise ValueError(f"wire blob geometry {got} does not match "
+                             f"this decode replica {want}")
+        free = eng._free_slot_ids(ls)
+        if not free:
+            raise RuntimeError("no free decode slot (the router must hold "
+                               "handoffs until a slot frees)")
+        s = free[0]
+        kvw = None
+        if eng.state.kv is not None:
+            if blob.n_cols > eng._maxp:
+                raise ValueError(
+                    f"import needs {blob.n_cols} page columns > "
+                    f"max {eng._maxp} per slot (decode replica max_len "
+                    f"{eng.max_len} too small for length {blob.length})")
+            used = np.asarray(eng.state.kv.page_used)     # (tp, L, P)
+            free_pages = used.shape[-1] - used.sum(axis=-1)
+            need = np.array([blob.valid_cols(t)
+                             for t in range(eng.tp)])[:, None]
+            if (free_pages < need).any():
+                raise RuntimeError(
+                    "decode-replica page pool oversubscribed: import needs "
+                    f"{need.max()} pages but a shard/layer has only "
+                    f"{int(free_pages.min())} free")
+            kv = blob.kv
+            if blob.codec_on:
+                kvw = cache_mod.PageWire(
+                    signman=jnp.asarray(kv["signman"]),
+                    planes=jnp.asarray(kv["planes"]),
+                    dict_syms=jnp.asarray(kv["dict_syms"]),
+                    esc_pos=jnp.asarray(kv["esc_pos"]),
+                    esc_raw=jnp.asarray(kv["esc_raw"]),
+                    raw_pages=None, ring=jnp.asarray(kv["ring"]))
+            else:
+                kvw = cache_mod.PageWire(
+                    signman=None, planes=None, dict_syms=None,
+                    esc_pos=None, esc_raw=None,
+                    raw_pages=jnp.asarray(kv["raw_pages"]),
+                    ring=jnp.asarray(kv["ring"]))
+        ssm = None
+        if eng.state.ssm is not None:
+            h_, cx, cbc = blob.ssm
+            ssm = SSMState(h=jnp.asarray(h_), conv_x=jnp.asarray(cx),
+                           conv_bc=jnp.asarray(cbc))
+        eng.state = eng._import_for(blob.n_cols)(
+            eng.state, jnp.asarray(s, jnp.int32), kvw, ssm,
+            jnp.asarray(blob.length, jnp.int32))
+        req = h.req
+        ls.slot_req[s] = req
+        eng._slot_busy[s] = True
+        ls.slot_len[s] = blob.length
+        ls.emitted[req.uid] = list(blob.emitted)
+        ls.cur[s] = blob.cur_token
+        ls.admit_t[req.uid] = h.admit_t
+        eng._track_peak(ls)
+        return s
+
+    def step_window(self) -> List[RequestResult]:
+        eng, ls = self.engine, self.ls
+        eng._decode_window(ls)
+        return eng._finish_ready(ls)
+
+
+class DisaggEngine:
+    """N prefill replicas feeding M decode replicas over a
+    :class:`PageTransport` — the routing layer of the disaggregated stack.
+
+    Construction mirrors ``ServeEngine`` (one set of model params is shared
+    by every replica); ``n_slots`` is PER REPLICA.  There is no
+    ``prefix_sharing`` knob: in-engine sharing needs overlapping residency
+    that the export-and-free prefill flow never has, so cross-request page
+    reuse happens on the wire instead (transport dedup; see __init__).  Token streams are
+    byte-identical to the monolithic engine for the same requests
+    (tests/test_disagg.py), and ``DisaggStats`` adds the link accounting:
+    wire vs bf16-dense bytes per transfer, dedup hits, and the
+    ``hw.noc.LinkModel`` latency of both — the serving measurement of the
+    paper's headline claim that compressed exponent streams cut
+    inter-chiplet traffic.
+    """
+
+    def __init__(self, cfg: ModelConfig, run: RunConfig, *, tp: int = 1,
+                 n_prefill: int = 1, n_decode: int = 1, n_slots: int = 4,
+                 max_len: int = 256, params=None, seed: int = 0,
+                 eos_id: Optional[int] = None,
+                 stop_seqs: Optional[Sequence[Sequence[int]]] = None,
+                 max_fuse_steps: int = 32,
+                 transport: Optional[PageTransport] = None):
+        if n_prefill < 1 or n_decode < 1:
+            raise ValueError("need at least one replica of each kind")
+        self.cfg, self.run_cfg = cfg, run
+        self.transport = transport if transport is not None \
+            else LoopbackTransport()
+        mk = dict(tp=tp, n_slots=n_slots, max_len=max_len, seed=seed,
+                  eos_id=eos_id, stop_seqs=stop_seqs,
+                  max_fuse_steps=max_fuse_steps)
+        self.prefills: List[PrefillReplica] = []
+        self.decodes: List[DecodeReplica] = []
+        for _ in range(n_prefill):
+            # In-engine prefix sharing needs overlapping slot residency,
+            # and a prefill replica exports + frees every slot at the end
+            # of each admission round — its prefix index could never hit.
+            # Cross-request prefix reuse lives in the TRANSPORT instead
+            # (content-addressed page dedup on the wire); in-pool sharing
+            # across imports is a ROADMAP open item.  Both replica kinds
+            # therefore run the cheap unshared release path.
+            eng = ServeEngine(cfg, run, params=params,
+                              prefix_sharing=False, **mk)
+            params = eng.params          # share one param set everywhere
+            self.prefills.append(PrefillReplica(eng))
+        for _ in range(n_decode):
+            eng = ServeEngine(cfg, run, params=params,
+                              prefix_sharing=False, **mk)
+            self.decodes.append(DecodeReplica(eng))
+        self.params = params
+
+    def run(self, requests: List[Request]
+            ) -> Tuple[List[RequestResult], DisaggStats]:
+        """Serve a request list to completion across the replica fleet."""
+        uids = [r.uid for r in requests]
+        if len(set(uids)) != len(uids):
+            raise ValueError("request uids must be unique (token streams "
+                             "are keyed by uid)")
+        results: Dict[int, RequestResult] = {}
+        queue = deque(requests)
+        pending: deque[Handoff] = deque()   # admitted, awaiting a slot
+        t0 = time.perf_counter()
+
+        def route_submissions():
+            while queue:
+                pr = min(self.prefills, key=lambda p: p.backlog)
+                pr.submit(queue.popleft())
+
+        def route_handoffs():
+            while pending:
+                dr = max(self.decodes, key=lambda d: d.free_slots())
+                if dr.free_slots() == 0:
+                    break
+                h = pending.popleft()
+                dst = f"decode{self.decodes.index(dr)}"
+                data = self.transport.send(h.blob, dst)
+                blob = self.transport.recv(data, dst)
+                dr.import_handoff(Handoff(req=h.req, blob=blob,
+                                          admit_t=h.admit_t))
+
+        route_submissions()
+        while (pending or not all(p.idle() for p in self.prefills)
+               or not all(d.idle() for d in self.decodes)):
+            for pr in self.prefills:
+                fin, hoffs = pr.admit_step()
+                for r in fin:
+                    results[r.uid] = r
+                pending.extend(hoffs)
+            route_handoffs()
+            for dr in self.decodes:
+                for r in dr.step_window():
+                    results[r.uid] = r
+            route_handoffs()    # freed slots admit waiting transfers now
+        wall = time.perf_counter() - t0
+        stats = self._stats(results, wall)
+        return [results[r.uid] for r in requests], stats
+
+    def _stats(self, results, wall: float) -> DisaggStats:
+        ts: TransportStats = self.transport.stats
+        pls = [p.ls for p in self.prefills]
+        dls = [d.ls for d in self.decodes]
+        n_tok = sum(len(r.tokens) for r in results.values())
+        lats = sorted(r.latency_s for r in results.values())
+        pct = (lambda q: float(np.percentile(lats, q)) if lats else 0.0)
+        return DisaggStats(
+            n_requests=len(results), n_tokens=n_tok,
+            decode_steps=sum(l.steps for l in dls),
+            n_dispatches=sum(l.dispatches for l in dls),
+            n_admit_dispatches=sum(l.admit_dispatches for l in pls),
+            n_replay_dispatches=sum(l.replay_dispatches for l in pls),
+            n_prefill_replicas=len(self.prefills),
+            n_decode_replicas=len(self.decodes),
+            n_transfers=ts.n_transfers,
+            wire_bytes=ts.wire_bytes,
+            wire_bytes_nodedup=ts.wire_bytes_nodedup,
+            wire_raw_bytes=ts.raw_bytes,
+            dedup_page_refs=ts.pages_ref,
+            link_model_ms=ts.model_ns * 1e-6,
+            link_model_ms_raw=ts.model_ns_raw * 1e-6,
+            wall_s=wall,
+            requests_per_s=len(results) / max(wall, 1e-9),
+            tokens_per_s=n_tok / max(wall, 1e-9),
+            mean_latency_s=float(np.mean(lats)) if lats else 0.0,
+            latency_p50_s=pct(50), latency_p95_s=pct(95),
+            decode_backend=kernel_ops.resolve_decode_backend(
+                self.run_cfg.codec))
+
+
+def format_disagg_stats(st: DisaggStats) -> str:
+    """Human summary of a disaggregated run (demo output)."""
+    return (f"{st.n_requests} reqs through {st.n_prefill_replicas} prefill "
+            f"-> {st.n_decode_replicas} decode replicas "
+            f"({st.decode_backend} backend): {st.tokens_per_s:.1f} tok/s, "
+            f"{st.decode_steps} steps / {st.n_dispatches} dispatches\n"
+            f"link: {st.n_transfers} transfers, "
+            f"{st.wire_bytes / 1e3:.1f} kB wire vs "
+            f"{st.wire_raw_bytes / 1e3:.1f} kB raw bf16 "
+            f"({st.link_reduction * 100:.1f}% reduction; "
+            f"{st.wire_bytes_nodedup / 1e3:.1f} kB codec-only, "
+            f"{st.dedup_page_refs} pages deduped), modeled "
+            f"{st.link_model_ms:.3f} ms vs {st.link_model_ms_raw:.3f} ms")

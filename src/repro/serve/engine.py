@@ -663,6 +663,55 @@ def paged_replay_steps(cfg: ModelConfig, run: RunConfig, params, dims,
     return seq, state
 
 
+def export_slot(state: PagedState, slot, n_cols: int, tp: int):
+    """Export one slot's full cache payload for a replica handoff.
+
+    Returns ``(kv_wire, ssm_slot, length)``: ``kv_wire`` stacks
+    ``cache.export_sequence`` over layers (leaves (L, ...) or None for
+    attention-free configs), ``ssm_slot`` is the slot's recurrent state
+    (leaves (L, ...) or None), ``length`` the slot's token count.  Runs
+    per shard inside shard_map; the scheduler-side wrapper stacks the
+    per-shard views into the wire blob's (tp, L, ...) layout.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+    length = state.lengths[slot]
+    kv_wire = None
+    if state.kv is not None:
+        kv_wire = jax.vmap(
+            lambda pkv: cache_mod.export_sequence(pkv, slot, n_cols, length,
+                                                  tp))(state.kv)
+    ssm_slot = None
+    if state.ssm is not None:
+        ssm_slot = jax.tree_util.tree_map(lambda a: a[:, slot], state.ssm)
+    return kv_wire, ssm_slot, length
+
+
+def import_slot(state: PagedState, slot, kv_wire, ssm_slot, length,
+                tp: int) -> PagedState:
+    """Import an exported sequence into free slot ``slot`` of THIS pool.
+
+    The decode-replica half of the handoff: pages are allocated from this
+    pool's own free list (any permutation works) and the compressed planes
+    byte-copied in (``cache.import_sequence``); the slot becomes active at
+    ``length``.  The caller must have validated capacity host-side — see
+    ``cache.import_sequence``'s docstring for the loud-failure contract.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+    length = jnp.asarray(length, jnp.int32)
+    kv = state.kv
+    if kv is not None:
+        kv = jax.vmap(lambda pkv, w: cache_mod.import_sequence(
+            pkv, slot, w, length, tp))(kv, kv_wire)
+    ssm = state.ssm
+    if ssm is not None:
+        ssm = jax.tree_util.tree_map(
+            lambda a, v: a.at[:, slot].set(v.astype(a.dtype)), ssm, ssm_slot)
+    return PagedState(
+        kv=kv, ssm=ssm,
+        lengths=state.lengths.at[slot].set(length),
+        active=state.active.at[slot].set(True))
+
+
 def release_slots(state: PagedState, mask: jax.Array,
                   free_mask: Optional[jax.Array] = None) -> PagedState:
     """Evict finished sequences: free their pages, clear their slots.

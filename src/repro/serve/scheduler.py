@@ -25,10 +25,18 @@ one ``PagedState``; ``RequestScheduler`` is the admission queue.  The loop:
                   ``lax.scan`` (K bounded by the earliest budget-finish
                   event, so streams are byte-identical to stepping one
                   token at a time), one greedy token per active slot/step
-        evict   — slots that hit their token budget or emit ``eos_id``
-                  release their pages (``release_slots``) at the window
-                  boundary; with prefix sharing a page is freed only when
-                  its host-side refcount hits zero
+        evict   — slots that hit their token budget, emit ``eos_id``, or
+                  complete a stop sequence (host-side rolling suffix match
+                  over the emitted tokens) release their pages
+                  (``release_slots``) at the window boundary; with prefix
+                  sharing a page is freed only when its host-side refcount
+                  hits zero
+
+The same machinery also runs SPLIT across replicas: ``repro.serve.disagg``
+drives ``_admit_phase`` on prefill replicas and ``_decode_window`` on
+decode replicas, with admitted sequences crossing between them as
+compressed page-transfer blobs (``repro.serve.transport``) — see
+``docs/ARCHITECTURE.md`` for the full dataflow.
 
 Admission compile count is bounded: admit functions are keyed by
 (trunk bucket, batch size) where trunk buckets are power-of-two multiples
@@ -70,7 +78,7 @@ import dataclasses
 import hashlib
 import time
 from collections import deque
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -88,20 +96,23 @@ from . import engine
 @dataclasses.dataclass
 class Request:
     """One generation request (greedy decoding, token budget + optional
-    EOS).  ``eos_id`` overrides the engine-level default when set."""
+    EOS / stop sequences).  ``eos_id`` and ``stop_seqs`` override the
+    engine-level defaults when set (``stop_seqs=()`` disables stopping for
+    this request even when the engine has defaults)."""
     uid: int
     prompt: np.ndarray               # (S,) int32, S >= tp (any length)
     max_new_tokens: int
     eos_id: Optional[int] = None
+    stop_seqs: Optional[Sequence[Sequence[int]]] = None
 
 
 @dataclasses.dataclass
 class RequestResult:
     uid: int
     prompt_len: int
-    tokens: List[int]                # generated tokens (incl. EOS if hit)
+    tokens: List[int]                # generated (incl. EOS/stop seq if hit)
     latency_s: float                 # admit (incl. own prefill) -> finish
-    stop_reason: str = "budget"      # budget | eos
+    stop_reason: str = "budget"      # budget | eos | stop_string
 
 
 @dataclasses.dataclass
@@ -128,6 +139,47 @@ class ServeStats:
     @property
     def cache_ratio(self) -> float:
         return self.peak_cache_raw_bytes / max(self.peak_cache_bytes, 1)
+
+
+def _norm_stops(stop_seqs) -> Tuple[Tuple[int, ...], ...]:
+    """Normalize stop sequences to a tuple of int tuples; empty sequences
+    are rejected (they would stop every request at its first token)."""
+    if stop_seqs is None:
+        return ()
+    out = tuple(tuple(int(t) for t in s) for s in stop_seqs)
+    if any(not s for s in out):
+        raise ValueError("stop sequences must be non-empty")
+    return out
+
+
+@dataclasses.dataclass
+class _LoopState:
+    """Host-side mutable state of one serving loop.
+
+    Extracted from ``ServeEngine.run`` so the same admission / decode /
+    termination machinery can be driven in pieces by the disaggregated
+    replicas (``repro.serve.disagg``): a prefill replica runs only
+    ``_admit_phase`` on its loop state, a decode replica only
+    ``_decode_window`` — with request occupancy seeded by a transfer
+    instead of an admission.
+    """
+    slot_req: List[Optional["Request"]]
+    done: List[bool]                  # finished, awaiting eviction
+    reason: List[str]
+    emitted: Dict[int, List[int]]
+    admit_t: Dict[int, float]
+    results: Dict[int, "RequestResult"]
+    cur: np.ndarray                   # (n_slots, 1) i32 next input tokens
+    slot_len: List[int]               # host mirror of cache lengths
+    steps: int = 0
+    dispatches: int = 0
+    admit_dispatches: int = 0
+    replay_dispatches: int = 0
+    shared_hits: int = 0
+    peak_pages: int = 0
+
+    def live_slots(self) -> List[int]:
+        return [s for s, r in enumerate(self.slot_req) if r is not None]
 
 
 class RequestScheduler:
@@ -158,6 +210,10 @@ class RequestScheduler:
                 f"max_len={self.max_len}")
         if req.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        # validate stop sequences HERE, before the request can occupy a
+        # slot — a malformed override raising mid-loop (first _check_done)
+        # would abort run() with the slot's pages still allocated
+        _norm_stops(req.stop_seqs)
         self.queue.append(req)
 
     def pop(self) -> Optional[Request]:
@@ -173,6 +229,7 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, run: RunConfig, *, tp: int = 1,
                  n_slots: int = 4, max_len: int = 256, params=None,
                  seed: int = 0, eos_id: Optional[int] = None,
+                 stop_seqs: Optional[Sequence[Sequence[int]]] = None,
                  max_fuse_steps: int = 32, prefix_sharing: bool = True):
         if cfg.encdec or cfg.frontend != "none":
             raise ValueError("continuous batching covers decoder-only, "
@@ -182,6 +239,7 @@ class ServeEngine:
         self.cfg, self.run_cfg, self.tp = cfg, run, tp
         self.n_slots, self.max_len = n_slots, max_len
         self.eos_id = eos_id
+        self.stop_seqs = _norm_stops(stop_seqs)
         self.max_fuse_steps = max_fuse_steps
         # sharing needs KV pages (attention), no recurrent state (the SSM
         # state at a prefix boundary is not recoverable from pages), and a
@@ -224,6 +282,8 @@ class ServeEngine:
         self._admit_cache: Dict[Tuple[int, int], object] = {}
         self._decode_cache: Dict[int, object] = {}
         self._replay_cache: Dict[int, object] = {}
+        self._export_cache: Dict[int, object] = {}
+        self._import_cache: Dict[int, object] = {}
         self._release = jax.jit(cl.shmap(
             self._release_fn, self.mesh, (self._sspec, P(None)),
             self._sspec))
@@ -271,6 +331,42 @@ class ServeEngine:
                 (self._sspec, P(), P("model", None), P(), P()),
                 self._sspec))
         return self._map_shared
+
+    def _export_for(self, n_cols: int):
+        """(state, slot) -> (kv wire (tp, L, ...) leaves, ssm slot leaves,
+        length) — one jitted export per page-column count (``n_cols`` is
+        static; at most max-pages-per-slot distinct values exist)."""
+        fn = self._export_cache.get(n_cols)
+        if fn is None:
+            def ex(st_g, slot):
+                kvw, ssm, length = engine.export_slot(
+                    self._squeeze(st_g), slot, n_cols, self.tp)
+                return (self._unsqueeze(kvw), self._unsqueeze(ssm), length)
+
+            fn = jax.jit(cl.shmap(
+                ex, self.mesh, (self._sspec, P()),
+                (P("model"), P("model"), P())))
+            self._export_cache[n_cols] = fn
+        return fn
+
+    def _import_for(self, n_cols: int):
+        """(state, slot, kv wire, ssm slot, length) -> state — the decode-
+        replica half of a handoff (pages allocated from THIS pool's free
+        list; see ``cache.import_sequence``)."""
+        fn = self._import_cache.get(n_cols)
+        if fn is None:
+            def im(st_g, slot, kvw_g, ssm_g, length):
+                st = engine.import_slot(
+                    self._squeeze(st_g), slot, self._squeeze(kvw_g),
+                    self._squeeze(ssm_g), length, self.tp)
+                return self._unsqueeze(st)
+
+            fn = jax.jit(cl.shmap(
+                im, self.mesh,
+                (self._sspec, P(), P("model"), P("model"), P()),
+                self._sspec))
+            self._import_cache[n_cols] = fn
+        return fn
 
     def _decode_for(self, n_steps: int):
         """One jitted K-step fused decode per distinct K.
@@ -536,285 +632,306 @@ class ServeEngine:
         return int(np.asarray(self.state.kv.page_used).sum())
 
     # -- the serving loop --------------------------------------------------
+    #
+    # The loop is factored into methods over an explicit ``_LoopState`` so
+    # the disaggregated replicas (repro.serve.disagg) can drive admission
+    # and decode separately; ``run`` below composes them into the original
+    # monolithic engine (token streams are unchanged by the refactor —
+    # the identity tests in tests/test_serve_engine.py are the proof).
 
     def _req_eos(self, req: Request) -> Optional[int]:
         return req.eos_id if req.eos_id is not None else self.eos_id
 
+    def _req_stops(self, req: Request) -> Tuple[Tuple[int, ...], ...]:
+        return (_norm_stops(req.stop_seqs) if req.stop_seqs is not None
+                else self.stop_seqs)
+
+    def _new_loop(self) -> _LoopState:
+        return _LoopState(
+            slot_req=[None] * self.n_slots,
+            done=[False] * self.n_slots,
+            reason=[""] * self.n_slots,
+            emitted={}, admit_t={}, results={},
+            cur=np.zeros((self.n_slots, 1), np.int32),
+            slot_len=[0] * self.n_slots)
+
+    def _track_peak(self, ls: _LoopState) -> None:
+        pages = sum(self._pages_for_length(ls.slot_len[s])
+                    for s, r in enumerate(ls.slot_req) if r is not None)
+        if self.prefix_sharing:
+            pages -= self._shared_page_overcount()
+        ls.peak_pages = max(ls.peak_pages, pages)
+
+    def _check_done(self, ls: _LoopState, s: int, req: Request) -> None:
+        """Host-side termination check after each emitted token.  Priority
+        when several fire on the same token: eos > stop_string > budget.
+        Stop sequences are a rolling suffix match over the emitted tokens
+        (evaluated as the host walks each fused window's token block, so a
+        stop inside a window finishes the request at the match position and
+        the slot idles to the window boundary — same convention as EOS)."""
+        toks = ls.emitted[req.uid]
+        eos = self._req_eos(req)
+        if eos is not None and toks and toks[-1] == eos:
+            ls.done[s], ls.reason[s] = True, "eos"
+            return
+        for ss in self._req_stops(req):
+            if len(toks) >= len(ss) and toks[-len(ss):] == list(ss):
+                ls.done[s], ls.reason[s] = True, "stop_string"
+                return
+        if len(toks) >= req.max_new_tokens:
+            ls.done[s], ls.reason[s] = True, "budget"
+
+    def _finish_ready(self, ls: _LoopState) -> List[RequestResult]:
+        """Harvest done slots into results and evict them; returns the
+        newly finished results (the disagg router forwards them)."""
+        freed, fresh = [], []
+        for s, req in enumerate(ls.slot_req):
+            if req is None or not ls.done[s]:
+                continue
+            now = time.perf_counter()
+            res = RequestResult(
+                uid=req.uid, prompt_len=len(req.prompt),
+                tokens=ls.emitted[req.uid][:req.max_new_tokens],
+                latency_s=now - ls.admit_t[req.uid],
+                stop_reason=ls.reason[s])
+            ls.results[req.uid] = res
+            fresh.append(res)
+            ls.slot_req[s] = None
+            ls.done[s], ls.reason[s] = False, ""
+            freed.append(s)
+        if freed:
+            self._free_slots(freed)
+        return fresh
+
+    def _free_slot_ids(self, ls: _LoopState) -> List[int]:
+        return [s for s in range(self.n_slots) if ls.slot_req[s] is None]
+
+    def _admit_shared(self, ls: _LoopState, s: int, req: Request, m: int,
+                      keys: List[bytes]) -> None:
+        """Prefix-cache hit: map m full columns, replay the suffix."""
+        ids = np.zeros((self.tp, self._maxp), np.int32)
+        for c, key in enumerate(keys):
+            ids[:, c] = self._prefix_index[key]
+            self._prefix_ref[key] += 1
+            self._slot_keys[s].append(key)
+        base_len = m * self.blk_tokens
+        ls.admit_t.setdefault(req.uid, time.perf_counter())
+        self.state = self._map_shared_for()(
+            self.state, jnp.asarray(s, jnp.int32), jnp.asarray(ids),
+            jnp.asarray(m, jnp.int32), jnp.asarray(base_len, jnp.int32))
+        ls.shared_hits += m
+        ls.slot_req[s] = req
+        self._slot_busy[s] = True
+        ls.slot_len[s] = base_len
+        ls.emitted[req.uid] = []
+
+    def _admit_cold_batch(self, ls: _LoopState, batch: List[Request],
+                          slots: List[int], trunk: int, replays) -> None:
+        """One vmapped-prefill dispatch admits the whole bucket."""
+        fn = self._admit_for(trunk, len(batch))
+        prompts = np.stack([r.prompt[:trunk] for r in batch])
+        now = time.perf_counter()
+        for r in batch:
+            ls.admit_t.setdefault(r.uid, now)
+        toks, self.state = fn(self.params, self.state,
+                              jnp.asarray(prompts, jnp.int32),
+                              jnp.asarray(slots, jnp.int32))
+        ls.admit_dispatches += 1
+        toks = np.asarray(toks)
+        for j, (req, s) in enumerate(zip(batch, slots)):
+            ls.slot_req[s] = req
+            self._slot_busy[s] = True
+            ls.slot_len[s] = trunk
+            tail = req.prompt[trunk:]
+            if len(tail):
+                ls.emitted[req.uid] = []
+                replays.append((s, np.asarray(tail, np.int32)))
+            else:
+                t = int(toks[j, 0])
+                ls.emitted[req.uid] = [t]
+                ls.cur[s] = t
+                self._check_done(ls, s, req)
+
+    def _run_replays(self, ls: _LoopState, replays) -> None:
+        """Feed all admitted slots' leftover prompt tokens through
+        fused paged replay dispatches (heterogeneous lengths share the
+        dispatch via the feed mask); each slot's first generated token
+        comes from the step consuming its last prompt token."""
+        rem = {s: tail for s, tail in replays}
+        off = {s: 0 for s in rem}
+        while rem:
+            longest = max(len(rem[s]) - off[s] for s in rem)
+            k = self._fuse_steps(longest)   # same policy as decode
+            toks = np.zeros((k, self.n_slots, 1), np.int32)
+            feed = np.zeros((k, self.n_slots), bool)
+            for s in rem:
+                t_s = rem[s][off[s]:off[s] + k]
+                toks[:len(t_s), s, 0] = t_s
+                feed[:len(t_s), s] = True
+            seq, self.state = self._replay_for(k)(
+                self.params, self.state, jnp.asarray(toks),
+                jnp.asarray(feed))
+            ls.replay_dispatches += 1
+            seq = np.asarray(seq)
+            for s in list(rem):
+                n_fed = min(k, len(rem[s]) - off[s])
+                off[s] += n_fed
+                ls.slot_len[s] += n_fed
+                if off[s] == len(rem[s]):
+                    req = ls.slot_req[s]
+                    t = int(seq[n_fed - 1, s, 0])
+                    ls.emitted[req.uid] = [t]
+                    ls.cur[s] = t
+                    self._check_done(ls, s, req)
+                    del rem[s]
+            self._track_peak(ls)
+
+    def _admit_phase(self, ls: _LoopState) -> None:
+        """Admit until slots or admissible requests run out: shared
+        prefix hits first (queue order), then one batched cold
+        dispatch per length bucket; finally replay leftover prompt
+        tokens and index the new slots' full columns."""
+        replays = []
+        new_slots = []
+        blocked = set()       # first-column keys cold-admitted now
+        progress = True
+        while progress:
+            progress = False
+            free = self._free_slot_ids(ls)
+            if not free or not len(self.scheduler):
+                break
+            if self.prefix_sharing:       # pass A: prefix-cache hits
+                rest = deque()
+                q = self.scheduler.queue
+                while q and free:
+                    req = q.popleft()
+                    m, mkeys = self._prefix_match_cols(req.prompt)
+                    if m >= 1:
+                        s = free.pop(0)
+                        self._admit_shared(ls, s, req, m, mkeys)
+                        replays.append(
+                            (s, np.asarray(req.prompt[m * self.blk_tokens:],
+                                           np.int32)))
+                        new_slots.append(s)
+                        progress = True
+                    else:
+                        rest.append(req)
+                while rest:
+                    q.appendleft(rest.pop())
+            free = self._free_slot_ids(ls)
+            if free and len(self.scheduler):  # pass B: one cold bucket
+                batch: List[Request] = []
+                rest = deque()
+                bucket = None
+                q = self.scheduler.queue
+                while q:
+                    req = q.popleft()
+                    b = self._bucket_of(len(req.prompt))
+                    fk = (self._prefix_keys(req.prompt, 1)[0]
+                          if self.prefix_sharing and
+                          len(req.prompt) > self.blk_tokens else None)
+                    ok = len(batch) < len(free)
+                    if ok and fk is not None and fk in blocked:
+                        ok = False    # dedupe: hits the index next round
+                    if ok and bucket is not None and b != bucket:
+                        ok = False
+                    if ok:
+                        bucket = b
+                        batch.append(req)
+                        if fk is not None:
+                            blocked.add(fk)
+                    else:
+                        rest.append(req)
+                while rest:
+                    q.appendleft(rest.pop())
+                if batch:
+                    slots = free[:len(batch)]
+                    self._admit_cold_batch(ls, batch, slots, bucket,
+                                           replays)
+                    new_slots.extend(slots)
+                    progress = True
+        self._run_replays(ls, replays)
+        self._register_prefixes(
+            [(s, ls.slot_req[s].prompt, ls.slot_len[s]) for s in new_slots])
+
+    def _decode_window(self, ls: _LoopState) -> None:
+        """One fused decode dispatch: K steps as one scan, K bounded by the
+        earliest slot-finish event computed host-side from the known token
+        budgets — so eviction and admission still happen at window
+        boundaries and token streams are byte-identical to the
+        one-dispatch-per-token loop.  An EOS / stop-string inside a window
+        finishes that request at its match position (its slot idles until
+        the window ends; other slots are independent, so no stream
+        changes — only the eviction happens at the boundary)."""
+        live = ls.live_slots()
+        if not live:
+            return
+        bound = min(ls.slot_req[s].max_new_tokens - len(ls.emitted[
+            ls.slot_req[s].uid]) for s in live)
+        n_steps = self._fuse_steps(bound)
+        seq, self.state = self._decode_for(n_steps)(
+            self.params, self.state, jnp.asarray(ls.cur))
+        ls.steps += n_steps
+        ls.dispatches += 1
+        seq = np.asarray(seq)                     # (K, n_slots, 1)
+        for t_i in range(n_steps):
+            for s in live:
+                req = ls.slot_req[s]
+                ls.slot_len[s] += 1  # device appends even past host-done
+                if ls.done[s]:
+                    continue
+                t = int(seq[t_i, s, 0])
+                ls.emitted[req.uid].append(t)
+                ls.cur[s] = t
+                self._check_done(ls, s, req)
+            self._track_peak(ls)
+
+    def _stats(self, ls: _LoopState, wall: float) -> ServeStats:
+        stored_pb, raw_pb = cache_mod.page_bytes(self.cfg, self.run_cfg)
+        n_tok = sum(len(r.tokens) for r in ls.results.values())
+        lats = sorted(r.latency_s for r in ls.results.values())
+        pct = (lambda q: float(np.percentile(lats, q)) if lats else 0.0)
+        return ServeStats(
+            n_requests=len(ls.results), n_tokens=n_tok,
+            decode_steps=ls.steps,
+            n_dispatches=ls.dispatches,
+            n_admit_dispatches=ls.admit_dispatches,
+            n_replay_dispatches=ls.replay_dispatches,
+            n_admit_compiles=self.n_admit_compiles,
+            shared_page_hits=ls.shared_hits,
+            wall_s=wall,
+            requests_per_s=len(ls.results) / max(wall, 1e-9),
+            tokens_per_s=n_tok / max(wall, 1e-9),
+            peak_pages=ls.peak_pages,
+            peak_cache_bytes=ls.peak_pages * stored_pb,
+            peak_cache_raw_bytes=ls.peak_pages * raw_pb,
+            mean_latency_s=float(np.mean(lats)) if lats else 0.0,
+            latency_p50_s=pct(50), latency_p95_s=pct(95),
+            decode_backend=kernel_ops.resolve_decode_backend(
+                self.run_cfg.codec))
+
     def run(self, requests: List[Request]
             ) -> Tuple[List[RequestResult], ServeStats]:
         """Serve a request list to completion; returns results in input
-        order plus engine-level stats.
-
-        Decode steps are fused: each dispatch runs K steps as one scan,
-        where K is bounded by the earliest slot-finish event computed
-        host-side from the known token budgets — so eviction and admission
-        still happen at window boundaries and token streams are
-        byte-identical to the one-dispatch-per-token loop.  An EOS inside a
-        window finishes that request at its EOS position (its slot idles
-        until the window ends; other slots are independent, so no stream
-        changes — only the eviction happens at the boundary).
-        """
+        order plus engine-level stats.  See ``_decode_window`` for the
+        fused-dispatch / window-boundary semantics."""
         uids = [r.uid for r in requests]
         if len(set(uids)) != len(uids):
             raise ValueError("request uids must be unique (token streams "
                              "are keyed by uid)")
         for r in requests:
             self.scheduler.submit(r)
-        slot_req: List[Optional[Request]] = [None] * self.n_slots
-        done = [False] * self.n_slots     # finished, awaiting eviction
-        reason = [""] * self.n_slots
-        emitted: Dict[int, List[int]] = {}
-        admit_t: Dict[int, float] = {}
-        results: Dict[int, RequestResult] = {}
-        cur = np.zeros((self.n_slots, 1), np.int32)
-        slot_len = [0] * self.n_slots     # host mirror of cache lengths
-        steps = 0
-        dispatches = 0
-        admit_dispatches = 0
-        replay_dispatches = 0
-        shared_hits = 0
-        peak_pages = 0
-        stored_pb, raw_pb = cache_mod.page_bytes(self.cfg, self.run_cfg)
+        ls = self._new_loop()
         t0 = time.perf_counter()
-
-        def track_peak():
-            nonlocal peak_pages
-            pages = sum(self._pages_for_length(slot_len[s])
-                        for s, r in enumerate(slot_req) if r is not None)
-            if self.prefix_sharing:
-                pages -= self._shared_page_overcount()
-            peak_pages = max(peak_pages, pages)
-
-        def check_done(s: int, req: Request) -> None:
-            toks = emitted[req.uid]
-            eos = self._req_eos(req)
-            if eos is not None and toks and toks[-1] == eos:
-                done[s], reason[s] = True, "eos"
-            elif len(toks) >= req.max_new_tokens:
-                done[s], reason[s] = True, "budget"
-
-        def finish_ready():
-            freed = []
-            for s, req in enumerate(slot_req):
-                if req is None or not done[s]:
-                    continue
-                now = time.perf_counter()
-                results[req.uid] = RequestResult(
-                    uid=req.uid, prompt_len=len(req.prompt),
-                    tokens=emitted[req.uid][:req.max_new_tokens],
-                    latency_s=now - admit_t[req.uid],
-                    stop_reason=reason[s])
-                slot_req[s] = None
-                done[s], reason[s] = False, ""
-                freed.append(s)
-            if freed:
-                self._free_slots(freed)
-
-        def free_slot_ids():
-            return [s for s in range(self.n_slots) if slot_req[s] is None]
-
-        def admit_shared(s: int, req: Request, m: int,
-                         keys: List[bytes]) -> None:
-            """Prefix-cache hit: map m full columns, replay the suffix."""
-            nonlocal shared_hits
-            ids = np.zeros((self.tp, self._maxp), np.int32)
-            for c, key in enumerate(keys):
-                ids[:, c] = self._prefix_index[key]
-                self._prefix_ref[key] += 1
-                self._slot_keys[s].append(key)
-            base_len = m * self.blk_tokens
-            admit_t[req.uid] = time.perf_counter()
-            self.state = self._map_shared_for()(
-                self.state, jnp.asarray(s, jnp.int32), jnp.asarray(ids),
-                jnp.asarray(m, jnp.int32), jnp.asarray(base_len, jnp.int32))
-            shared_hits += m
-            slot_req[s] = req
-            self._slot_busy[s] = True
-            slot_len[s] = base_len
-            emitted[req.uid] = []
-
-        def admit_cold_batch(batch: List[Request], slots: List[int],
-                             trunk: int, replays) -> None:
-            """One vmapped-prefill dispatch admits the whole bucket."""
-            nonlocal admit_dispatches
-            fn = self._admit_for(trunk, len(batch))
-            prompts = np.stack([r.prompt[:trunk] for r in batch])
-            now = time.perf_counter()
-            for r in batch:
-                admit_t[r.uid] = now
-            toks, self.state = fn(self.params, self.state,
-                                  jnp.asarray(prompts, jnp.int32),
-                                  jnp.asarray(slots, jnp.int32))
-            admit_dispatches += 1
-            toks = np.asarray(toks)
-            for j, (req, s) in enumerate(zip(batch, slots)):
-                slot_req[s] = req
-                self._slot_busy[s] = True
-                slot_len[s] = trunk
-                tail = req.prompt[trunk:]
-                if len(tail):
-                    emitted[req.uid] = []
-                    replays.append((s, np.asarray(tail, np.int32)))
-                else:
-                    t = int(toks[j, 0])
-                    emitted[req.uid] = [t]
-                    cur[s] = t
-                    check_done(s, req)
-
-        def run_replays(replays) -> None:
-            """Feed all admitted slots' leftover prompt tokens through
-            fused paged replay dispatches (heterogeneous lengths share the
-            dispatch via the feed mask); each slot's first generated token
-            comes from the step consuming its last prompt token."""
-            nonlocal replay_dispatches
-            rem = {s: tail for s, tail in replays}
-            off = {s: 0 for s in rem}
-            while rem:
-                longest = max(len(rem[s]) - off[s] for s in rem)
-                k = self._fuse_steps(longest)   # same policy as decode
-                toks = np.zeros((k, self.n_slots, 1), np.int32)
-                feed = np.zeros((k, self.n_slots), bool)
-                for s in rem:
-                    t_s = rem[s][off[s]:off[s] + k]
-                    toks[:len(t_s), s, 0] = t_s
-                    feed[:len(t_s), s] = True
-                seq, self.state = self._replay_for(k)(
-                    self.params, self.state, jnp.asarray(toks),
-                    jnp.asarray(feed))
-                replay_dispatches += 1
-                seq = np.asarray(seq)
-                for s in list(rem):
-                    n_fed = min(k, len(rem[s]) - off[s])
-                    off[s] += n_fed
-                    slot_len[s] += n_fed
-                    if off[s] == len(rem[s]):
-                        req = slot_req[s]
-                        t = int(seq[n_fed - 1, s, 0])
-                        emitted[req.uid] = [t]
-                        cur[s] = t
-                        check_done(s, req)
-                        del rem[s]
-                track_peak()
-
-        def admit_phase() -> None:
-            """Admit until slots or admissible requests run out: shared
-            prefix hits first (queue order), then one batched cold
-            dispatch per length bucket; finally replay leftover prompt
-            tokens and index the new slots' full columns."""
-            replays = []
-            new_slots = []
-            blocked = set()       # first-column keys cold-admitted now
-            progress = True
-            while progress:
-                progress = False
-                free = free_slot_ids()
-                if not free or not len(self.scheduler):
-                    break
-                if self.prefix_sharing:       # pass A: prefix-cache hits
-                    rest = deque()
-                    q = self.scheduler.queue
-                    while q and free:
-                        req = q.popleft()
-                        m, mkeys = self._prefix_match_cols(req.prompt)
-                        if m >= 1:
-                            s = free.pop(0)
-                            admit_shared(s, req, m, mkeys)
-                            replays.append(
-                                (s, np.asarray(req.prompt[m * self.blk_tokens:],
-                                               np.int32)))
-                            new_slots.append(s)
-                            progress = True
-                        else:
-                            rest.append(req)
-                    while rest:
-                        q.appendleft(rest.pop())
-                free = free_slot_ids()
-                if free and len(self.scheduler):  # pass B: one cold bucket
-                    batch: List[Request] = []
-                    rest = deque()
-                    bucket = None
-                    q = self.scheduler.queue
-                    while q:
-                        req = q.popleft()
-                        b = self._bucket_of(len(req.prompt))
-                        fk = (self._prefix_keys(req.prompt, 1)[0]
-                              if self.prefix_sharing and
-                              len(req.prompt) > self.blk_tokens else None)
-                        ok = len(batch) < len(free)
-                        if ok and fk is not None and fk in blocked:
-                            ok = False    # dedupe: hits the index next round
-                        if ok and bucket is not None and b != bucket:
-                            ok = False
-                        if ok:
-                            bucket = b
-                            batch.append(req)
-                            if fk is not None:
-                                blocked.add(fk)
-                        else:
-                            rest.append(req)
-                    while rest:
-                        q.appendleft(rest.pop())
-                    if batch:
-                        slots = free[:len(batch)]
-                        admit_cold_batch(batch, slots, bucket, replays)
-                        new_slots.extend(slots)
-                        progress = True
-            run_replays(replays)
-            self._register_prefixes(
-                [(s, slot_req[s].prompt, slot_len[s]) for s in new_slots])
-
-        while len(self.scheduler) or any(r is not None for r in slot_req):
-            admit_phase()
-            track_peak()
-            finish_ready()
-            live = [s for s, r in enumerate(slot_req) if r is not None]
-            if not live:
-                continue
-
-            # one dispatch covers K steps; K bounded by the earliest finish
-            bound = min(slot_req[s].max_new_tokens - len(emitted[
-                slot_req[s].uid]) for s in live)
-            n_steps = self._fuse_steps(bound)
-            seq, self.state = self._decode_for(n_steps)(
-                self.params, self.state, jnp.asarray(cur))
-            steps += n_steps
-            dispatches += 1
-            seq = np.asarray(seq)                     # (K, n_slots, 1)
-            for t_i in range(n_steps):
-                for s in live:
-                    req = slot_req[s]
-                    slot_len[s] += 1  # device appends even past host-done
-                    if done[s]:
-                        continue
-                    t = int(seq[t_i, s, 0])
-                    emitted[req.uid].append(t)
-                    cur[s] = t
-                    check_done(s, req)
-                track_peak()
-            finish_ready()
-
+        while len(self.scheduler) or ls.live_slots():
+            self._admit_phase(ls)
+            self._track_peak(ls)
+            self._finish_ready(ls)
+            self._decode_window(ls)
+            self._finish_ready(ls)
         wall = time.perf_counter() - t0
-        n_tok = sum(len(r.tokens) for r in results.values())
-        lats = sorted(r.latency_s for r in results.values())
-        pct = (lambda q: float(np.percentile(lats, q)) if lats else 0.0)
-        stats = ServeStats(
-            n_requests=len(results), n_tokens=n_tok, decode_steps=steps,
-            n_dispatches=dispatches,
-            n_admit_dispatches=admit_dispatches,
-            n_replay_dispatches=replay_dispatches,
-            n_admit_compiles=self.n_admit_compiles,
-            shared_page_hits=shared_hits,
-            wall_s=wall,
-            requests_per_s=len(results) / max(wall, 1e-9),
-            tokens_per_s=n_tok / max(wall, 1e-9),
-            peak_pages=peak_pages,
-            peak_cache_bytes=peak_pages * stored_pb,
-            peak_cache_raw_bytes=peak_pages * raw_pb,
-            mean_latency_s=float(np.mean(lats)) if lats else 0.0,
-            latency_p50_s=pct(50), latency_p95_s=pct(95),
-            decode_backend=kernel_ops.resolve_decode_backend(
-                self.run_cfg.codec))
-        return [results[r.uid] for r in requests], stats
+        stats = self._stats(ls, wall)
+        return [ls.results[r.uid] for r in requests], stats
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,402 @@
+"""Compressed page transfer between serving replicas (the wire half of
+disaggregated prefill).
+
+A prefill replica exports each admitted sequence as a :class:`SequenceBlob`
+— the LEXI-FW-compressed full pages (byte-identical to its pool pages, see
+``repro.models.cache.export_sequence`` for the canonical WIRE FORMAT spec),
+the partial-tail ring, per-slot length/position, and the SSM-state slot for
+hybrids — and ships it through a :class:`PageTransport` to a decode
+replica, which scatters it into its own pool.
+
+The paper's end-to-end argument (and Huff-LLM's) is that the win lives on
+the LINK: keep the cache entropy-coded across every hop and decode only at
+compute.  The transport therefore meters every transfer twice —
+
+  * ``wire_bytes``      what actually crossed (compressed pages + dedup),
+  * ``raw_bytes``       the bf16-dense bytes of the same payload,
+
+and prices both through ``repro.hw.noc.LinkModel`` so the serving bench can
+report the link-byte/latency reduction next to tokens/s.
+
+**Content-addressed page dedup.**  Full pages are immutable and content-
+deterministic (the same prompt prefix always compresses to the same
+bytes — PR 3's prefix-index invariant), so the transport keeps a per-
+destination digest store and replaces pages the receiver already holds
+with 13-byte references (tag + sha256[:12]).  That is what pushes link
+bytes below the LEXI-FW storage floor of ~13/16 bits per value on
+prefix-heavy request mixes; the codec-only number is metered separately
+(``wire_bytes_nodedup``).  Dedup never changes decode state: a reference
+resolves to the byte-identical payload, or the import fails loudly.
+
+``LoopbackTransport`` is the in-process implementation (prefill and decode
+replicas in one process); the ``PageTransport`` interface is the seam a
+multi-host transport implements later — everything it needs is the byte
+format plus the digest-store contract, both specified in
+``cache.export_sequence``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import struct
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+import numpy as np
+
+try:  # ml_dtypes ships with jax; the wire format needs its bfloat16
+    import ml_dtypes
+    BF16 = np.dtype(ml_dtypes.bfloat16)
+except ImportError:  # pragma: no cover - jax always bundles ml_dtypes
+    BF16 = np.dtype(np.uint16)
+
+from repro.hw.noc import LinkModel
+
+MAGIC = b"LXSQ"
+VERSION = 1
+_DIGEST_BYTES = 12
+_FLAG_CODEC, _FLAG_KV, _FLAG_SSM = 1, 2, 4
+_HDR = struct.Struct("<4sBBHHHHIHIIIiH")   # through n_emitted
+
+
+def _page_digest(payload: bytes) -> bytes:
+    return hashlib.sha256(payload).digest()[:_DIGEST_BYTES]
+
+
+@dataclasses.dataclass
+class SequenceBlob:
+    """One admitted sequence's transferable cache state (host arrays).
+
+    Array layout is per-shard, shard-major: every array carries a leading
+    ``(tp, n_layers)`` axis pair (the stacked per-shard views the engine's
+    ``export_slot`` produces under shard_map).  ``kv`` is None for
+    attention-free configs, ``ssm`` for attention-only ones.  See
+    ``repro.models.cache.export_sequence`` for the byte-level WIRE FORMAT
+    this serializes to.
+    """
+    codec_on: bool
+    tp: int
+    n_layers: int
+    n_cols: int
+    blk: int
+    w: int
+    k: int
+    esc_cap: int
+    npad: int
+    length: int
+    cur_token: int
+    emitted: List[int]
+    kv: Optional[Dict[str, np.ndarray]]     # field name -> (tp, L, ...) array
+    ssm: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]]
+
+    # -- geometry ----------------------------------------------------------
+
+    def valid_cols(self, shard: int) -> int:
+        """Full pages shard ``shard`` contributed (host mirror of
+        ``cache.local_full_pages``)."""
+        if self.length <= 0:
+            return 0
+        loc = max((self.length - 1 - shard) // self.tp + 1, 0)
+        return loc // self.blk
+
+    @property
+    def n_valid_pages(self) -> int:
+        return sum(self.valid_cols(t) for t in range(self.tp)) * self.n_layers
+
+    @property
+    def raw_bytes(self) -> int:
+        """bf16-dense bytes of the same payload — the uncompressed-transfer
+        baseline the link metering divides by (pages at 2 B/value + the
+        ring rows + the SSM state at its native width)."""
+        n = 0
+        if self.kv is not None:
+            n += self.n_valid_pages * self.blk * self.w * 2
+            n += self.kv["ring"].nbytes
+        if self.ssm is not None:
+            n += sum(a.nbytes for a in self.ssm)
+        return n
+
+    # -- page payload extraction ------------------------------------------
+
+    def _page_payload(self, t: int, l: int, c: int) -> bytes:
+        kv = self.kv
+        if self.codec_on:
+            return b"".join((
+                kv["signman"][t, l, c].tobytes(),
+                kv["planes"][t, l, c].tobytes(),
+                kv["dict_syms"][t, l, c].tobytes(),
+                kv["esc_pos"][t, l, c].tobytes(),
+                kv["esc_raw"][t, l, c].tobytes()))
+        return kv["raw_pages"][t, l, c].tobytes()
+
+    def page_entries(self) -> Iterator[Tuple[int, int, int, bytes]]:
+        """(shard, layer, col, payload) for every VALID page, in wire
+        order (shard-major, then layer, then column)."""
+        for t in range(self.tp):
+            for l in range(self.n_layers):
+                for c in range(self.valid_cols(t)):
+                    yield t, l, c, self._page_payload(t, l, c)
+
+    # -- serialization -----------------------------------------------------
+
+    def to_wire(self, known: Optional[Set[bytes]] = None
+                ) -> Tuple[bytes, List[Tuple[bytes, bytes]], int]:
+        """Serialize to the version-1 wire format.
+
+        ``known``: digests the receiver already holds — matching pages ship
+        as 13-byte references instead of payloads.  Returns ``(data,
+        inline, n_refs)`` where ``inline`` lists the (digest, payload)
+        pairs that crossed in full (the sender adds them to its picture of
+        the receiver's store after a successful send).
+        """
+        flags = ((_FLAG_CODEC if self.codec_on else 0)
+                 | (_FLAG_KV if self.kv is not None else 0)
+                 | (_FLAG_SSM if self.ssm is not None else 0))
+        parts = [_HDR.pack(MAGIC, VERSION, flags, self.tp, self.n_layers,
+                           self.n_cols, self.blk, self.w, self.k,
+                           self.esc_cap, self.npad, self.length,
+                           self.cur_token, len(self.emitted))]
+        parts.append(np.asarray(self.emitted, np.int32).tobytes())
+        if self.ssm is not None:
+            h, cx, cbc = self.ssm
+            nh_loc, hd, nst = h.shape[2:]
+            parts.append(struct.pack("<HHHHI", nh_loc, hd, nst,
+                                     cx.shape[2], cx.shape[3]))
+            parts += [h.tobytes(), cx.tobytes(), cbc.tobytes()]
+        if self.kv is not None:
+            parts.append(self.kv["ring"].tobytes())
+        inline: List[Tuple[bytes, bytes]] = []
+        n_refs = 0
+        if self.kv is not None:
+            known = set(known) if known is not None else None
+            for _, _, _, payload in self.page_entries():
+                digest = _page_digest(payload)
+                if known is not None and digest in known:
+                    parts.append(b"\x01" + digest)
+                    n_refs += 1
+                else:
+                    parts.append(b"\x00" + digest + payload)
+                    inline.append((digest, payload))
+                    if known is not None:
+                        known.add(digest)          # dedupe within one blob
+        return b"".join(parts), inline, n_refs
+
+    @classmethod
+    def from_wire(cls, data: bytes,
+                  store: Optional[Dict[bytes, bytes]] = None
+                  ) -> "SequenceBlob":
+        """Parse a version-1 wire blob.  ``store`` resolves tag-1 page
+        references (content digest -> payload); an unknown digest or a
+        version/magic mismatch raises ``ValueError`` before any state is
+        touched."""
+        (magic, version, flags, tp, n_layers, n_cols, blk, w, k, esc_cap,
+         npad, length, cur_token, n_emitted) = _HDR.unpack_from(data, 0)
+        if magic != MAGIC:
+            raise ValueError(f"bad wire magic {magic!r}")
+        if version != VERSION:
+            raise ValueError(f"unsupported wire version {version} "
+                             f"(this codec speaks {VERSION})")
+        off = _HDR.size
+        codec_on = bool(flags & _FLAG_CODEC)
+        emitted = np.frombuffer(data, np.int32, n_emitted, off).tolist()
+        off += 4 * n_emitted
+
+        def rd(dtype, shape):
+            nonlocal off
+            dt = np.dtype(dtype)
+            n = int(np.prod(shape))
+            a = np.frombuffer(data, dt, n, off).reshape(shape).copy()
+            off += n * dt.itemsize
+            return a
+
+        ssm = None
+        if flags & _FLAG_SSM:
+            nh_loc, hd, nst, kc, di_loc = struct.unpack_from("<HHHHI",
+                                                             data, off)
+            off += struct.calcsize("<HHHHI")
+            ssm = (rd(np.float32, (tp, n_layers, nh_loc, hd, nst)),
+                   rd(BF16, (tp, n_layers, kc, di_loc)),
+                   rd(BF16, (tp, n_layers, kc, 2 * nst)))
+
+        kv = None
+        if flags & _FLAG_KV:
+            ring = rd(BF16, (tp, n_layers, blk, w))
+            n = blk * w
+            if codec_on:
+                kv = {
+                    "signman": np.zeros((tp, n_layers, n_cols, n), np.uint8),
+                    "planes": np.zeros((tp, n_layers, n_cols, k, npad // 32),
+                                       np.uint32),
+                    "dict_syms": np.zeros((tp, n_layers, n_cols, 1 << k),
+                                          np.uint8),
+                    "esc_pos": np.zeros((tp, n_layers, n_cols, esc_cap),
+                                        np.int32),
+                    "esc_raw": np.zeros((tp, n_layers, n_cols, esc_cap),
+                                        np.uint8),
+                    "ring": ring,
+                }
+            else:
+                kv = {"raw_pages": np.zeros((tp, n_layers, n_cols, blk, w),
+                                            BF16),
+                      "ring": ring}
+            blob = cls(codec_on=codec_on, tp=tp, n_layers=n_layers,
+                       n_cols=n_cols, blk=blk, w=w, k=k, esc_cap=esc_cap,
+                       npad=npad, length=length, cur_token=cur_token,
+                       emitted=emitted, kv=kv, ssm=ssm)
+            for t in range(tp):
+                for l in range(n_layers):
+                    for c in range(blob.valid_cols(t)):
+                        tag = data[off]
+                        digest = data[off + 1:off + 1 + _DIGEST_BYTES]
+                        off += 1 + _DIGEST_BYTES
+                        if tag == 1:
+                            if store is None or digest not in store:
+                                raise ValueError(
+                                    "unknown page digest on wire — the "
+                                    "receiver's content store is missing "
+                                    f"{digest.hex()} (shard {t}, layer {l},"
+                                    f" col {c})")
+                            payload = store[digest]
+                        else:
+                            size = blob._payload_size()
+                            payload = data[off:off + size]
+                            off += size
+                            if store is not None:
+                                store[digest] = payload
+                        blob._scatter_payload(t, l, c, payload)
+            return blob
+        return cls(codec_on=codec_on, tp=tp, n_layers=n_layers,
+                   n_cols=n_cols, blk=blk, w=w, k=k, esc_cap=esc_cap,
+                   npad=npad, length=length, cur_token=cur_token,
+                   emitted=emitted, kv=None, ssm=ssm)
+
+    def _payload_size(self) -> int:
+        n = self.blk * self.w
+        if not self.codec_on:
+            return n * 2
+        return (n + self.k * (self.npad // 32) * 4 + (1 << self.k)
+                + self.esc_cap * 4 + self.esc_cap)
+
+    def _scatter_payload(self, t: int, l: int, c: int,
+                         payload: bytes) -> None:
+        kv = self.kv
+        if not self.codec_on:
+            kv["raw_pages"][t, l, c] = np.frombuffer(
+                payload, BF16).reshape(self.blk, self.w)
+            return
+        n = self.blk * self.w
+        o = 0
+        kv["signman"][t, l, c] = np.frombuffer(payload, np.uint8, n, o)
+        o += n
+        npl = self.k * (self.npad // 32)
+        kv["planes"][t, l, c] = np.frombuffer(
+            payload, np.uint32, npl, o).reshape(self.k, self.npad // 32)
+        o += npl * 4
+        nd = 1 << self.k
+        kv["dict_syms"][t, l, c] = np.frombuffer(payload, np.uint8, nd, o)
+        o += nd
+        kv["esc_pos"][t, l, c] = np.frombuffer(payload, np.int32,
+                                               self.esc_cap, o)
+        o += self.esc_cap * 4
+        kv["esc_raw"][t, l, c] = np.frombuffer(payload, np.uint8,
+                                               self.esc_cap, o)
+
+
+@dataclasses.dataclass
+class TransportStats:
+    """Cumulative link accounting across transfers (one link / direction)."""
+    n_transfers: int = 0
+    wire_bytes: int = 0          # bytes that actually crossed (with dedup)
+    wire_bytes_nodedup: int = 0  # same transfers, dedup disabled (codec only)
+    raw_bytes: int = 0           # bf16-dense bytes of the same payloads
+    pages_inline: int = 0        # page payloads shipped in full
+    pages_ref: int = 0           # pages replaced by content references
+    model_ns: float = 0.0        # LinkModel latency of the wire bytes
+    model_ns_raw: float = 0.0    # LinkModel latency of the raw baseline
+
+    @property
+    def reduction(self) -> float:
+        """Fractional link-byte reduction vs the bf16-dense transfer —
+        the serving-stack analogue of the paper's Table 3 column."""
+        return 1.0 - self.wire_bytes / max(self.raw_bytes, 1)
+
+
+class PageTransport:
+    """Interface of the prefill→decode handoff link.
+
+    ``send`` serializes (and meters) a blob for a destination; ``recv``
+    reconstructs it on the destination side.  Implementations own the
+    per-destination content store that backs page dedup.  In-process today
+    (:class:`LoopbackTransport`); a multi-host implementation only needs
+    these two methods plus the WIRE FORMAT in ``cache.export_sequence``.
+    """
+
+    stats: TransportStats
+
+    def send(self, blob: SequenceBlob, dst: str) -> bytes:
+        raise NotImplementedError
+
+    def recv(self, data: bytes, dst: str) -> SequenceBlob:
+        raise NotImplementedError
+
+
+class LoopbackTransport(PageTransport):
+    """In-process transport: full serialize → bytes → parse round trip (so
+    the byte format is exercised on every handoff), with content-addressed
+    page dedup and LinkModel metering.
+
+    ``dedup=False`` ships every page inline (the codec-only baseline).
+    ``hops`` positions the prefill and decode replicas on the chiplet mesh
+    for the latency model.  The digest store is per-destination and grows
+    with distinct page content; ``max_store_pages`` bounds it FIFO (a real
+    multi-host transport would tie eviction to the receiver's pool instead).
+    """
+
+    def __init__(self, dedup: bool = True, hops: int = 2,
+                 link: Optional[LinkModel] = None,
+                 max_store_pages: int = 4096):
+        self.dedup = dedup
+        self.hops = hops
+        self.link = link if link is not None else LinkModel()
+        self.max_store_pages = max_store_pages
+        self.stats = TransportStats()
+        self._stores: Dict[str, Dict[bytes, bytes]] = {}
+
+    def _store(self, dst: str) -> Dict[bytes, bytes]:
+        return self._stores.setdefault(dst, {})
+
+    def send(self, blob: SequenceBlob, dst: str) -> bytes:
+        store = self._store(dst)
+        if self.dedup:
+            # Evict BEFORE snapshotting the known set, never after: a blob
+            # serialized against the pre-eviction store could carry tag-1
+            # references to exactly the entries evicted under it, making
+            # the very next recv fail on a healthy transfer.  The store
+            # may overshoot the bound by one blob's inline pages until the
+            # next send.  (Loopback contract: recv a wire blob before the
+            # next send to the same destination.)
+            while len(store) > self.max_store_pages:
+                store.pop(next(iter(store)))
+        known = set(store) if self.dedup else None
+        data, inline, n_refs = blob.to_wire(known)
+        # a ref entry is the inline entry minus its payload, so the
+        # dedup-off size is pure arithmetic — no second serialization
+        nodedup_len = len(data) + n_refs * blob._payload_size()
+        st = self.stats
+        st.n_transfers += 1
+        st.wire_bytes += len(data)
+        st.wire_bytes_nodedup += nodedup_len
+        st.raw_bytes += blob.raw_bytes
+        st.pages_inline += len(inline)
+        st.pages_ref += n_refs
+        st.model_ns += self.link.transfer_ns(len(data), self.hops)
+        st.model_ns_raw += self.link.transfer_ns(blob.raw_bytes, self.hops)
+        if self.dedup:
+            for digest, payload in inline:
+                store[digest] = payload
+        return data
+
+    def recv(self, data: bytes, dst: str) -> SequenceBlob:
+        # the loopback receiver shares the sender-maintained store (same
+        # host); a remote receiver maintains its own from inline payloads
+        return SequenceBlob.from_wire(data, self._store(dst))

@@ -1,0 +1,342 @@
+"""Disaggregated prefill tests: prefill replicas feeding decode replicas
+through compressed page transfer must serve token streams byte-identical to
+the monolithic engine (dense / hybrid / MoE x codec on/off x jax/interpret
+backends), the export→import round trip must be bit-exact on the compressed
+planes, imports must work against a permuted free list and fail loudly on
+an oversubscribed pool, and the transport must meter (and dedup) wire
+bytes correctly."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, MoEConfig, RunConfig, SSMConfig
+from repro.core.collectives import CodecConfig
+from repro.models import cache as cache_mod
+from repro.serve import (DisaggEngine, LoopbackTransport, Request,
+                         SequenceBlob, ServeEngine)
+from repro.serve.disagg import DecodeReplica, Handoff, PrefillReplica
+
+RNG = np.random.default_rng(7)
+
+TP = 2
+MAXLEN = 64
+
+CASES = {
+    "dense": ModelConfig(name="t2", family="dense", n_layers=2, d_model=64,
+                         n_heads=8, n_kv_heads=4, d_ff=128, vocab_size=500,
+                         head_dim=16),
+    "hybrid": ModelConfig(
+        name="h", family="hybrid", n_layers=3, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=500, head_dim=16,
+        parallel_hybrid=True, attn_layout="hymba_3global", window=16,
+        ssm=SSMConfig(d_state=16, headdim=8, chunk=16), sub_quadratic=True),
+    "moe": ModelConfig(name="m", family="moe", n_layers=2, d_model=64,
+                       n_heads=4, n_kv_heads=4, d_ff=0, vocab_size=500,
+                       head_dim=16,
+                       moe=MoEConfig(n_experts=8, top_k=2, d_ff=32,
+                                     n_shared=1, capacity_factor=4.0)),
+}
+
+
+def _run_cfg(codec_on: bool, backend: str = "jax") -> RunConfig:
+    codec = (CodecConfig(cache_block=4) if codec_on
+             else dataclasses.replace(CodecConfig.off(), cache_block=4))
+    return RunConfig(codec=dataclasses.replace(codec,
+                                               decode_backend=backend))
+
+
+def _requests():
+    """Mixed lengths (incl. unaligned), shared prefixes, a budget-1
+    request that must finish ON the prefill replica, more requests than
+    decode slots."""
+    a = RNG.integers(0, 500, (16,)).astype(np.int32)
+    specs = [(a, 5), (RNG.integers(0, 500, (9,)).astype(np.int32), 3),
+             (a.copy(), 4), (RNG.integers(0, 500, (12,)).astype(np.int32), 1),
+             (a.copy(), 6)]
+    return [Request(uid=i, prompt=p, max_new_tokens=n)
+            for i, (p, n) in enumerate(specs)]
+
+
+@pytest.mark.parametrize("codec_on", [True, False], ids=["codec", "raw"])
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_disagg_matches_monolithic(case, codec_on):
+    """The acceptance bar: decode-replica token streams are byte-identical
+    to the monolithic ServeEngine across dense/hybrid/MoE x codec on/off
+    (hybrids prove the SSM-state slots survive the wire)."""
+    cfg = CASES[case]
+    run = _run_cfg(codec_on)
+    reqs = _requests()
+    mono = ServeEngine(cfg, run, tp=TP, n_slots=2, max_len=MAXLEN, seed=1)
+    res_m, _ = mono.run(reqs)
+    dis = DisaggEngine(cfg, run, tp=TP, n_prefill=1, n_decode=1, n_slots=2,
+                       max_len=MAXLEN, seed=1)
+    res_d, st = dis.run(reqs)
+    for x, y in zip(res_m, res_d):
+        assert x.tokens == y.tokens, (case, codec_on, x.uid)
+        assert x.stop_reason == y.stop_reason
+    # the budget-1 request finished at admission: no transfer for it
+    assert st.n_transfers == len(reqs) - 1
+    assert st.wire_bytes > 0 and st.wire_raw_bytes > 0
+    # every decode pool drained after the run
+    for dr in dis.decodes:
+        if dr.engine.state.kv is not None:
+            assert dr.engine._pages_in_use() == 0
+
+
+def test_disagg_interpret_backend_identity():
+    """Imported pages decode identically under the fused-kernel (Pallas
+    interpret) backend — the wire format is backend-agnostic."""
+    cfg = CASES["dense"]
+    reqs = _requests()
+    res_j, _ = DisaggEngine(cfg, _run_cfg(True, "jax"), tp=TP, n_prefill=1,
+                            n_decode=1, n_slots=2, max_len=MAXLEN,
+                            seed=1).run(reqs)
+    res_k, st_k = DisaggEngine(cfg, _run_cfg(True, "interpret"), tp=TP,
+                               n_prefill=1, n_decode=1, n_slots=2,
+                               max_len=MAXLEN, seed=1).run(reqs)
+    assert st_k.decode_backend == "interpret"
+    for x, y in zip(res_j, res_k):
+        assert x.tokens == y.tokens, x.uid
+
+
+def test_disagg_multi_replica_routing():
+    """N=2 prefill -> M=2 decode with per-replica slot accounting: all
+    requests complete with the monolithic streams, transfers spread across
+    decode replicas, every pool drains."""
+    cfg = CASES["dense"]
+    run = _run_cfg(True)
+    reqs = _requests() + [Request(uid=10 + i,
+                                  prompt=RNG.integers(0, 500, (8,)
+                                                      ).astype(np.int32),
+                                  max_new_tokens=3) for i in range(3)]
+    mono = ServeEngine(cfg, run, tp=TP, n_slots=2, max_len=MAXLEN, seed=1)
+    res_m, _ = mono.run(reqs)
+    dis = DisaggEngine(cfg, run, tp=TP, n_prefill=2, n_decode=2, n_slots=2,
+                       max_len=MAXLEN, seed=1)
+    res_d, st = dis.run(reqs)
+    for x, y in zip(res_m, res_d):
+        assert x.tokens == y.tokens, x.uid
+    assert st.n_prefill_replicas == 2 and st.n_decode_replicas == 2
+    assert st.n_transfers == len(reqs) - 1          # one budget-1 request
+    used = [len(dr.ls.results) for dr in dis.decodes]
+    assert sum(used) == len(reqs) - 1 and all(u > 0 for u in used)
+    for dr in dis.decodes:
+        assert dr.engine._pages_in_use() == 0
+        assert not dr.engine._slot_busy.any()
+
+
+# ---------------------------------------------------------------------------
+# export -> import round trip (bit-exactness on the compressed planes)
+# ---------------------------------------------------------------------------
+
+
+def _admit_one(eng: ServeEngine, prompt: np.ndarray) -> PrefillReplica:
+    """Drive a prefill replica to admit exactly one request and return it
+    with the slot still live (no export)."""
+    pr = PrefillReplica(eng)
+    pr.submit(Request(uid=0, prompt=prompt, max_new_tokens=4))
+    eng._admit_phase(pr.ls)
+    return pr
+
+
+@pytest.mark.parametrize("codec_on", [True, False], ids=["codec", "raw"])
+def test_export_import_roundtrip_bitexact(codec_on):
+    """export_sequence -> import_sequence -> export_sequence reproduces the
+    wire payload bit-for-bit: compressed planes, dictionaries, escape side
+    channels, ring — not just the decoded tokens."""
+    cfg = CASES["dense"]
+    run = _run_cfg(codec_on)
+    prompt = RNG.integers(0, 500, (19,)).astype(np.int32)  # unaligned
+    pr = _admit_one(ServeEngine(cfg, run, tp=TP, n_slots=2, max_len=MAXLEN,
+                                seed=1), prompt)
+    blob = pr._export_blob(0)
+    assert blob.length == 19
+    assert blob.n_cols == cache_mod.export_n_cols(19, 4, TP)
+
+    dec = DecodeReplica(ServeEngine(cfg, run, tp=TP, n_slots=2,
+                                    max_len=MAXLEN, seed=1,
+                                    params=pr.engine.params,
+                                    prefix_sharing=False))
+    req = pr.ls.slot_req[0]
+    slot = dec.import_handoff(Handoff(req=req, blob=blob, admit_t=0.0))
+    # re-export from the importing pool: page ids differ, bytes must not
+    pr2 = PrefillReplica(dec.engine)
+    pr2.ls = dec.ls
+    blob2 = pr2._export_blob(slot)
+    assert blob.kv.keys() == blob2.kv.keys()
+    for f in blob.kv:
+        np.testing.assert_array_equal(np.asarray(blob.kv[f]),
+                                      np.asarray(blob2.kv[f]), err_msg=f)
+    assert blob.to_wire(None)[0] == blob2.to_wire(None)[0]
+
+
+def test_import_into_permuted_free_list():
+    """Imports allocate from whatever free-page order the target pool has:
+    admit+release to permute the free list, then import and check the
+    stream continues exactly as on the source engine."""
+    cfg = CASES["dense"]
+    run = _run_cfg(True)
+    reqs = _requests()
+    mono = ServeEngine(cfg, run, tp=TP, n_slots=2, max_len=MAXLEN, seed=1)
+    res_m, _ = mono.run(reqs)
+
+    dis = DisaggEngine(cfg, run, tp=TP, n_prefill=1, n_decode=1, n_slots=2,
+                       max_len=MAXLEN, seed=1)
+    dec = dis.decodes[0]
+    # churn the decode pool first: run an unrelated stream through it so
+    # releases leave the free list permuted (argsort order != arange)
+    churn = [Request(uid=100, prompt=RNG.integers(0, 500, (14,)
+                                                  ).astype(np.int32),
+                     max_new_tokens=6),
+             Request(uid=101, prompt=RNG.integers(0, 500, (8,)
+                                                  ).astype(np.int32),
+                     max_new_tokens=2)]
+    pr = PrefillReplica(ServeEngine(cfg, run, tp=TP, n_slots=2,
+                                    max_len=MAXLEN, seed=1,
+                                    params=dis.params))
+    for r in churn:
+        pr.submit(r)
+    while not pr.idle():
+        _, hoffs = pr.admit_step()
+        for h in hoffs:
+            dec.import_handoff(h)
+        while dec.ls.live_slots():
+            dec.step_window()
+    assert dec.engine._pages_in_use() == 0
+
+    res_d, _ = dis.run(reqs)
+    for x, y in zip(res_m, res_d):
+        assert x.tokens == y.tokens, x.uid
+
+
+def test_import_oversubscription_fails_loudly():
+    """An import the pool cannot hold is rejected host-side BEFORE any
+    device dispatch — the pool is not corrupted."""
+    cfg = CASES["dense"]
+    run = _run_cfg(True)
+    prompt = RNG.integers(0, 500, (16,)).astype(np.int32)
+    pr = _admit_one(ServeEngine(cfg, run, tp=TP, n_slots=2, max_len=MAXLEN,
+                                seed=1), prompt)
+    blob = pr._export_blob(0)
+    req = pr.ls.slot_req[0]
+
+    dec = DecodeReplica(ServeEngine(cfg, run, tp=TP, n_slots=2,
+                                    max_len=MAXLEN, seed=1,
+                                    params=pr.engine.params,
+                                    prefix_sharing=False))
+    # artificially exhaust the pool (mark every page used on one layer)
+    kv = dec.engine.state.kv
+    full = jnp.ones_like(kv.page_used)
+    dec.engine.state = dec.engine.state._replace(
+        kv=kv._replace(page_used=full))
+    before = int(np.asarray(dec.engine.state.kv.page_used).sum())
+    with pytest.raises(RuntimeError, match="oversubscribed"):
+        dec.import_handoff(Handoff(req=req, blob=blob, admit_t=0.0))
+    assert int(np.asarray(dec.engine.state.kv.page_used).sum()) == before
+    assert dec.ls.slot_req == [None, None]          # nothing half-admitted
+
+    # a sequence longer than the replica's page-table rows is a geometry
+    # error, also pre-dispatch (length 40 -> 5 columns/shard; max_len 8
+    # gives rows of 3)
+    long_prompt = RNG.integers(0, 500, (40,)).astype(np.int32)
+    pr2 = _admit_one(ServeEngine(cfg, run, tp=TP, n_slots=2,
+                                 max_len=MAXLEN, seed=1,
+                                 params=pr.engine.params), long_prompt)
+    long_blob = pr2._export_blob(0)
+    small = DecodeReplica(ServeEngine(cfg, run, tp=TP, n_slots=2,
+                                      max_len=8, seed=1,
+                                      params=pr.engine.params,
+                                      prefix_sharing=False))
+    with pytest.raises(ValueError, match="page columns"):
+        small.import_handoff(Handoff(req=pr2.ls.slot_req[0],
+                                     blob=long_blob, admit_t=0.0))
+
+    # occupied slots are not importable either
+    dec2 = DecodeReplica(ServeEngine(cfg, run, tp=TP, n_slots=1,
+                                     max_len=MAXLEN, seed=1,
+                                     params=pr.engine.params,
+                                     prefix_sharing=False))
+    dec2.import_handoff(Handoff(req=req, blob=blob, admit_t=0.0))
+    other = Request(uid=1, prompt=prompt, max_new_tokens=2)
+    with pytest.raises(RuntimeError, match="no free decode slot"):
+        dec2.import_handoff(Handoff(req=other, blob=blob, admit_t=0.0))
+
+
+# ---------------------------------------------------------------------------
+# wire format + transport
+# ---------------------------------------------------------------------------
+
+
+def _blob_for_tests(codec_on=True):
+    cfg = CASES["hybrid"]          # exercises the SSM section too
+    run = _run_cfg(codec_on)
+    prompt = RNG.integers(0, 500, (10,)).astype(np.int32)
+    pr = _admit_one(ServeEngine(cfg, run, tp=TP, n_slots=2, max_len=MAXLEN,
+                                seed=1), prompt)
+    return pr._export_blob(0)
+
+
+def test_wire_serialization_roundtrip():
+    """to_wire/from_wire is lossless for every section (pages, ring, SSM
+    state, emitted tokens) and rejects foreign/versioned-up blobs."""
+    blob = _blob_for_tests()
+    data, inline, n_refs = blob.to_wire(None)
+    assert n_refs == 0 and len(inline) == blob.n_valid_pages
+    back = SequenceBlob.from_wire(data)
+    assert back.to_wire(None)[0] == data
+    assert back.length == blob.length
+    assert back.emitted == blob.emitted
+    for f in blob.kv:
+        np.testing.assert_array_equal(np.asarray(blob.kv[f]),
+                                      np.asarray(back.kv[f]), err_msg=f)
+    for a, b in zip(blob.ssm, back.ssm):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    with pytest.raises(ValueError, match="magic"):
+        SequenceBlob.from_wire(b"XXXX" + data[4:])
+    with pytest.raises(ValueError, match="version"):
+        SequenceBlob.from_wire(data[:4] + bytes([99]) + data[5:])
+
+
+def test_transport_dedup_accounting():
+    """Repeat transfers of the same content ship page references instead of
+    payloads; receivers reconstruct bit-exactly; unknown references fail
+    loudly; raw-vs-wire metering adds up."""
+    blob = _blob_for_tests()
+    tr = LoopbackTransport(dedup=True)
+    d1 = tr.send(blob, "decode0")
+    b1 = tr.recv(d1, "decode0")
+    assert b1.to_wire(None)[0] == blob.to_wire(None)[0]
+    d2 = tr.send(blob, "decode0")
+    assert len(d2) < len(d1)                  # all pages deduped away
+    b2 = tr.recv(d2, "decode0")
+    assert b2.to_wire(None)[0] == blob.to_wire(None)[0]
+    st = tr.stats
+    assert st.n_transfers == 2
+    assert st.pages_ref == blob.n_valid_pages
+    assert st.pages_inline == blob.n_valid_pages
+    assert st.wire_bytes == len(d1) + len(d2)
+    assert st.wire_bytes_nodedup == 2 * len(d1)
+    assert st.raw_bytes == 2 * blob.raw_bytes
+    assert st.model_ns > 0 and st.model_ns_raw > st.model_ns
+
+    # a different destination has its own store: full payloads again
+    d3 = tr.send(blob, "decode1")
+    assert len(d3) == len(d1)
+    # a ref-bearing wire blob against an empty store fails loudly
+    fresh = LoopbackTransport(dedup=True)
+    with pytest.raises(ValueError, match="unknown page digest"):
+        fresh.recv(d2, "decode0")
+
+
+def test_transport_dedup_off_is_codec_only():
+    blob = _blob_for_tests()
+    tr = LoopbackTransport(dedup=False)
+    d1 = tr.send(blob, "x")
+    d2 = tr.send(blob, "x")
+    assert len(d1) == len(d2)
+    assert tr.stats.pages_ref == 0
+    assert tr.stats.wire_bytes == tr.stats.wire_bytes_nodedup

@@ -1,0 +1,25 @@
+"""docs/ARCHITECTURE.md must exist, be linked from README + ROADMAP, and
+every `path:symbol` code reference in it must resolve against the tree —
+the same check CI runs standalone (scripts/check_docs.py), enforced here so
+`make verify` catches doc rot too."""
+
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def test_architecture_doc_references_resolve():
+    r = subprocess.run(
+        [sys.executable, str(ROOT / "scripts" / "check_docs.py")],
+        capture_output=True, text=True)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "references resolved" in r.stdout
+
+
+def test_architecture_doc_is_linked():
+    assert (ROOT / "docs" / "ARCHITECTURE.md").is_file()
+    for name in ("README.md", "ROADMAP.md"):
+        text = (ROOT / name).read_text()
+        assert "docs/ARCHITECTURE.md" in text, name

@@ -464,6 +464,121 @@ def test_sharing_oversubscription_stress():
     assert not eng._prefix_index
 
 
+# ---------------------------------------------------------------------------
+# PR 4: stop-string termination (host-side rolling suffix match)
+# ---------------------------------------------------------------------------
+
+
+def _first_stop_match(tokens, ss):
+    """Index of the first token completing a rolling suffix match of ``ss``
+    (what the engine's host-side check fires on), or None."""
+    n = len(ss)
+    for i in range(n - 1, len(tokens)):
+        if tuple(tokens[i - n + 1:i + 1]) == tuple(ss):
+            return i
+    return None
+
+
+def test_stop_string_termination():
+    """A slot finishes when its emitted tokens end with a stop sequence:
+    the stream is the budget-run prefix through the FIRST rolling match,
+    the result reports stop_reason="stop_string", and the slot is
+    evicted.  (Tiny-model streams repeat tokens, so the expected match
+    position is computed, not assumed.)"""
+    cfg = CASES["dense"]
+    run = _run_cfg(True)
+    probe = ServeEngine(cfg, run, tp=TP2, n_slots=2, max_len=MAXLEN, seed=1)
+    reqs = _tp2_requests(n=1, max_new=8)
+    (full,), _ = probe.run(reqs)
+    assert full.stop_reason == "budget"
+    ss = tuple(full.tokens[2:4])        # some 2-gram of the stream
+    i = _first_stop_match(full.tokens, ss)
+    assert i is not None
+    eng = ServeEngine(cfg, run, tp=TP2, n_slots=2, max_len=MAXLEN, seed=1,
+                      stop_seqs=[ss])
+    (res,), _ = eng.run([Request(uid=9, prompt=reqs[0].prompt,
+                                 max_new_tokens=8)])
+    assert res.stop_reason == "stop_string"
+    assert res.tokens == full.tokens[:i + 1]
+    assert int(np.asarray(eng.state.active).sum()) == 0   # slot evicted
+
+    # per-request override: () disables the engine default...
+    (res2,), _ = eng.run([Request(uid=10, prompt=reqs[0].prompt,
+                                  max_new_tokens=8, stop_seqs=())])
+    assert res2.stop_reason == "budget" and res2.tokens == full.tokens
+    # ...and a request-level sequence beats it
+    v = full.tokens[1]
+    j = full.tokens.index(v)            # first match of the 1-gram (v,)
+    (res3,), _ = eng.run([Request(uid=11, prompt=reqs[0].prompt,
+                                  max_new_tokens=8, stop_seqs=[(v,)])])
+    assert res3.stop_reason == "stop_string"
+    assert res3.tokens == full.tokens[:j + 1]
+
+
+def test_stop_string_budget_eos_interplay():
+    """Priority on the same token is eos > stop_string > budget; a stop
+    sequence that would only complete past the budget never fires."""
+    cfg = CASES["dense"]
+    run = _run_cfg(True)
+    probe = ServeEngine(cfg, run, tp=TP2, n_slots=2, max_len=MAXLEN, seed=1)
+    reqs = _tp2_requests(n=1, max_new=8)
+    prompt = reqs[0].prompt
+    (full,), _ = probe.run(reqs)
+
+    # stop seq completes exactly at the budget boundary -> stop_string
+    ss = tuple(full.tokens[2:4])
+    i = _first_stop_match(full.tokens, ss)   # first completion position
+    assert i is not None and i >= 1
+    eng = ServeEngine(cfg, run, tp=TP2, n_slots=2, max_len=MAXLEN, seed=1,
+                      stop_seqs=[ss])
+    (res,), _ = eng.run([Request(uid=0, prompt=prompt,
+                                 max_new_tokens=i + 1)])
+    assert res.stop_reason == "stop_string" and len(res.tokens) == i + 1
+
+    # budget one short of the first completion -> budget wins
+    (res2,), _ = eng.run([Request(uid=1, prompt=prompt, max_new_tokens=i)])
+    assert res2.stop_reason == "budget" and res2.tokens == full.tokens[:i]
+
+    # EOS and a 1-token stop seq firing on the SAME token -> eos wins
+    v = full.tokens[0]
+    j = full.tokens.index(v)
+    eng2 = ServeEngine(cfg, run, tp=TP2, n_slots=2, max_len=MAXLEN, seed=1,
+                       stop_seqs=[(v,)], eos_id=v)
+    (res3,), _ = eng2.run([Request(uid=2, prompt=prompt,
+                                   max_new_tokens=8)])
+    assert res3.stop_reason == "eos" and res3.tokens == full.tokens[:j + 1]
+
+    with pytest.raises(ValueError, match="non-empty"):
+        ServeEngine(cfg, run, tp=TP2, n_slots=2, max_len=MAXLEN,
+                    stop_seqs=[()])
+    # a malformed per-request override is rejected at SUBMIT, before the
+    # request can occupy a slot (a mid-loop raise would leak its pages)
+    with pytest.raises(ValueError, match="non-empty"):
+        eng.run([Request(uid=5, prompt=prompt, max_new_tokens=2,
+                         stop_seqs=[()])])
+    assert int(np.asarray(eng.state.active).sum()) == 0
+    assert eng._pages_in_use() == 0
+
+
+def test_stop_string_across_window_boundary():
+    """A stop sequence split across two fused windows still matches (the
+    suffix match is rolling over the whole emitted stream)."""
+    cfg = CASES["dense"]
+    run = _run_cfg(True)
+    probe = ServeEngine(cfg, run, tp=TP2, n_slots=2, max_len=MAXLEN, seed=1)
+    reqs = _tp2_requests(n=1, max_new=8)
+    (full,), _ = probe.run(reqs)
+    ss = tuple(full.tokens[1:5])        # spans 2-step fused windows
+    i = _first_stop_match(full.tokens, ss)
+    assert i is not None and i >= 3     # needs >= 4 emitted tokens
+    eng = ServeEngine(cfg, run, tp=TP2, n_slots=2, max_len=MAXLEN, seed=1,
+                      stop_seqs=[ss], max_fuse_steps=2)
+    (res,), _ = eng.run([Request(uid=0, prompt=reqs[0].prompt,
+                                 max_new_tokens=8)])
+    assert res.stop_reason == "stop_string"
+    assert res.tokens == full.tokens[:i + 1]
+
+
 def test_interpret_backend_serving_token_identity():
     """The fused-kernel decode path (Pallas interpret mode) serves token-
     identical streams to the pure-JAX backend — the acceptance bar for
