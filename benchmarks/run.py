@@ -181,6 +181,9 @@ def _repo_root():
 
 
 SMOKE = False   # set by --smoke: tiny single-scenario pass, no JSON writes
+SOCKET = False  # set by --socket: run the disagg scenario a second time
+                # with the decode replica in a separate OS process behind
+                # SocketTransport (spawns repro.launch.disagg_host)
 
 
 def bench_serving() -> None:
@@ -214,13 +217,15 @@ def bench_serving() -> None:
     """
     import dataclasses
     import json
-    from repro.configs.base import ModelConfig, RunConfig
+    from repro.configs.base import RunConfig
     from repro.core.collectives import CodecConfig
+    from repro.launch.disagg_host import tiny_bench_config
     from repro.serve import Request, ServeEngine
 
-    cfg = ModelConfig(name="bench", family="dense", n_layers=2, d_model=64,
-                      n_heads=8, n_kv_heads=4, d_ff=128, vocab_size=512,
-                      head_dim=16)
+    # the same config the two-process socket scenario's decode host builds
+    # from its CLI flags (--model tiny-bench) — one definition, one
+    # fingerprint
+    cfg = tiny_bench_config()
     rng = np.random.default_rng(0)
     base_a = rng.integers(0, 512, (24,)).astype(np.int32)   # 3 page columns
     base_b = rng.integers(0, 512, (16,)).astype(np.int32)
@@ -319,42 +324,21 @@ def bench_serving() -> None:
             "codec": label, "decode_backend": "jax",
             "prefix_sharing": False, "cold": row(st_o, True)})
     # --- disagg: prefill replicas -> decode replicas over compressed page
-    # transfer.  The link-byte accounting is the serving measurement of the
-    # paper's headline claim (Table 3's wire bytes): every handoff ships
-    # LEXI-FW pages byte-identical to the pool + content-dedups repeated
-    # prefixes, metered against the bf16-dense baseline through
-    # hw.noc.LinkModel.  Token streams must match the monolithic engine.
+    # transfer, with STREAMING prefill export (full pages cross the link as
+    # admission fills them; the closing blob references them by digest).
+    # The link-byte accounting is the serving measurement of the paper's
+    # headline claim (Table 3's wire bytes): every handoff ships LEXI-FW
+    # pages byte-identical to the pool + content-dedups repeated prefixes
+    # in the RECEIVER's digest store, metered against the bf16-dense
+    # baseline through hw.noc.LinkModel.  Token streams must match the
+    # monolithic engine.  With --socket, the same scenario then runs AGAIN
+    # with the decode replica in a separate OS process behind
+    # SocketTransport (spawned via repro.launch.disagg_host).
     from repro.serve.disagg import DisaggEngine
-    mono_tokens = {}
-    for label, codec in codecs:
-        run = RunConfig(codec=dataclasses.replace(codec,
-                                                  decode_backend="jax"))
-        eng_m = ServeEngine(cfg, run, tp=1, n_slots=2, max_len=96, seed=1)
-        res_m, _ = eng_m.run(make_reqs())
-        mono_tokens[label] = [r.tokens for r in res_m]
-        dis = DisaggEngine(cfg, run, tp=1, n_prefill=1, n_decode=1,
-                           n_slots=2, max_len=96, seed=1)
-        res_d, st_d = dis.run(make_reqs())
-        assert [r.tokens for r in res_d] == mono_tokens[label]
-        assert st_d.n_transfers > 0
-        ratio = st_d.wire_bytes / max(st_d.wire_raw_bytes, 1)
-        if label == "on" and not SMOKE:
-            # acceptance bar: compressed link bytes <= 0.6x raw for the
-            # bf16 cache mix (codec pages + prefix dedup on the wire)
-            assert ratio <= 0.6, ratio
-        emit(f"serving.disagg.codec_{label}", st_d.wall_s * 1e6,
-             f"tok_s={st_d.tokens_per_s:.1f} "
-             f"transfers={st_d.n_transfers} "
-             f"wire_kB={st_d.wire_bytes / 1e3:.1f} "
-             f"raw_kB={st_d.wire_raw_bytes / 1e3:.1f} "
-             f"ratio={ratio:.3f} "
-             f"red={st_d.link_reduction * 100:.1f}% "
-             f"nodedup_kB={st_d.wire_bytes_nodedup / 1e3:.1f} "
-             f"deduped={st_d.dedup_page_refs} "
-             f"link_ms={st_d.link_model_ms:.4f}/"
-             f"{st_d.link_model_ms_raw:.4f}")
-        scenarios.append({
-            "scenario": "disagg", "codec": label,
+
+    def disagg_row(tag, st_d, ratio):
+        return {
+            "scenario": tag, "codec": label,
             "decode_backend": st_d.decode_backend,
             "n_prefill": st_d.n_prefill_replicas,
             "n_decode": st_d.n_decode_replicas,
@@ -365,6 +349,11 @@ def bench_serving() -> None:
             "wire_ratio": ratio,
             "link_reduction": st_d.link_reduction,
             "dedup_page_refs": st_d.dedup_page_refs,
+            "pages_streamed": st_d.pages_streamed,
+            "stream_chunk_bytes": st_d.stream_chunk_bytes,
+            "decode_prefix_hits": st_d.decode_prefix_hits,
+            "pages_resent": st_d.pages_resent,
+            "store_evicted": st_d.store_evicted,
             "link_model_ms": st_d.link_model_ms,
             "link_model_ms_raw": st_d.link_model_ms_raw,
             "tokens_per_s": st_d.tokens_per_s,
@@ -372,10 +361,81 @@ def bench_serving() -> None:
             "decode_steps": st_d.decode_steps,
             "n_dispatches": st_d.n_dispatches,
             "wall_s": st_d.wall_s,
-        })
+        }
+
+    def emit_disagg(tag, st_d, ratio):
+        emit(f"serving.{tag}.codec_{label}", st_d.wall_s * 1e6,
+             f"tok_s={st_d.tokens_per_s:.1f} "
+             f"transfers={st_d.n_transfers} "
+             f"wire_kB={st_d.wire_bytes / 1e3:.1f} "
+             f"raw_kB={st_d.wire_raw_bytes / 1e3:.1f} "
+             f"ratio={ratio:.3f} "
+             f"red={st_d.link_reduction * 100:.1f}% "
+             f"nodedup_kB={st_d.wire_bytes_nodedup / 1e3:.1f} "
+             f"deduped={st_d.dedup_page_refs} "
+             f"streamed={st_d.pages_streamed} "
+             f"chunk_kB={st_d.stream_chunk_bytes / 1e3:.1f} "
+             f"import_hits={st_d.decode_prefix_hits} "
+             f"link_ms={st_d.link_model_ms:.4f}/"
+             f"{st_d.link_model_ms_raw:.4f}")
+
+    mono_tokens = {}
+    for label, codec in codecs:
+        run = RunConfig(codec=dataclasses.replace(codec,
+                                                  decode_backend="jax"))
+        eng_m = ServeEngine(cfg, run, tp=1, n_slots=2, max_len=96, seed=1)
+        res_m, _ = eng_m.run(make_reqs())
+        mono_tokens[label] = [r.tokens for r in res_m]
+        dis = DisaggEngine(cfg, run, tp=1, n_prefill=1, n_decode=1,
+                           n_slots=2, max_len=96, seed=1, streaming=True)
+        res_d, st_d = dis.run(make_reqs())
+        assert [r.tokens for r in res_d] == mono_tokens[label]
+        assert st_d.n_transfers > 0
+        assert st_d.pages_streamed > 0           # streaming export is live
+        ratio = st_d.wire_bytes / max(st_d.wire_raw_bytes, 1)
+        if not SMOKE:
+            # imported duplicates reuse resident prefix pages
+            assert st_d.decode_prefix_hits > 0, st_d
+        if label == "on" and not SMOKE:
+            # acceptance bar: compressed link bytes <= 0.6x raw for the
+            # bf16 cache mix (codec pages + receiver-side dedup, streaming
+            # export enabled)
+            assert ratio <= 0.6, ratio
+        emit_disagg("disagg", st_d, ratio)
+        scenarios.append(disagg_row("disagg", st_d, ratio))
+        if SOCKET:
+            # same stream, decode replica in ANOTHER OS PROCESS: spawn a
+            # decode host, route the handoffs over TCP, assert identity
+            from repro.launch.disagg_host import spawn_decode_host
+            from repro.serve import SocketTransport
+            proc, port = spawn_decode_host(
+                ["--model", "tiny-bench", "--codec", label,
+                 "--cache-block", "8", "--tp", "1", "--slots", "2",
+                 "--max-len", "96", "--seed", "1",
+                 "--decode-backend", "jax"])
+            tr = SocketTransport()
+            try:
+                dis_s = DisaggEngine(
+                    cfg, run, tp=1, n_prefill=1, n_slots=2, max_len=96,
+                    seed=1, transport=tr, streaming=True,
+                    decode_addrs=[f"127.0.0.1:{port}"])
+                res_s, st_s = dis_s.run(make_reqs())
+                assert [r.tokens for r in res_s] == mono_tokens[label]
+                ratio_s = st_s.wire_bytes / max(st_s.wire_raw_bytes, 1)
+                emit_disagg("disagg_socket", st_s, ratio_s)
+                scenarios.append(disagg_row("disagg_socket", st_s, ratio_s))
+            finally:
+                tr.close()
+                proc.terminate()
+                try:
+                    proc.wait(timeout=10)
+                except Exception:
+                    proc.kill()
     if SMOKE:
         emit("serving.smoke", 0.0,
-             "smoke pass ok incl. disagg (no JSON written)")
+             "smoke pass ok incl. disagg"
+             + (" + two-process socket" if SOCKET else "")
+             + " (no JSON written)")
         return
     out = {"bench": "serving", "model": cfg.name,
            "jax_backend": __import__("jax").default_backend(),
@@ -470,9 +530,14 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny fast pass (CI wiring check): shrinks the "
                          "serving scenario and skips BENCH_*.json writes")
+    ap.add_argument("--socket", action="store_true",
+                    help="serving bench: also run the disagg scenario over "
+                         "SocketTransport against a decode host spawned in "
+                         "a second OS process (localhost TCP)")
     args = ap.parse_args()
-    global SMOKE
+    global SMOKE, SOCKET
     SMOKE = args.smoke
+    SOCKET = args.socket
     names = args.only.split(",") if args.only else list(ALL)
     print("name,us_per_call,derived")
     for n in names:

@@ -61,6 +61,11 @@ def main(argv=None) -> int:
                     help="--disagg: number of prefill replicas")
     ap.add_argument("--decode-replicas", type=int, default=1,
                     help="--disagg: number of decode replicas")
+    ap.add_argument("--streaming", action="store_true",
+                    help="--disagg: stream full compressed pages across "
+                         "the transfer link as admission fills them "
+                         "(prefill-side streaming export); multi-process "
+                         "serving lives in repro.launch.disagg_host")
     ap.add_argument("--stop-seq", type=str, default=None,
                     help="continuous/disagg: comma-separated token ids; "
                          "a slot stops when its stream ends with them "
@@ -148,7 +153,7 @@ def _serve_continuous(cfg, run, tp: int, args) -> int:
                            n_decode=args.decode_replicas,
                            n_slots=args.slots, max_len=max_len,
                            seed=run.seed, eos_id=args.eos_id,
-                           stop_seqs=stops)
+                           stop_seqs=stops, streaming=args.streaming)
         results, st = eng.run(reqs)
         print("[serve] disagg:", format_disagg_stats(st))
     else:

@@ -709,7 +709,7 @@ def export_n_cols(length: int, blk: int, tp: int) -> int:
 
 
 def export_sequence(pkv: PagedKV, slot, n_cols: int, length,
-                    tp: int) -> PageWire:
+                    tp: int, col0=0) -> PageWire:
     """Gather slot ``slot``'s cache payload into transfer layout.
 
     The disaggregated-prefill seam: a prefill replica exports each admitted
@@ -721,6 +721,15 @@ def export_sequence(pkv: PagedKV, slot, n_cols: int, length,
     ``n_cols`` is static (``export_n_cols``); shards holding fewer full
     pages (``length % (block*tp) != 0``) zero their trailing columns so the
     payload is deterministic.  ``slot``/``length`` may be traced.
+
+    **Chunked mode.**  ``col0`` (traced, default 0) windows the gather to
+    page columns ``[col0, col0 + n_cols)`` — the streaming-prefill export:
+    as admission fills pages, the prefill replica gathers just the freshly
+    completed columns and ships them ahead of the closing blob as
+    ``repro.serve.transport.pack_chunk`` frames (columns at or past a
+    shard's ``local_full_pages`` are zeroed exactly as in whole-sequence
+    mode, and the window is re-keyed on ``n_cols`` only, so the jit cache
+    stays small).
 
     **WIRE FORMAT (version 1).**  The byte framing a transport ships (see
     ``repro.serve.transport.SequenceBlob.to_wire``) — everything little-
@@ -765,12 +774,14 @@ def export_sequence(pkv: PagedKV, slot, n_cols: int, length,
     store and must fail loudly on an unknown digest.
     """
     blk, w = pkv.ring.shape[1], pkv.ring.shape[2]
+    maxp = pkv.page_table.shape[1]
     ti = jax.lax.axis_index("model")
     nfull = local_full_pages(length, ti, blk, tp)
     row = pkv.page_table[jnp.asarray(slot, jnp.int32)]       # (maxp,)
-    cols = jnp.arange(n_cols)
-    valid = cols < nfull
-    pid = jnp.where(valid, jnp.clip(row[:n_cols], 0, None), 0)
+    cols = jnp.asarray(col0, jnp.int32) + jnp.arange(n_cols)
+    valid = (cols < nfull) & (cols < maxp)
+    pid = jnp.where(valid,
+                    jnp.clip(row[jnp.clip(cols, 0, maxp - 1)], 0, None), 0)
 
     def take(field, zero_dtype):
         if field is None:
@@ -790,7 +801,7 @@ def export_sequence(pkv: PagedKV, slot, n_cols: int, length,
 
 
 def import_sequence(pkv: PagedKV, slot, wire: PageWire, length,
-                    tp: int) -> PagedKV:
+                    tp: int, col0=0) -> PagedKV:
     """Scatter a :class:`PageWire` into slot ``slot`` of this pool.
 
     Exact inverse of :func:`export_sequence` up to page ids: fresh pages
@@ -802,9 +813,16 @@ def import_sequence(pkv: PagedKV, slot, wire: PageWire, length,
     convention.  The re-export of an imported slot is bit-identical to the
     original wire payload (round-trip proof in ``tests/test_disagg.py``).
 
+    ``col0`` (traced, default 0) makes the import PARTIAL: the wire columns
+    represent global page columns ``[col0, col0 + n_cols)`` and the table
+    row's entries below ``col0`` are left as they are — the decode-replica
+    prefix-reuse path maps already-resident shared pages into columns
+    ``[0, col0)`` first (``map_prefix_pages``) and imports only the
+    unmatched suffix columns from the wire.
+
     In-graph allocation cannot fail loudly, so the HOST must check pool
-    capacity before dispatching an import (``n_cols <= max pages per slot``
-    and enough free pages on every shard/layer) — see
+    capacity before dispatching an import (``col0 + n_cols <= max pages per
+    slot`` and enough free pages on every shard/layer) — see
     ``repro.serve.disagg.DecodeReplica.import_handoff``, which rejects
     oversubscription before any device state mutates.
 
@@ -819,10 +837,11 @@ def import_sequence(pkv: PagedKV, slot, wire: PageWire, length,
     ti = jax.lax.axis_index("model")
     nfull = local_full_pages(length, ti, blk, tp)
     slot = jnp.asarray(slot, jnp.int32)
+    col0 = jnp.asarray(col0, jnp.int32)
 
     free_order = jnp.argsort(pkv.page_used)          # free pages first
     pages = free_order[:n_cols] if n_cols else jnp.zeros((0,), jnp.int32)
-    valid = jnp.arange(n_cols) < nfull
+    valid = col0 + jnp.arange(n_cols) < nfull
     tgt = jnp.where(valid, pages, n_pages)           # sentinel drops
     if pkv.signman is not None:
         pkv = pkv._replace(
@@ -836,11 +855,11 @@ def import_sequence(pkv: PagedKV, slot, wire: PageWire, length,
             raw_pages=pkv.raw_pages.at[tgt].set(wire.raw_pages, mode="drop"))
     used = pkv.page_used.at[tgt].set(True, mode="drop")
     cols = jnp.arange(maxp)
-    padded = jnp.concatenate(
-        [pages.astype(jnp.int32),
-         jnp.zeros((maxp - n_cols,), jnp.int32)]) if n_cols else \
-        jnp.zeros((maxp,), jnp.int32)
-    row = jnp.where(cols < nfull, padded, -1)
+    padded = jnp.zeros((maxp,), jnp.int32).at[col0 + jnp.arange(n_cols)].set(
+        pages.astype(jnp.int32), mode="drop")
+    prev = pkv.page_table[slot]                      # kept below col0
+    row = jnp.where(cols < col0, prev,
+                    jnp.where(cols < nfull, padded, -1))
     pt = jax.lax.dynamic_update_index_in_dim(pkv.page_table, row, slot, 0)
     ring = jax.lax.dynamic_update_index_in_dim(pkv.ring, wire.ring, slot, 0)
     return pkv._replace(page_table=pt, page_used=used, ring=ring)

@@ -1,12 +1,15 @@
 """Serving: fixed-batch prefill+decode, continuous batching over the paged
 LEXI-compressed cache (``engine`` device code, ``scheduler`` loop), and
 disaggregated prefill→decode replicas over compressed page transfer
-(``disagg`` routing, ``transport`` wire format) — see docs/ARCHITECTURE.md
-for the end-to-end walkthrough."""
+(``disagg`` routing, ``transport`` wire format + digest stores, ``net``
+socket transport between OS processes) — see docs/ARCHITECTURE.md for the
+end-to-end walkthrough."""
 from . import engine  # noqa: F401
 from .scheduler import (Request, RequestResult, RequestScheduler,  # noqa: F401
                         ServeEngine, ServeStats)
 from .disagg import (DecodeReplica, DisaggEngine, DisaggStats,  # noqa: F401
                      PrefillReplica)
-from .transport import (LoopbackTransport, PageTransport,  # noqa: F401
-                        SequenceBlob, TransportStats)
+from .transport import (DigestStore, LoopbackTransport,  # noqa: F401
+                        PageTransport, SequenceBlob, TransportStats)
+from .net import (PageHost, RemoteDecodeReplica,  # noqa: F401
+                  SocketTransport)

@@ -20,19 +20,28 @@ byte-identical to the monolithic engine's, because
 
 Dataflow (see docs/ARCHITECTURE.md for the full picture):
 
-    requests ──► RequestRouter ──► PrefillReplica[0..N) ──┐ admit+replay,
-                      │                                   │ export_slot
-                      │            SequenceBlob bytes ◄───┘
+    requests ──► RequestRouter ──► PrefillReplica[0..N) ──┐ admit+replay;
+                      │                                   │ full pages can
+                      │        page chunks + SequenceBlob │ STREAM out as
+                      │              bytes ◄──────────────┘ they fill
                       │                 │  PageTransport (meters wire vs
                       │                 ▼   raw bytes through hw.noc's
                       └──────────► DecodeReplica[0..M)      LinkModel)
-                                        │ import_slot, fused decode windows
-                 results ◄──────────────┘
+                                        │ import_slot into its OWN pool,
+                 results ◄──────────────┘ fused decode windows
 
 The router owns per-replica slot accounting: requests go to the
-least-backlogged prefill replica, finished prefills queue for transfer and
-land on the decode replica with the most free slots; a handoff waits (in
-admission order) whenever every decode slot is busy.
+least-backlogged prefill replica; handoffs land on the decode replica with
+the most free slots (a STREAMED sequence is routed when its first chunk
+ships and sticks to that destination).  A handoff waits whenever its
+destination has no free slot; unrouted handoffs may overtake it to another
+replica.
+
+The transport seam is process-agnostic: ``LoopbackTransport`` keeps both
+replica kinds in one process, ``repro.serve.net.client.SocketTransport``
+(with ``decode_addrs=``) drives decode replicas living in OTHER OS
+processes (``repro.launch.disagg_host``) over TCP — same wire bytes, same
+streams.
 """
 
 from __future__ import annotations
@@ -40,7 +49,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -52,17 +61,22 @@ from repro.models import cache as cache_mod
 from repro.models.ssm import SSMState
 from .scheduler import (Request, RequestResult, ServeEngine, _LoopState)
 from .transport import (LoopbackTransport, PageTransport, SequenceBlob,
-                        TransportStats)
+                        TransportStats, page_payload)
 
 
 @dataclasses.dataclass
 class Handoff:
     """One admitted sequence in flight between replicas (host envelope:
     the request routing metadata stays host-side; only the cache state in
-    ``blob`` crosses the modeled link)."""
+    ``blob`` crosses the modeled link).  ``dst``/``seq_id`` are set when
+    the sequence's full pages already STREAMED to a destination during
+    admission — the router must then deliver the tail to that same
+    destination (the chunks live in its digest store)."""
     req: Request
     blob: SequenceBlob
     admit_t: float
+    dst: Optional[str] = None
+    seq_id: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -81,6 +95,11 @@ class DisaggStats:
     wire_bytes_nodedup: int        # same transfers without page dedup
     wire_raw_bytes: int            # bf16-dense bytes of the same payloads
     dedup_page_refs: int           # pages that shipped as 13B references
+    pages_streamed: int            # pages that crossed DURING admission
+    stream_chunk_bytes: int        # bytes of the streaming chunk frames
+    pages_resent: int              # inline re-sends after receiver eviction
+    store_evicted: int             # receiver-store pages evicted (LRU cap)
+    decode_prefix_hits: int        # page columns reused across imports
     link_model_ms: float           # LinkModel latency of the wire bytes
     link_model_ms_raw: float       # ... of the bf16-dense baseline
     wall_s: float
@@ -111,14 +130,37 @@ def _blob_geometry(eng: ServeEngine):
 
 class PrefillReplica:
     """One admission-only replica: runs the engine's batched/bucketed
-    admission (+ prefix sharing + tail replay) on its own pool, then
-    exports every admitted sequence instead of decoding it.  Requests that
-    finish AT admission (budget of 1, EOS or stop on the first token)
-    complete here and never transfer."""
+    admission (+ tail replay) on its own pool, then exports every admitted
+    sequence instead of decoding it.  Requests that finish AT admission
+    (budget of 1, EOS or stop on the first token) complete here and never
+    transfer.
 
-    def __init__(self, engine: ServeEngine):
+    **Streaming prefill export** (``streaming=True``): the replica hooks
+    the engine's ``admit_progress_cb`` and ships full page columns through
+    the transport AS THEY FILL — after the batched trunk insert and after
+    every fused replay dispatch — so the link works while the prompt tail
+    is still replaying.  The destination is picked at first-chunk time
+    (``pick_dst``) and pinned into the handoff; the closing blob then
+    references the streamed pages by digest (13 B each) instead of
+    re-shipping them.  A streamed sequence that finishes at admission
+    aborts its stream (the receiver unpins and may evict the chunks).
+    """
+
+    def __init__(self, engine: ServeEngine,
+                 transport: Optional[PageTransport] = None,
+                 pick_dst: Optional[Callable[[], str]] = None,
+                 streaming: bool = False):
         self.engine = engine
         self.ls: _LoopState = engine._new_loop()
+        self.transport = transport
+        self.pick_dst = pick_dst
+        self.streaming = bool(streaming and engine.cfg.n_heads > 0)
+        self._streams: Dict[int, dict] = {}   # slot -> seq_id/dst/sent cols
+        if self.streaming:
+            if transport is None or pick_dst is None:
+                raise ValueError("streaming prefill export needs a "
+                                 "transport and a destination picker")
+            engine.admit_progress_cb = self._stream_progress
 
     @property
     def backlog(self) -> int:
@@ -130,20 +172,74 @@ class PrefillReplica:
     def idle(self) -> bool:
         return not len(self.engine.scheduler) and not self.ls.live_slots()
 
+    def _stream_progress(self, ls: _LoopState) -> None:
+        """Mid-admission hook: export and ship every freshly completed
+        page column of every live slot (one windowed gather per slot,
+        window sizes rounded to powers of two so the export jit cache
+        stays at O(log maxp) entries)."""
+        eng = self.engine
+        blk = eng.run_cfg.codec.cache_block
+        codec_on = bool(eng.run_cfg.codec.cache)
+        for s in ls.live_slots():
+            if ls.done[s]:
+                continue               # finishing at admission: no transfer
+            length = ls.slot_len[s]
+            valid = [max((length - 1 - t) // eng.tp + 1, 0) // blk
+                     for t in range(eng.tp)]
+            st = self._streams.get(s)
+            sent = st["sent"] if st is not None else [0] * eng.tp
+            if all(v <= s0 for v, s0 in zip(valid, sent)):
+                continue
+            col0 = min(sent)
+            span = max(valid) - col0
+            n = 1
+            while n < span:
+                n *= 2
+            n = min(n, eng._maxp - col0)
+            kvw, _, _ = eng._export_for(n)(
+                eng.state, jnp.asarray(s, jnp.int32),
+                jnp.asarray(col0, jnp.int32))
+            fields = (("signman", "planes", "dict_syms", "esc_pos",
+                       "esc_raw") if codec_on else ("raw_pages",))
+            kv = {f: np.asarray(getattr(kvw, f)) for f in fields}
+            entries = []
+            for t in range(eng.tp):
+                for l in range(eng.cfg.n_layers):
+                    for c in range(max(sent[t], col0), valid[t]):
+                        entries.append(
+                            (t, l, c,
+                             page_payload(kv, codec_on, t, l, c - col0)))
+            if not entries:
+                continue
+            if st is None:
+                st = {"seq_id": self.transport.new_stream(),
+                      "dst": self.pick_dst(), "sent": sent}
+                self._streams[s] = st
+            self.transport.stream_pages(st["dst"], st["seq_id"], entries)
+            st["sent"] = [max(v, s0) for v, s0 in zip(valid, sent)]
+
     def admit_step(self) -> Tuple[List[RequestResult], List[Handoff]]:
         """One admission round: admit into every free slot, replay prompt
-        tails, then export + release every live slot as a handoff."""
+        tails (streaming full pages out as they fill, when enabled), then
+        export + release every live slot as a handoff."""
         eng, ls = self.engine, self.ls
         eng._admit_phase(ls)
         eng._track_peak(ls)
         finished = eng._finish_ready(ls)    # done at admission: no transfer
+        for s in list(self._streams):       # their streams never complete
+            if ls.slot_req[s] is None:
+                st = self._streams.pop(s)
+                self.transport.abort_stream(st["dst"], st["seq_id"])
         handoffs: List[Handoff] = []
         exported = []
         for s in list(ls.live_slots()):
             req = ls.slot_req[s]
+            st = self._streams.pop(s, None)
             handoffs.append(Handoff(
                 req=req, blob=self._export_blob(s),
-                admit_t=ls.admit_t[req.uid]))
+                admit_t=ls.admit_t[req.uid],
+                dst=st["dst"] if st is not None else None,
+                seq_id=st["seq_id"] if st is not None else None))
             ls.slot_req[s] = None
             ls.slot_len[s] = 0
             exported.append(s)
@@ -159,7 +255,7 @@ class PrefillReplica:
         n_cols = (cache_mod.export_n_cols(length, blk, eng.tp)
                   if eng.cfg.n_heads > 0 else 0)
         kvw, ssm, dev_len = eng._export_for(n_cols)(
-            eng.state, jnp.asarray(s, jnp.int32))
+            eng.state, jnp.asarray(s, jnp.int32), jnp.asarray(0, jnp.int32))
         assert int(np.asarray(dev_len)) == length, (s, length)
         codec_on = bool(eng.run_cfg.codec.cache)
         kv = None
@@ -185,7 +281,15 @@ class PrefillReplica:
 class DecodeReplica:
     """One decode-only replica: sequences arrive as wire blobs, scatter
     into its own pool (fresh pages from ITS free list), and step through
-    the engine's fused decode windows until termination."""
+    the engine's fused decode windows until termination.
+
+    When the engine allows prefix sharing (pure attention), imported
+    sequences register their full page columns in the replica's prefix
+    index, so a LATER import with the same prompt prefix maps the resident
+    pages instead of allocating duplicates — cross-replica prefix reuse
+    composes with the transport's wire-level dedup (the repeated pages
+    already crossed as 13 B references; this keeps them from occupying
+    pool pages twice)."""
 
     def __init__(self, engine: ServeEngine):
         self.engine = engine
@@ -197,6 +301,38 @@ class DecodeReplica:
     def idle(self) -> bool:
         return not self.ls.live_slots()
 
+    def decode_stats(self) -> Dict[str, int]:
+        return {"steps": self.ls.steps, "dispatches": self.ls.dispatches,
+                "shared_hits": self.ls.shared_hits}
+
+    def drop_live(self) -> int:
+        """Evict every live slot and forget its request: a remote driver
+        session that died mid-run can never step or collect its sequences,
+        so a persistent host drops them at session teardown instead of
+        poisoning the next session with stuck slots.  Returns the count."""
+        ls = self.ls
+        live = ls.live_slots()
+        for s in live:
+            req = ls.slot_req[s]
+            ls.slot_req[s] = None
+            ls.done[s], ls.reason[s] = False, ""
+            ls.emitted.pop(req.uid, None)
+            ls.admit_t.pop(req.uid, None)
+            ls.slot_len[s] = 0
+        if live:
+            self.engine._free_slots(live)
+        return len(live)
+
+    def deliver(self, h: Handoff, transport: PageTransport,
+                dst: str) -> None:
+        """Carry ``h`` across the transport and import it: serialize (and
+        meter) the blob, reconstruct it on the receiving side, scatter it
+        into a slot.  The remote counterpart lives in
+        ``repro.serve.net.client.RemoteDecodeReplica.deliver``."""
+        data = transport.send(h.blob, dst, seq_id=h.seq_id)
+        blob = transport.recv(data, dst, seq_id=h.seq_id)
+        self.import_handoff(dataclasses.replace(h, blob=blob))
+
     def import_handoff(self, h: Handoff) -> int:
         """Scatter a transferred sequence into a free slot; returns the
         slot id.  All validation happens BEFORE any device dispatch, so a
@@ -205,7 +341,8 @@ class DecodeReplica:
           * geometry (tp / layers / page shape / codec flag) must match,
           * a free slot must exist,
           * the sequence must fit a page-table row (``n_cols <= maxp``),
-          * every shard/layer pool must hold enough FREE pages — in-graph
+          * every shard/layer pool must hold enough FREE pages for the
+            columns not covered by a prefix-index hit — in-graph
             allocation cannot fail loudly, so oversubscription is rejected
             here (device truth read at this admission boundary only).
         """
@@ -223,16 +360,27 @@ class DecodeReplica:
             raise RuntimeError("no free decode slot (the router must hold "
                                "handoffs until a slot frees)")
         s = free[0]
+        req = h.req
         kvw = None
+        m = 0
+        mkeys: List[bytes] = []
         if eng.state.kv is not None:
             if blob.n_cols > eng._maxp:
                 raise ValueError(
                     f"import needs {blob.n_cols} page columns > "
                     f"max {eng._maxp} per slot (decode replica max_len "
                     f"{eng.max_len} too small for length {blob.length})")
+            if eng.prefix_sharing and len(req.prompt) >= blob.length:
+                # cross-replica prefix reuse: the longest run of this
+                # prompt's full page columns already resident in the index
+                keys = eng._prefix_keys(np.asarray(req.prompt),
+                                        blob.length // eng.blk_tokens)
+                while m < len(keys) and keys[m] in eng._prefix_index:
+                    m += 1
+                mkeys = keys[:m]
             used = np.asarray(eng.state.kv.page_used)     # (tp, L, P)
             free_pages = used.shape[-1] - used.sum(axis=-1)
-            need = np.array([blob.valid_cols(t)
+            need = np.array([max(blob.valid_cols(t) - m, 0)
                              for t in range(eng.tp)])[:, None]
             if (free_pages < need).any():
                 raise RuntimeError(
@@ -240,35 +388,49 @@ class DecodeReplica:
                     f"{need.max()} pages but a shard/layer has only "
                     f"{int(free_pages.min())} free")
             kv = blob.kv
+
+            def cut(a):
+                return jnp.asarray(np.ascontiguousarray(a[:, :, m:]))
+
             if blob.codec_on:
                 kvw = cache_mod.PageWire(
-                    signman=jnp.asarray(kv["signman"]),
-                    planes=jnp.asarray(kv["planes"]),
-                    dict_syms=jnp.asarray(kv["dict_syms"]),
-                    esc_pos=jnp.asarray(kv["esc_pos"]),
-                    esc_raw=jnp.asarray(kv["esc_raw"]),
+                    signman=cut(kv["signman"]), planes=cut(kv["planes"]),
+                    dict_syms=cut(kv["dict_syms"]),
+                    esc_pos=cut(kv["esc_pos"]), esc_raw=cut(kv["esc_raw"]),
                     raw_pages=None, ring=jnp.asarray(kv["ring"]))
             else:
                 kvw = cache_mod.PageWire(
                     signman=None, planes=None, dict_syms=None,
                     esc_pos=None, esc_raw=None,
-                    raw_pages=jnp.asarray(kv["raw_pages"]),
+                    raw_pages=cut(kv["raw_pages"]),
                     ring=jnp.asarray(kv["ring"]))
         ssm = None
         if eng.state.ssm is not None:
             h_, cx, cbc = blob.ssm
             ssm = SSMState(h=jnp.asarray(h_), conv_x=jnp.asarray(cx),
                            conv_bc=jnp.asarray(cbc))
-        eng.state = eng._import_for(blob.n_cols)(
+        if m:                       # map resident shared columns first
+            ids = np.zeros((eng.tp, eng._maxp), np.int32)
+            for c, key in enumerate(mkeys):
+                ids[:, c] = eng._prefix_index[key]
+            eng.state = eng._map_shared_for()(
+                eng.state, jnp.asarray(s, jnp.int32), jnp.asarray(ids),
+                jnp.asarray(m, jnp.int32),
+                jnp.asarray(m * eng.blk_tokens, jnp.int32))
+            for key in mkeys:
+                eng._prefix_ref[key] += 1
+                eng._slot_keys[s].append(key)
+            ls.shared_hits += m
+        eng.state = eng._import_for(blob.n_cols - m)(
             eng.state, jnp.asarray(s, jnp.int32), kvw, ssm,
-            jnp.asarray(blob.length, jnp.int32))
-        req = h.req
+            jnp.asarray(blob.length, jnp.int32), jnp.asarray(m, jnp.int32))
         ls.slot_req[s] = req
         eng._slot_busy[s] = True
         ls.slot_len[s] = blob.length
         ls.emitted[req.uid] = list(blob.emitted)
         ls.cur[s] = blob.cur_token
         ls.admit_t[req.uid] = h.admit_t
+        eng._register_prefixes([(s, np.asarray(req.prompt), blob.length)])
         eng._track_peak(ls)
         return s
 
@@ -283,16 +445,24 @@ class DisaggEngine:
     :class:`PageTransport` — the routing layer of the disaggregated stack.
 
     Construction mirrors ``ServeEngine`` (one set of model params is shared
-    by every replica); ``n_slots`` is PER REPLICA.  There is no
-    ``prefix_sharing`` knob: in-engine sharing needs overlapping residency
-    that the export-and-free prefill flow never has, so cross-request page
-    reuse happens on the wire instead (transport dedup; see __init__).  Token streams are
-    byte-identical to the monolithic engine for the same requests
-    (tests/test_disagg.py), and ``DisaggStats`` adds the link accounting:
-    wire vs bf16-dense bytes per transfer, dedup hits, and the
-    ``hw.noc.LinkModel`` latency of both — the serving measurement of the
-    paper's headline claim that compressed exponent streams cut
-    inter-chiplet traffic.
+    by every replica); ``n_slots`` is PER REPLICA.  Prefill replicas run
+    without in-engine prefix sharing (the export-and-free flow never has
+    overlapping residency), so cross-request page reuse happens on the wire
+    (transport dedup) and across imports in the decode replicas' prefix
+    indexes.  Token streams are byte-identical to the monolithic engine for
+    the same requests (tests/test_disagg.py), and ``DisaggStats`` adds the
+    link accounting: wire vs bf16-dense bytes per transfer, dedup hits,
+    streamed chunk bytes, and the ``hw.noc.LinkModel`` latency of both —
+    the serving measurement of the paper's headline claim that compressed
+    exponent streams cut inter-chiplet traffic.
+
+    ``streaming=True`` turns on streaming prefill export (full pages cross
+    the link as admission fills them — see :class:`PrefillReplica`).
+    ``decode_addrs`` replaces the in-process decode replicas with REMOTE
+    ones reached over the given ``host:port`` list; ``transport`` must then
+    be a connected-capable ``repro.serve.net.client.SocketTransport`` and
+    each address must run ``repro.launch.disagg_host`` with a matching
+    model/config fingerprint.
     """
 
     def __init__(self, cfg: ModelConfig, run: RunConfig, *, tp: int = 1,
@@ -301,8 +471,10 @@ class DisaggEngine:
                  eos_id: Optional[int] = None,
                  stop_seqs: Optional[Sequence[Sequence[int]]] = None,
                  max_fuse_steps: int = 32,
-                 transport: Optional[PageTransport] = None):
-        if n_prefill < 1 or n_decode < 1:
+                 transport: Optional[PageTransport] = None,
+                 streaming: bool = False,
+                 decode_addrs: Optional[Sequence[str]] = None):
+        if n_prefill < 1 or (n_decode < 1 and decode_addrs is None):
             raise ValueError("need at least one replica of each kind")
         self.cfg, self.run_cfg = cfg, run
         self.transport = transport if transport is not None \
@@ -310,24 +482,51 @@ class DisaggEngine:
         mk = dict(tp=tp, n_slots=n_slots, max_len=max_len, seed=seed,
                   eos_id=eos_id, stop_seqs=stop_seqs,
                   max_fuse_steps=max_fuse_steps)
+        self.decodes: List = []
+        self._names: List[str] = []
+        if decode_addrs is not None:
+            from .net.client import RemoteDecodeReplica, SocketTransport
+            from .net.framing import config_fingerprint
+            if not isinstance(self.transport, SocketTransport):
+                raise ValueError("decode_addrs needs a SocketTransport")
+            fp = config_fingerprint(cfg, run.codec, tp, n_slots, max_len,
+                                    seed, eos_id=eos_id,
+                                    stop_seqs=stop_seqs)
+            for i, addr in enumerate(decode_addrs):
+                host, _, port = str(addr).rpartition(":")
+                dst = f"decode{i}"
+                self.transport.connect(dst, host or "127.0.0.1", int(port),
+                                       fp)
+                self.decodes.append(RemoteDecodeReplica(self.transport, dst))
+                self._names.append(dst)
         self.prefills: List[PrefillReplica] = []
-        self.decodes: List[DecodeReplica] = []
+
+        def pick_dst() -> str:
+            i = max(range(len(self.decodes)),
+                    key=lambda j: self.decodes[j].free_slots())
+            return self._names[i]
+
         for _ in range(n_prefill):
             # In-engine prefix sharing needs overlapping slot residency,
             # and a prefill replica exports + frees every slot at the end
             # of each admission round — its prefix index could never hit.
-            # Cross-request prefix reuse lives in the TRANSPORT instead
-            # (content-addressed page dedup on the wire); in-pool sharing
-            # across imports is a ROADMAP open item.  Both replica kinds
-            # therefore run the cheap unshared release path.
+            # Cross-request prefix reuse lives in the TRANSPORT (content-
+            # addressed page dedup on the wire) and in the decode replicas'
+            # prefix indexes (shared pages across imports) instead.
             eng = ServeEngine(cfg, run, params=params,
                               prefix_sharing=False, **mk)
             params = eng.params          # share one param set everywhere
-            self.prefills.append(PrefillReplica(eng))
-        for _ in range(n_decode):
-            eng = ServeEngine(cfg, run, params=params,
-                              prefix_sharing=False, **mk)
-            self.decodes.append(DecodeReplica(eng))
+            self.prefills.append(PrefillReplica(
+                eng, transport=self.transport, pick_dst=pick_dst,
+                streaming=streaming))
+        if decode_addrs is None:
+            for i in range(n_decode):
+                # decode replicas DO have overlapping residency: imported
+                # sequences register in the prefix index (auto-disabled
+                # per the usual pure-attention rules inside ServeEngine)
+                eng = ServeEngine(cfg, run, params=params, **mk)
+                self.decodes.append(DecodeReplica(eng))
+                self._names.append(f"decode{i}")
         self.params = params
 
     def run(self, requests: List[Request]
@@ -348,16 +547,27 @@ class DisaggEngine:
                 pr.submit(queue.popleft())
 
         def route_handoffs():
-            while pending:
-                dr = max(self.decodes, key=lambda d: d.free_slots())
-                if dr.free_slots() == 0:
-                    break
-                h = pending.popleft()
-                dst = f"decode{self.decodes.index(dr)}"
-                data = self.transport.send(h.blob, dst)
-                blob = self.transport.recv(data, dst)
-                dr.import_handoff(Handoff(req=h.req, blob=blob,
-                                          admit_t=h.admit_t))
+            # streamed handoffs stick to the destination their chunks went
+            # to; unrouted ones take the freest replica.  One rotation per
+            # round so a full destination never starves the others.  Free
+            # counts are fetched ONCE per rotation and decremented on
+            # delivery — one STATUS round trip per remote replica, not one
+            # per pending handoff.
+            progress = True
+            while pending and progress:
+                progress = False
+                free = [d.free_slots() for d in self.decodes]
+                for _ in range(len(pending)):
+                    h = pending.popleft()
+                    i = (self._names.index(h.dst) if h.dst is not None
+                         else max(range(len(free)), key=free.__getitem__))
+                    if free[i] == 0:
+                        pending.append(h)
+                        continue
+                    self.decodes[i].deliver(h, self.transport,
+                                            self._names[i])
+                    free[i] -= 1
+                    progress = True
 
         route_submissions()
         while (pending or not all(p.idle() for p in self.prefills)
@@ -379,14 +589,14 @@ class DisaggEngine:
     def _stats(self, results, wall: float) -> DisaggStats:
         ts: TransportStats = self.transport.stats
         pls = [p.ls for p in self.prefills]
-        dls = [d.ls for d in self.decodes]
+        dst = [d.decode_stats() for d in self.decodes]
         n_tok = sum(len(r.tokens) for r in results.values())
         lats = sorted(r.latency_s for r in results.values())
         pct = (lambda q: float(np.percentile(lats, q)) if lats else 0.0)
         return DisaggStats(
             n_requests=len(results), n_tokens=n_tok,
-            decode_steps=sum(l.steps for l in dls),
-            n_dispatches=sum(l.dispatches for l in dls),
+            decode_steps=sum(d["steps"] for d in dst),
+            n_dispatches=sum(d["dispatches"] for d in dst),
             n_admit_dispatches=sum(l.admit_dispatches for l in pls),
             n_replay_dispatches=sum(l.replay_dispatches for l in pls),
             n_prefill_replicas=len(self.prefills),
@@ -396,6 +606,11 @@ class DisaggEngine:
             wire_bytes_nodedup=ts.wire_bytes_nodedup,
             wire_raw_bytes=ts.raw_bytes,
             dedup_page_refs=ts.pages_ref,
+            pages_streamed=ts.pages_streamed,
+            stream_chunk_bytes=ts.stream_chunk_bytes,
+            pages_resent=ts.pages_resent,
+            store_evicted=ts.store_evicted,
+            decode_prefix_hits=sum(d["shared_hits"] for d in dst),
             link_model_ms=ts.model_ns * 1e-6,
             link_model_ms_raw=ts.model_ns_raw * 1e-6,
             wall_s=wall,
@@ -418,5 +633,8 @@ def format_disagg_stats(st: DisaggStats) -> str:
             f"{st.wire_raw_bytes / 1e3:.1f} kB raw bf16 "
             f"({st.link_reduction * 100:.1f}% reduction; "
             f"{st.wire_bytes_nodedup / 1e3:.1f} kB codec-only, "
-            f"{st.dedup_page_refs} pages deduped), modeled "
+            f"{st.dedup_page_refs} pages deduped, "
+            f"{st.pages_streamed} streamed in "
+            f"{st.stream_chunk_bytes / 1e3:.1f} kB of chunks, "
+            f"{st.decode_prefix_hits} import prefix hits), modeled "
             f"{st.link_model_ms:.3f} ms vs {st.link_model_ms_raw:.3f} ms")

@@ -663,7 +663,7 @@ def paged_replay_steps(cfg: ModelConfig, run: RunConfig, params, dims,
     return seq, state
 
 
-def export_slot(state: PagedState, slot, n_cols: int, tp: int):
+def export_slot(state: PagedState, slot, n_cols: int, tp: int, col0=0):
     """Export one slot's full cache payload for a replica handoff.
 
     Returns ``(kv_wire, ssm_slot, length)``: ``kv_wire`` stacks
@@ -671,7 +671,9 @@ def export_slot(state: PagedState, slot, n_cols: int, tp: int):
     attention-free configs), ``ssm_slot`` is the slot's recurrent state
     (leaves (L, ...) or None), ``length`` the slot's token count.  Runs
     per shard inside shard_map; the scheduler-side wrapper stacks the
-    per-shard views into the wire blob's (tp, L, ...) layout.
+    per-shard views into the wire blob's (tp, L, ...) layout.  ``col0``
+    (traced) windows the page gather for streaming chunk export — see
+    ``cache.export_sequence``.
     """
     slot = jnp.asarray(slot, jnp.int32)
     length = state.lengths[slot]
@@ -679,7 +681,7 @@ def export_slot(state: PagedState, slot, n_cols: int, tp: int):
     if state.kv is not None:
         kv_wire = jax.vmap(
             lambda pkv: cache_mod.export_sequence(pkv, slot, n_cols, length,
-                                                  tp))(state.kv)
+                                                  tp, col0))(state.kv)
     ssm_slot = None
     if state.ssm is not None:
         ssm_slot = jax.tree_util.tree_map(lambda a: a[:, slot], state.ssm)
@@ -687,21 +689,24 @@ def export_slot(state: PagedState, slot, n_cols: int, tp: int):
 
 
 def import_slot(state: PagedState, slot, kv_wire, ssm_slot, length,
-                tp: int) -> PagedState:
+                tp: int, col0=0) -> PagedState:
     """Import an exported sequence into free slot ``slot`` of THIS pool.
 
     The decode-replica half of the handoff: pages are allocated from this
     pool's own free list (any permutation works) and the compressed planes
     byte-copied in (``cache.import_sequence``); the slot becomes active at
-    ``length``.  The caller must have validated capacity host-side — see
-    ``cache.import_sequence``'s docstring for the loud-failure contract.
+    ``length``.  ``col0`` (traced) makes the import partial — wire columns
+    land at ``[col0, col0 + n_cols)`` and the row below ``col0`` is kept
+    (the prefix-reuse path maps shared pages there first).  The caller must
+    have validated capacity host-side — see ``cache.import_sequence``'s
+    docstring for the loud-failure contract.
     """
     slot = jnp.asarray(slot, jnp.int32)
     length = jnp.asarray(length, jnp.int32)
     kv = state.kv
     if kv is not None:
         kv = jax.vmap(lambda pkv, w: cache_mod.import_sequence(
-            pkv, slot, w, length, tp))(kv, kv_wire)
+            pkv, slot, w, length, tp, col0))(kv, kv_wire)
     ssm = state.ssm
     if ssm is not None:
         ssm = jax.tree_util.tree_map(

@@ -1,0 +1,10 @@
+"""Multi-process page transport: the ``PageTransport`` seam over real
+sockets.  ``framing`` defines the length-prefixed frame layer + control
+protocol, ``client`` the sender (``SocketTransport``) and the driver-side
+decode proxy (``RemoteDecodeReplica``), ``server`` the decode-host session
+handler (``PageHost``).  Process entry points live in
+``repro.launch.disagg_host``; the wire payloads themselves are specified in
+``repro.serve.transport`` / ``repro.models.cache.export_sequence``."""
+from . import framing  # noqa: F401
+from .client import RemoteDecodeReplica, SocketTransport  # noqa: F401
+from .server import PageHost  # noqa: F401

@@ -278,6 +278,13 @@ class ServeEngine:
         self._slot_keys: List[List[bytes]] = [[] for _ in range(n_slots)]
         self._slot_busy = np.zeros((n_slots,), bool)
 
+        # streaming-prefill hook: the disagg prefill replica sets this to
+        # export freshly completed page columns MID-ADMISSION (after the
+        # batched trunk insert and after every fused replay dispatch), so
+        # full pages can cross the transfer link while the prompt tail is
+        # still replaying.  Called with the loop state; None = no-op.
+        self.admit_progress_cb = None
+
         self.n_admit_compiles = 0
         self._admit_cache: Dict[Tuple[int, int], object] = {}
         self._decode_cache: Dict[int, object] = {}
@@ -333,37 +340,42 @@ class ServeEngine:
         return self._map_shared
 
     def _export_for(self, n_cols: int):
-        """(state, slot) -> (kv wire (tp, L, ...) leaves, ssm slot leaves,
-        length) — one jitted export per page-column count (``n_cols`` is
-        static; at most max-pages-per-slot distinct values exist)."""
+        """(state, slot, col0) -> (kv wire (tp, L, ...) leaves, ssm slot
+        leaves, length) — one jitted export per page-column count
+        (``n_cols`` is static; at most max-pages-per-slot distinct values
+        exist).  ``col0`` (traced) windows the gather to page columns
+        ``[col0, col0 + n_cols)`` — 0 for a whole-sequence export, the
+        streamed-so-far watermark for chunked prefill export."""
         fn = self._export_cache.get(n_cols)
         if fn is None:
-            def ex(st_g, slot):
+            def ex(st_g, slot, col0):
                 kvw, ssm, length = engine.export_slot(
-                    self._squeeze(st_g), slot, n_cols, self.tp)
+                    self._squeeze(st_g), slot, n_cols, self.tp, col0)
                 return (self._unsqueeze(kvw), self._unsqueeze(ssm), length)
 
             fn = jax.jit(cl.shmap(
-                ex, self.mesh, (self._sspec, P()),
+                ex, self.mesh, (self._sspec, P(), P()),
                 (P("model"), P("model"), P())))
             self._export_cache[n_cols] = fn
         return fn
 
     def _import_for(self, n_cols: int):
-        """(state, slot, kv wire, ssm slot, length) -> state — the decode-
-        replica half of a handoff (pages allocated from THIS pool's free
-        list; see ``cache.import_sequence``)."""
+        """(state, slot, kv wire, ssm slot, length, col0) -> state — the
+        decode-replica half of a handoff (pages allocated from THIS pool's
+        free list; see ``cache.import_sequence``).  ``col0`` (traced) > 0
+        imports only the wire columns ``[col0, col0 + n_cols)``, keeping
+        the row below ``col0`` (prefix-reuse maps shared pages there)."""
         fn = self._import_cache.get(n_cols)
         if fn is None:
-            def im(st_g, slot, kvw_g, ssm_g, length):
+            def im(st_g, slot, kvw_g, ssm_g, length, col0):
                 st = engine.import_slot(
                     self._squeeze(st_g), slot, self._squeeze(kvw_g),
-                    self._squeeze(ssm_g), length, self.tp)
+                    self._squeeze(ssm_g), length, self.tp, col0)
                 return self._unsqueeze(st)
 
             fn = jax.jit(cl.shmap(
                 im, self.mesh,
-                (self._sspec, P(), P("model"), P("model"), P()),
+                (self._sspec, P(), P("model"), P("model"), P(), P()),
                 self._sspec))
             self._import_cache[n_cols] = fn
         return fn
@@ -751,6 +763,8 @@ class ServeEngine:
                 ls.emitted[req.uid] = [t]
                 ls.cur[s] = t
                 self._check_done(ls, s, req)
+        if self.admit_progress_cb is not None:
+            self.admit_progress_cb(ls)   # trunk pages exist: stream them
 
     def _run_replays(self, ls: _LoopState, replays) -> None:
         """Feed all admitted slots' leftover prompt tokens through
@@ -785,6 +799,8 @@ class ServeEngine:
                     self._check_done(ls, s, req)
                     del rem[s]
             self._track_peak(ls)
+            if self.admit_progress_cb is not None:
+                self.admit_progress_cb(ls)   # ring flushes filled pages
 
     def _admit_phase(self, ls: _LoopState) -> None:
         """Admit until slots or admissible requests run out: shared

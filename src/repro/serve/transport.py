@@ -18,29 +18,40 @@ compute.  The transport therefore meters every transfer twice —
 and prices both through ``repro.hw.noc.LinkModel`` so the serving bench can
 report the link-byte/latency reduction next to tokens/s.
 
-**Content-addressed page dedup.**  Full pages are immutable and content-
-deterministic (the same prompt prefix always compresses to the same
-bytes — PR 3's prefix-index invariant), so the transport keeps a per-
-destination digest store and replaces pages the receiver already holds
-with 13-byte references (tag + sha256[:12]).  That is what pushes link
+**Content-addressed page dedup (receiver-side).**  Full pages are immutable
+and content-deterministic (the same prompt prefix always compresses to the
+same bytes — PR 3's prefix-index invariant), so the RECEIVER of a link owns
+a :class:`DigestStore` (digest -> payload, LRU-bounded) and the sender
+queries its inventory before serializing: pages the receiver already holds
+ship as 13-byte references (tag + sha256[:12]).  That is what pushes link
 bytes below the LEXI-FW storage floor of ~13/16 bits per value on
 prefix-heavy request mixes; the codec-only number is metered separately
 (``wire_bytes_nodedup``).  Dedup never changes decode state: a reference
 resolves to the byte-identical payload, or the import fails loudly.
 
+**Streaming chunks.**  A transfer need not wait for admission to finish:
+full pages can stream ahead of the tail as :func:`pack_chunk` frames (one
+per batch of freshly filled page columns), landing in the receiver's digest
+store (pinned against LRU eviction until the transfer completes — see
+``DigestStore.pin``).  The closing :class:`SequenceBlob` then carries the
+header/ring/SSM sections plus tag-1 references for every streamed page, so
+``from_wire`` doubles as the completeness check: a missing chunk is an
+unknown digest and the import fails loudly with the pool untouched.
+
 ``LoopbackTransport`` is the in-process implementation (prefill and decode
-replicas in one process); the ``PageTransport`` interface is the seam a
-multi-host transport implements later — everything it needs is the byte
-format plus the digest-store contract, both specified in
-``cache.export_sequence``.
+replicas in one process); ``repro.serve.net.client.SocketTransport``
+carries the same bytes over TCP between OS processes.  Both meter into the
+same :class:`TransportStats` so the serving bench reads one ledger.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import hashlib
+import itertools
 import struct
-from typing import Dict, Iterator, List, Optional, Set, Tuple
+from collections import OrderedDict
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -58,9 +69,107 @@ _DIGEST_BYTES = 12
 _FLAG_CODEC, _FLAG_KV, _FLAG_SSM = 1, 2, 4
 _HDR = struct.Struct("<4sBBHHHHIHIIIiH")   # through n_emitted
 
+CHUNK_MAGIC = b"LXPC"
+_CHDR = struct.Struct("<4sBIH")            # magic, version, seq_id, entries
+_CENT = struct.Struct("<HHHB")             # shard, layer, col, tag
+
 
 def _page_digest(payload: bytes) -> bytes:
     return hashlib.sha256(payload).digest()[:_DIGEST_BYTES]
+
+
+def page_payload(kv: Dict[str, np.ndarray], codec_on: bool,
+                 t: int, l: int, c: int) -> bytes:
+    """One page's wire payload (the field concatenation of the WIRE FORMAT
+    page section) from a ``(tp, L, cols, ...)`` field dict — shared by the
+    whole-blob serializer and the streaming chunk exporter."""
+    if codec_on:
+        return b"".join((
+            kv["signman"][t, l, c].tobytes(),
+            kv["planes"][t, l, c].tobytes(),
+            kv["dict_syms"][t, l, c].tobytes(),
+            kv["esc_pos"][t, l, c].tobytes(),
+            kv["esc_raw"][t, l, c].tobytes()))
+    return kv["raw_pages"][t, l, c].tobytes()
+
+
+# ---------------------------------------------------------------------------
+# streaming page chunks
+# ---------------------------------------------------------------------------
+
+
+def pack_chunk(seq_id: int, entries: Sequence[Tuple[int, int, int, bytes]],
+               known: Optional[Set[bytes]] = None
+               ) -> Tuple[bytes, List[Tuple[bytes, bytes]], List[bytes]]:
+    """Serialize one streaming page chunk.
+
+    ``entries`` are ``(shard, layer, col, payload)`` for full pages that
+    just became available; ``known`` are digests the receiver already holds
+    (those ship as tag-1 references).  Returns ``(data, inline, refs)``
+    like :meth:`SequenceBlob.to_wire`.  Chunk entries are self-describing
+    (explicit payload length) so a receiver can parse them before it has
+    seen any geometry header.
+    """
+    parts = [_CHDR.pack(CHUNK_MAGIC, VERSION, seq_id, len(entries))]
+    inline: List[Tuple[bytes, bytes]] = []
+    refs: List[bytes] = []
+    known = set(known) if known is not None else None
+    for t, l, c, payload in entries:
+        digest = _page_digest(payload)
+        if known is not None and digest in known:
+            parts.append(_CENT.pack(t, l, c, 1) + digest)
+            refs.append(digest)
+        else:
+            parts.append(_CENT.pack(t, l, c, 0) + digest
+                         + struct.pack("<I", len(payload)) + payload)
+            inline.append((digest, payload))
+            if known is not None:
+                known.add(digest)
+    return b"".join(parts), inline, refs
+
+
+def unpack_chunk(data: bytes
+                 ) -> Tuple[int, List[Tuple[int, int, int, int, bytes,
+                                            Optional[bytes]]]]:
+    """Parse a streaming chunk; loud ``ValueError`` on bad magic/version,
+    a truncated entry, or a corrupted payload length.  Returns
+    ``(seq_id, [(shard, layer, col, tag, digest, payload-or-None)])``."""
+    if len(data) < _CHDR.size:
+        raise ValueError(f"truncated chunk header ({len(data)} bytes)")
+    magic, version, seq_id, n_entries = _CHDR.unpack_from(data, 0)
+    if magic != CHUNK_MAGIC:
+        raise ValueError(f"bad chunk magic {magic!r}")
+    if version != VERSION:
+        raise ValueError(f"unsupported chunk version {version} "
+                         f"(this codec speaks {VERSION})")
+    off = _CHDR.size
+    out = []
+    for _ in range(n_entries):
+        if off + _CENT.size + _DIGEST_BYTES > len(data):
+            raise ValueError("truncated chunk entry")
+        t, l, c, tag = _CENT.unpack_from(data, off)
+        off += _CENT.size
+        digest = data[off:off + _DIGEST_BYTES]
+        off += _DIGEST_BYTES
+        payload = None
+        if tag == 0:
+            if off + 4 > len(data):
+                raise ValueError("truncated chunk payload length")
+            (size,) = struct.unpack_from("<I", data, off)
+            off += 4
+            if off + size > len(data):
+                raise ValueError(
+                    f"corrupted chunk payload length {size} overruns the "
+                    f"frame ({len(data) - off} bytes left)")
+            payload = data[off:off + size]
+            off += size
+        elif tag != 1:
+            raise ValueError(f"unknown chunk entry tag {tag}")
+        out.append((t, l, c, tag, digest, payload))
+    if off != len(data):
+        raise ValueError(f"{len(data) - off} trailing bytes after the last "
+                         f"chunk entry")
+    return seq_id, out
 
 
 @dataclasses.dataclass
@@ -72,7 +181,10 @@ class SequenceBlob:
     ``export_slot`` produces under shard_map).  ``kv`` is None for
     attention-free configs, ``ssm`` for attention-only ones.  See
     ``repro.models.cache.export_sequence`` for the byte-level WIRE FORMAT
-    this serializes to.
+    this serializes to.  In streaming mode, page payloads travel ahead of
+    the blob as :func:`pack_chunk` frames and the blob's page section
+    carries tag-1 references to them (the receiver resolves them from its
+    digest store, where the chunks landed).
     """
     codec_on: bool
     tp: int
@@ -119,15 +231,7 @@ class SequenceBlob:
     # -- page payload extraction ------------------------------------------
 
     def _page_payload(self, t: int, l: int, c: int) -> bytes:
-        kv = self.kv
-        if self.codec_on:
-            return b"".join((
-                kv["signman"][t, l, c].tobytes(),
-                kv["planes"][t, l, c].tobytes(),
-                kv["dict_syms"][t, l, c].tobytes(),
-                kv["esc_pos"][t, l, c].tobytes(),
-                kv["esc_raw"][t, l, c].tobytes()))
-        return kv["raw_pages"][t, l, c].tobytes()
+        return page_payload(self.kv, self.codec_on, t, l, c)
 
     def page_entries(self) -> Iterator[Tuple[int, int, int, bytes]]:
         """(shard, layer, col, payload) for every VALID page, in wire
@@ -140,14 +244,15 @@ class SequenceBlob:
     # -- serialization -----------------------------------------------------
 
     def to_wire(self, known: Optional[Set[bytes]] = None
-                ) -> Tuple[bytes, List[Tuple[bytes, bytes]], int]:
+                ) -> Tuple[bytes, List[Tuple[bytes, bytes]], List[bytes]]:
         """Serialize to the version-1 wire format.
 
         ``known``: digests the receiver already holds — matching pages ship
         as 13-byte references instead of payloads.  Returns ``(data,
-        inline, n_refs)`` where ``inline`` lists the (digest, payload)
-        pairs that crossed in full (the sender adds them to its picture of
-        the receiver's store after a successful send).
+        inline, refs)`` where ``inline`` lists the (digest, payload) pairs
+        that crossed in full (the sender adds them to its picture of the
+        receiver's store after a successful send) and ``refs`` the digests
+        that shipped as references.
         """
         flags = ((_FLAG_CODEC if self.codec_on else 0)
                  | (_FLAG_KV if self.kv is not None else 0)
@@ -166,29 +271,31 @@ class SequenceBlob:
         if self.kv is not None:
             parts.append(self.kv["ring"].tobytes())
         inline: List[Tuple[bytes, bytes]] = []
-        n_refs = 0
+        refs: List[bytes] = []
         if self.kv is not None:
             known = set(known) if known is not None else None
             for _, _, _, payload in self.page_entries():
                 digest = _page_digest(payload)
                 if known is not None and digest in known:
                     parts.append(b"\x01" + digest)
-                    n_refs += 1
+                    refs.append(digest)
                 else:
                     parts.append(b"\x00" + digest + payload)
                     inline.append((digest, payload))
                     if known is not None:
                         known.add(digest)          # dedupe within one blob
-        return b"".join(parts), inline, n_refs
+        return b"".join(parts), inline, refs
 
     @classmethod
     def from_wire(cls, data: bytes,
-                  store: Optional[Dict[bytes, bytes]] = None
+                  store: Optional["DigestStore"] = None
                   ) -> "SequenceBlob":
         """Parse a version-1 wire blob.  ``store`` resolves tag-1 page
-        references (content digest -> payload); an unknown digest or a
-        version/magic mismatch raises ``ValueError`` before any state is
-        touched."""
+        references (content digest -> payload; a plain dict works too); an
+        unknown digest or a version/magic mismatch raises ``ValueError``
+        before any state is touched."""
+        if len(data) < _HDR.size:
+            raise ValueError(f"truncated wire header ({len(data)} bytes)")
         (magic, version, flags, tp, n_layers, n_cols, blk, w, k, esc_cap,
          npad, length, cur_token, n_emitted) = _HDR.unpack_from(data, 0)
         if magic != MAGIC:
@@ -205,6 +312,10 @@ class SequenceBlob:
             nonlocal off
             dt = np.dtype(dtype)
             n = int(np.prod(shape))
+            if off + n * dt.itemsize > len(data):
+                raise ValueError(
+                    f"truncated wire section at offset {off}: need "
+                    f"{n * dt.itemsize} bytes, {len(data) - off} left")
             a = np.frombuffer(data, dt, n, off).reshape(shape).copy()
             off += n * dt.itemsize
             return a
@@ -243,9 +354,14 @@ class SequenceBlob:
                        n_cols=n_cols, blk=blk, w=w, k=k, esc_cap=esc_cap,
                        npad=npad, length=length, cur_token=cur_token,
                        emitted=emitted, kv=kv, ssm=ssm)
+            size = blob._payload_size()
             for t in range(tp):
                 for l in range(n_layers):
                     for c in range(blob.valid_cols(t)):
+                        if off + 1 + _DIGEST_BYTES > len(data):
+                            raise ValueError(
+                                f"truncated page entry (shard {t}, layer "
+                                f"{l}, col {c})")
                         tag = data[off]
                         digest = data[off + 1:off + 1 + _DIGEST_BYTES]
                         off += 1 + _DIGEST_BYTES
@@ -258,7 +374,11 @@ class SequenceBlob:
                                     f" col {c})")
                             payload = store[digest]
                         else:
-                            size = blob._payload_size()
+                            if off + size > len(data):
+                                raise ValueError(
+                                    f"truncated page payload (shard {t}, "
+                                    f"layer {l}, col {c}): need {size} "
+                                    f"bytes, {len(data) - off} left")
                             payload = data[off:off + size]
                             off += size
                             if store is not None:
@@ -280,6 +400,10 @@ class SequenceBlob:
     def _scatter_payload(self, t: int, l: int, c: int,
                          payload: bytes) -> None:
         kv = self.kv
+        if len(payload) != self._payload_size():
+            raise ValueError(
+                f"page payload is {len(payload)} bytes, geometry says "
+                f"{self._payload_size()} (shard {t}, layer {l}, col {c})")
         if not self.codec_on:
             kv["raw_pages"][t, l, c] = np.frombuffer(
                 payload, BF16).reshape(self.blk, self.w)
@@ -302,15 +426,118 @@ class SequenceBlob:
                                                self.esc_cap, o)
 
 
+# ---------------------------------------------------------------------------
+# the receiver-side content store
+# ---------------------------------------------------------------------------
+
+
+class DigestStore:
+    """Receiver-side content-addressed page store: digest -> payload,
+    LRU-bounded with pinning.
+
+    The store is the RECEIVER's half of page dedup: inline payloads land
+    here as they arrive (wire blobs and streaming chunks alike), tag-1
+    references resolve from here, and a sender decides what to inline by
+    querying ``digests()`` (the inventory).  Every insert is verified
+    against its digest, so a corrupted payload fails loudly at ingest.
+
+    Eviction is explicit: :meth:`trim` drops least-recently-used entries
+    down to ``max_pages`` and is called by transports at transfer
+    boundaries only — never mid-parse, so a blob can always resolve the
+    references its sender serialized against a pre-trim inventory.
+    In-flight streamed pages are pinned per transfer (:meth:`pin` /
+    :meth:`release`); trim skips pinned entries, so the store may overshoot
+    its bound while streams are open.
+    """
+
+    def __init__(self, max_pages: int = 4096):
+        if max_pages < 1:
+            raise ValueError("max_pages must be >= 1")
+        self.max_pages = max_pages
+        self._lru: "OrderedDict[bytes, bytes]" = OrderedDict()
+        self._pins: Dict[int, Set[bytes]] = {}
+        self._pin_count: Dict[bytes, int] = {}
+        self.n_inserted = 0
+        self.n_evicted = 0
+        self.n_hits = 0
+
+    def __len__(self) -> int:
+        return len(self._lru)
+
+    def __contains__(self, digest: bytes) -> bool:
+        return digest in self._lru
+
+    def __getitem__(self, digest: bytes) -> bytes:
+        payload = self._lru[digest]
+        self._lru.move_to_end(digest)
+        self.n_hits += 1
+        return payload
+
+    def __setitem__(self, digest: bytes, payload: bytes) -> None:
+        if _page_digest(payload) != digest:
+            raise ValueError(
+                f"payload does not hash to its digest {digest.hex()} — "
+                "corrupted page on the wire")
+        if digest in self._lru:
+            self._lru.move_to_end(digest)
+            return
+        self._lru[digest] = payload
+        self.n_inserted += 1
+
+    def digests(self) -> Set[bytes]:
+        """The inventory a sender dedups against."""
+        return set(self._lru)
+
+    def pin(self, seq_id: int, digest: bytes) -> None:
+        """Protect ``digest`` from eviction until transfer ``seq_id``
+        completes (:meth:`release`)."""
+        pins = self._pins.setdefault(seq_id, set())
+        if digest not in pins:
+            pins.add(digest)
+            self._pin_count[digest] = self._pin_count.get(digest, 0) + 1
+
+    def release(self, seq_id: int) -> None:
+        for digest in self._pins.pop(seq_id, ()):  # absent seq is a no-op
+            n = self._pin_count[digest] - 1
+            if n:
+                self._pin_count[digest] = n
+            else:
+                del self._pin_count[digest]
+
+    def trim(self) -> int:
+        """Evict LRU entries (skipping pinned) down to ``max_pages``;
+        returns how many were dropped."""
+        evicted = 0
+        if len(self._lru) > self.max_pages:
+            for digest in list(self._lru):
+                if len(self._lru) <= self.max_pages:
+                    break
+                if digest in self._pin_count:
+                    continue
+                del self._lru[digest]
+                evicted += 1
+        self.n_evicted += evicted
+        return evicted
+
+
 @dataclasses.dataclass
 class TransportStats:
-    """Cumulative link accounting across transfers (one link / direction)."""
+    """Cumulative link accounting across transfers (one link / direction).
+
+    ``wire_bytes`` counts the data plane only — streaming chunks plus the
+    closing wire blobs; a socket transport's control frames (hello,
+    inventory, acks) are not metered, matching the loopback baseline."""
     n_transfers: int = 0
     wire_bytes: int = 0          # bytes that actually crossed (with dedup)
     wire_bytes_nodedup: int = 0  # same transfers, dedup disabled (codec only)
     raw_bytes: int = 0           # bf16-dense bytes of the same payloads
-    pages_inline: int = 0        # page payloads shipped in full
+    pages_inline: int = 0        # page payloads shipped in full (incl. chunks)
     pages_ref: int = 0           # pages replaced by content references
+    pages_streamed: int = 0      # inline payloads that went ahead in chunks
+    stream_chunk_bytes: int = 0  # bytes of those chunk frames
+    pages_resent: int = 0        # inline payloads re-sent after receiver
+                                 # eviction (the store forgot them)
+    store_evicted: int = 0       # receiver-store pages dropped by LRU trim
     model_ns: float = 0.0        # LinkModel latency of the wire bytes
     model_ns_raw: float = 0.0    # LinkModel latency of the raw baseline
 
@@ -325,70 +552,129 @@ class PageTransport:
     """Interface of the prefill→decode handoff link.
 
     ``send`` serializes (and meters) a blob for a destination; ``recv``
-    reconstructs it on the destination side.  Implementations own the
-    per-destination content store that backs page dedup.  In-process today
-    (:class:`LoopbackTransport`); a multi-host implementation only needs
-    these two methods plus the WIRE FORMAT in ``cache.export_sequence``.
+    reconstructs it on the destination side; ``stream_pages`` ships full
+    pages ahead of the tail (``new_stream`` mints the transfer id,
+    ``abort_stream`` cancels one whose sequence never transferred).
+    Implementations own (or speak to) the per-destination
+    :class:`DigestStore` that backs page dedup, and expose its
+    ``inventory`` so senders ship only unknown digests.  In-process:
+    :class:`LoopbackTransport`; across OS processes:
+    ``repro.serve.net.client.SocketTransport`` (same WIRE FORMAT, framed
+    over TCP — see ``repro.serve.net.framing``).
     """
 
     stats: TransportStats
 
-    def send(self, blob: SequenceBlob, dst: str) -> bytes:
+    def __init__(self):
+        self.stats = TransportStats()
+        self._seq_ids = itertools.count(1)
+        self._ever_sent: Dict[str, Set[bytes]] = {}
+
+    def new_stream(self) -> int:
+        """Mint a transfer id for a streamed sequence."""
+        return next(self._seq_ids)
+
+    def _count_resent(self, dst: str,
+                      inline: List[Tuple[bytes, bytes]]) -> None:
+        """Meter inline payloads this link already shipped once: a repeat
+        means the receiver's store evicted them (``pages_resent``)."""
+        seen = self._ever_sent.setdefault(dst, set())
+        for digest, _ in inline:
+            if digest in seen:
+                self.stats.pages_resent += 1
+            seen.add(digest)
+
+    def inventory(self, dst: str) -> Set[bytes]:
+        """Digests the receiver behind ``dst`` currently holds."""
         raise NotImplementedError
 
-    def recv(self, data: bytes, dst: str) -> SequenceBlob:
+    def stream_pages(self, dst: str, seq_id: int,
+                     entries: Sequence[Tuple[int, int, int, bytes]]) -> None:
+        raise NotImplementedError
+
+    def abort_stream(self, dst: str, seq_id: int) -> None:
+        raise NotImplementedError
+
+    def send(self, blob: SequenceBlob, dst: str,
+             seq_id: Optional[int] = None) -> bytes:
+        raise NotImplementedError
+
+    def recv(self, data: bytes, dst: str,
+             seq_id: Optional[int] = None) -> SequenceBlob:
         raise NotImplementedError
 
 
 class LoopbackTransport(PageTransport):
     """In-process transport: full serialize → bytes → parse round trip (so
-    the byte format is exercised on every handoff), with content-addressed
-    page dedup and LinkModel metering.
+    the byte format is exercised on every handoff), with receiver-side
+    content-addressed page dedup and LinkModel metering.
 
     ``dedup=False`` ships every page inline (the codec-only baseline).
     ``hops`` positions the prefill and decode replicas on the chiplet mesh
-    for the latency model.  The digest store is per-destination and grows
-    with distinct page content; ``max_store_pages`` bounds it FIFO (a real
-    multi-host transport would tie eviction to the receiver's pool instead).
+    for the latency model.  Each destination owns a :class:`DigestStore`
+    bounded at ``max_store_pages`` (LRU; in-flight streams are pinned).
+    Loopback contract: ``recv`` a wire blob before the next ``send`` to the
+    same destination — the store is only trimmed at ``recv``/abort
+    boundaries, so references never dangle mid-transfer.
     """
 
     def __init__(self, dedup: bool = True, hops: int = 2,
                  link: Optional[LinkModel] = None,
                  max_store_pages: int = 4096):
+        super().__init__()
         self.dedup = dedup
         self.hops = hops
         self.link = link if link is not None else LinkModel()
         self.max_store_pages = max_store_pages
-        self.stats = TransportStats()
-        self._stores: Dict[str, Dict[bytes, bytes]] = {}
+        self._stores: Dict[str, DigestStore] = {}
 
-    def _store(self, dst: str) -> Dict[bytes, bytes]:
-        return self._stores.setdefault(dst, {})
+    def store(self, dst: str) -> DigestStore:
+        return self._stores.setdefault(dst,
+                                       DigestStore(self.max_store_pages))
 
-    def send(self, blob: SequenceBlob, dst: str) -> bytes:
-        store = self._store(dst)
+    def inventory(self, dst: str) -> Set[bytes]:
+        return self.store(dst).digests()
+
+    def stream_pages(self, dst, seq_id, entries) -> None:
+        store = self.store(dst)
+        known = store.digests() if self.dedup else None
+        data, inline, refs = pack_chunk(seq_id, entries, known)
         if self.dedup:
-            # Evict BEFORE snapshotting the known set, never after: a blob
-            # serialized against the pre-eviction store could carry tag-1
-            # references to exactly the entries evicted under it, making
-            # the very next recv fail on a healthy transfer.  The store
-            # may overshoot the bound by one blob's inline pages until the
-            # next send.  (Loopback contract: recv a wire blob before the
-            # next send to the same destination.)
-            while len(store) > self.max_store_pages:
-                store.pop(next(iter(store)))
-        known = set(store) if self.dedup else None
-        data, inline, n_refs = blob.to_wire(known)
+            self._count_resent(dst, inline)
+        st = self.stats
+        st.stream_chunk_bytes += len(data)
+        st.wire_bytes += len(data)
+        st.pages_streamed += len(inline)
+        st.pages_inline += len(inline)
+        st.pages_ref += len(refs)
+        st.model_ns += self.link.transfer_ns(len(data), self.hops)
+        for digest, payload in inline:
+            store[digest] = payload
+        for digest in itertools.chain((d for d, _ in inline), refs):
+            store.pin(seq_id, digest)
+
+    def abort_stream(self, dst, seq_id) -> None:
+        store = self.store(dst)
+        store.release(seq_id)
+        self.stats.store_evicted += store.trim()
+
+    def send(self, blob: SequenceBlob, dst: str,
+             seq_id: Optional[int] = None) -> bytes:
+        store = self.store(dst)
+        known = store.digests() if self.dedup else None
+        data, inline, refs = blob.to_wire(known)
+        if self.dedup:
+            self._count_resent(dst, inline)
         # a ref entry is the inline entry minus its payload, so the
         # dedup-off size is pure arithmetic — no second serialization
-        nodedup_len = len(data) + n_refs * blob._payload_size()
+        nodedup_len = len(data) + len(refs) * blob._payload_size()
         st = self.stats
         st.n_transfers += 1
         st.wire_bytes += len(data)
         st.wire_bytes_nodedup += nodedup_len
         st.raw_bytes += blob.raw_bytes
         st.pages_inline += len(inline)
-        st.pages_ref += n_refs
+        st.pages_ref += len(refs)
         st.model_ns += self.link.transfer_ns(len(data), self.hops)
         st.model_ns_raw += self.link.transfer_ns(blob.raw_bytes, self.hops)
         if self.dedup:
@@ -396,7 +682,13 @@ class LoopbackTransport(PageTransport):
                 store[digest] = payload
         return data
 
-    def recv(self, data: bytes, dst: str) -> SequenceBlob:
+    def recv(self, data: bytes, dst: str,
+             seq_id: Optional[int] = None) -> SequenceBlob:
         # the loopback receiver shares the sender-maintained store (same
         # host); a remote receiver maintains its own from inline payloads
-        return SequenceBlob.from_wire(data, self._store(dst))
+        store = self.store(dst)
+        blob = SequenceBlob.from_wire(data, store if self.dedup else None)
+        if seq_id is not None:
+            store.release(seq_id)
+        self.stats.store_evicted += store.trim()
+        return blob

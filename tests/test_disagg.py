@@ -86,6 +86,70 @@ def test_disagg_matches_monolithic(case, codec_on):
             assert dr.engine._pages_in_use() == 0
 
 
+@pytest.mark.parametrize("case", ["dense", "hybrid"])
+def test_disagg_streaming_matches_monolithic(case):
+    """Streaming prefill export (full pages cross the link as admission
+    fills them; the closing blob references them by digest) changes the
+    wire SCHEDULE, never the bytes that land: token streams stay
+    byte-identical to the monolithic engine, and the transport actually
+    streamed pages ahead of the tails."""
+    cfg = CASES[case]
+    run = _run_cfg(True)
+    reqs = _requests()
+    mono = ServeEngine(cfg, run, tp=TP, n_slots=2, max_len=MAXLEN, seed=1)
+    res_m, _ = mono.run(reqs)
+    dis = DisaggEngine(cfg, run, tp=TP, n_prefill=1, n_decode=1, n_slots=2,
+                       max_len=MAXLEN, seed=1, streaming=True)
+    res_d, st = dis.run(reqs)
+    for x, y in zip(res_m, res_d):
+        assert x.tokens == y.tokens, (case, x.uid)
+        assert x.stop_reason == y.stop_reason
+    assert st.pages_streamed > 0
+    assert st.stream_chunk_bytes > 0
+    # streamed pages arrive as tag-1 refs in the closing blob
+    assert st.dedup_page_refs >= st.pages_streamed
+    for dr in dis.decodes:
+        assert dr.engine._pages_in_use() == 0
+
+
+def test_decode_prefix_reuse_across_imports():
+    """Imported sequences register their full page columns in the decode
+    replica's prefix index, so a duplicate prompt imported while the first
+    is still resident maps the SAME pool pages (pure attention only) —
+    streams unchanged, fewer pages resident, pool still drains to zero."""
+    cfg = CASES["dense"]
+    run = _run_cfg(True)
+    # duplicates with staggered budgets so residency overlaps on the
+    # decode replica; a third copy arrives after the first released
+    a = RNG.integers(0, 500, (16,)).astype(np.int32)
+    reqs = [Request(uid=0, prompt=a, max_new_tokens=8),
+            Request(uid=1, prompt=a.copy(), max_new_tokens=4),
+            Request(uid=2, prompt=a.copy(), max_new_tokens=3)]
+    mono = ServeEngine(cfg, run, tp=TP, n_slots=2, max_len=MAXLEN, seed=1)
+    res_m, _ = mono.run(reqs)
+    dis = DisaggEngine(cfg, run, tp=TP, n_prefill=1, n_decode=1, n_slots=2,
+                       max_len=MAXLEN, seed=1)
+    res_d, st = dis.run(reqs)
+    for x, y in zip(res_m, res_d):
+        assert x.tokens == y.tokens, x.uid
+    assert st.decode_prefix_hits > 0
+    dec = dis.decodes[0].engine
+    assert dec._pages_in_use() == 0
+    assert not dec._prefix_index          # refcounts all hit zero
+    # hybrids never share (recurrent state is per-slot): hits stay zero
+    dis_h = DisaggEngine(CASES["hybrid"], run, tp=TP, n_prefill=1,
+                         n_decode=1, n_slots=2, max_len=MAXLEN, seed=1)
+    reqs_h = [Request(uid=i, prompt=a.copy(), max_new_tokens=3 + i)
+              for i in range(3)]
+    mono_h = ServeEngine(CASES["hybrid"], run, tp=TP, n_slots=2,
+                         max_len=MAXLEN, seed=1)
+    res_mh, _ = mono_h.run(reqs_h)
+    res_dh, st_h = dis_h.run(reqs_h)
+    for x, y in zip(res_mh, res_dh):
+        assert x.tokens == y.tokens, x.uid
+    assert st_h.decode_prefix_hits == 0
+
+
 def test_disagg_interpret_backend_identity():
     """Imported pages decode identically under the fused-kernel (Pallas
     interpret) backend — the wire format is backend-agnostic."""
@@ -283,8 +347,8 @@ def test_wire_serialization_roundtrip():
     """to_wire/from_wire is lossless for every section (pages, ring, SSM
     state, emitted tokens) and rejects foreign/versioned-up blobs."""
     blob = _blob_for_tests()
-    data, inline, n_refs = blob.to_wire(None)
-    assert n_refs == 0 and len(inline) == blob.n_valid_pages
+    data, inline, refs = blob.to_wire(None)
+    assert not refs and len(inline) == blob.n_valid_pages
     back = SequenceBlob.from_wire(data)
     assert back.to_wire(None)[0] == data
     assert back.length == blob.length
