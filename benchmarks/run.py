@@ -184,6 +184,9 @@ SMOKE = False   # set by --smoke: tiny single-scenario pass, no JSON writes
 SOCKET = False  # set by --socket: run the disagg scenario a second time
                 # with the decode replica in a separate OS process behind
                 # SocketTransport (spawns repro.launch.disagg_host)
+STORE_PAGES = 4096  # set by --store-pages: LRU cap for the content-
+                    # addressed stores (transport digest store + PageCache
+                    # warm tier) on every engine the serving bench builds
 
 
 def bench_serving() -> None:
@@ -262,6 +265,13 @@ def bench_serving() -> None:
             "peak_pages": st.peak_pages,
             "peak_cache_bytes": st.peak_cache_bytes,
             "peak_cache_raw_bytes": st.peak_cache_raw_bytes,
+            "cache_hot_hits": st.cache_hot_hits,
+            "cache_spilled_pages": st.cache_spilled_pages,
+            "cache_spilled_bytes": st.cache_spilled_bytes,
+            "cache_fetched_pages": st.cache_fetched_pages,
+            "cache_fetched_bytes": st.cache_fetched_bytes,
+            "cache_reprefill_cols": st.cache_reprefill_cols,
+            "cache_evicted_cols": st.cache_evicted_cols,
         }
 
     scenarios = []
@@ -274,7 +284,8 @@ def bench_serving() -> None:
         for backend in backends:
             run = RunConfig(codec=dataclasses.replace(
                 codec, decode_backend=backend))
-            eng = ServeEngine(cfg, run, tp=1, n_slots=2, max_len=96, seed=1)
+            eng = ServeEngine(cfg, run, tp=1, n_slots=2, max_len=96, seed=1,
+                              store_pages=STORE_PAGES)
             reqs = make_reqs()
             results, st = eng.run(reqs)
             assert all(len(r.tokens) == q.max_new_tokens
@@ -282,9 +293,13 @@ def bench_serving() -> None:
             assert st.shared_page_hits > 0
             assert st.n_admit_dispatches < st.n_requests
             # warm pass: same engine, identical fresh requests -> steady
-            # state (no new compiles; admission fns are bucket-keyed)
+            # state (no new compiles; admission fns are bucket-keyed).
+            # Retention means the cold pass's prefix columns SURVIVED the
+            # full release — the warm pass must re-acquire them from the
+            # hot tier instead of re-prefilling
             results_w, st_w = eng.run(make_reqs())
             assert st_w.n_admit_compiles == st.n_admit_compiles
+            assert st_w.cache_hot_hits > st.cache_hot_hits
             assert [r.tokens for r in results_w] == \
                    [r.tokens for r in results]
             for tag, s in (("cold", st), ("warm", st_w)):
@@ -314,7 +329,7 @@ def bench_serving() -> None:
         results_o, st_o = eng_off.run(make_reqs())
         assert [r.tokens for r in results_o] == [r.tokens for r in results]
         assert st_o.shared_page_hits == 0
-        assert st.peak_cache_bytes < st_o.peak_cache_bytes
+        assert st.n_admit_dispatches < st_o.n_admit_dispatches
         emit(f"serving.continuous.codec_{label}.no_sharing",
              st_o.wall_s * 1e6,
              f"admit={st_o.n_admit_dispatches} hits=0 "
@@ -352,6 +367,12 @@ def bench_serving() -> None:
             "pages_streamed": st_d.pages_streamed,
             "stream_chunk_bytes": st_d.stream_chunk_bytes,
             "decode_prefix_hits": st_d.decode_prefix_hits,
+            "cache_hot_hits": st_d.cache_hot_hits,
+            "cache_spilled_pages": st_d.cache_spilled_pages,
+            "cache_spilled_bytes": st_d.cache_spilled_bytes,
+            "cache_fetched_pages": st_d.cache_fetched_pages,
+            "cache_fetched_bytes": st_d.cache_fetched_bytes,
+            "cache_reprefill_cols": st_d.cache_reprefill_cols,
             "pages_resent": st_d.pages_resent,
             "store_evicted": st_d.store_evicted,
             "link_model_ms": st_d.link_model_ms,
@@ -387,7 +408,8 @@ def bench_serving() -> None:
         res_m, _ = eng_m.run(make_reqs())
         mono_tokens[label] = [r.tokens for r in res_m]
         dis = DisaggEngine(cfg, run, tp=1, n_prefill=1, n_decode=1,
-                           n_slots=2, max_len=96, seed=1, streaming=True)
+                           n_slots=2, max_len=96, seed=1, streaming=True,
+                           store_pages=STORE_PAGES)
         res_d, st_d = dis.run(make_reqs())
         assert [r.tokens for r in res_d] == mono_tokens[label]
         assert st_d.n_transfers > 0
@@ -412,7 +434,8 @@ def bench_serving() -> None:
                 ["--model", "tiny-bench", "--codec", label,
                  "--cache-block", "8", "--tp", "1", "--slots", "2",
                  "--max-len", "96", "--seed", "1",
-                 "--decode-backend", "jax"])
+                 "--decode-backend", "jax",
+                 "--store-pages", str(STORE_PAGES)])
             tr = SocketTransport()
             try:
                 dis_s = DisaggEngine(
@@ -431,9 +454,10 @@ def bench_serving() -> None:
                     proc.wait(timeout=10)
                 except Exception:
                     proc.kill()
+    _cache_pressure_scenarios(scenarios)
     if SMOKE:
         emit("serving.smoke", 0.0,
-             "smoke pass ok incl. disagg"
+             "smoke pass ok incl. disagg + cache pressure"
              + (" + two-process socket" if SOCKET else "")
              + " (no JSON written)")
         return
@@ -444,6 +468,76 @@ def bench_serving() -> None:
     path.write_text(json.dumps(out, indent=2) + "\n")
     emit("serving.json", 0.0, f"wrote {path.name} "
          f"({len(scenarios)} scenarios)")
+
+
+def _cache_pressure_scenarios(scenarios: list) -> None:
+    """Cache-pressure scenario for the tiered PageCache: a tiny pool forces
+    retained columns out of the hot tier (evict -> the payloads spilled to
+    host RAM at release), and a re-admission restores the prefix by digest
+    fetch WITHOUT re-prefill — token streams must stay identical to the
+    first pass.  A second run with a tiny digest store loses the spilled
+    bytes and must take the counted re-prefill fallback instead, still
+    stream-identical.  Runs under --smoke (it is the CI cache-pressure
+    check); rows land in BENCH_serving.json."""
+    import dataclasses
+    from repro.configs.base import RunConfig
+    from repro.core.collectives import CodecConfig
+    from repro.launch.disagg_host import tiny_bench_config
+    from repro.serve import Request, ServeEngine
+
+    cfg = tiny_bench_config()
+    run = RunConfig(codec=dataclasses.replace(CodecConfig(cache_block=4),
+                                              decode_backend="jax"))
+    rng = np.random.default_rng(3)
+    shorts = [rng.integers(0, 512, (16,)).astype(np.int32)
+              for _ in range(4)]                       # 4 columns each
+    longs = [rng.integers(0, 512, (24,)).astype(np.int32)
+             for _ in range(2)]                        # 6 columns each
+
+    for store_pages, tag in ((4096, "pressure"), (2, "tiny_store")):
+        # pool: 2 slots x 40 tokens / 4-token blocks = 20 page columns
+        eng = ServeEngine(cfg, run, tp=1, n_slots=2, max_len=40, seed=1,
+                          store_pages=store_pages)
+        # phase 1: fill the pool with retained prefixes (16 columns)
+        res1, _ = eng.run([Request(uid=i, prompt=p, max_new_tokens=2)
+                           for i, p in enumerate(shorts)])
+        assert eng.cache.retained() > 0
+        # phase 2: longer admissions need 12 free columns -> the LRU tail
+        # (the oldest retained columns, spilled at release) is evicted
+        eng.run([Request(uid=10 + i, prompt=p, max_new_tokens=2)
+                 for i, p in enumerate(longs)])
+        assert eng.cache.evicted_cols > 0
+        # phase 3: re-admit the FIRST prompt — its hot columns are gone;
+        # the warm store restores them (or the tiny store forces the
+        # re-prefill fallback), either way the stream is unchanged
+        (r3,), st3 = eng.run([Request(uid=20, prompt=shorts[0].copy(),
+                                      max_new_tokens=2)])
+        assert r3.tokens == res1[0].tokens, tag
+        assert st3.cache_spilled_pages > 0
+        if store_pages >= 4096:
+            assert st3.cache_fetched_pages > 0
+            assert st3.cache_reprefill_cols == 0
+        else:
+            assert st3.cache_reprefill_cols > 0
+        eng.drop_cache()
+        assert eng._pages_in_use() == 0
+        emit(f"serving.cache_{tag}", 0.0,
+             f"store={store_pages} hot={st3.cache_hot_hits} "
+             f"spilled={st3.cache_spilled_pages}p/"
+             f"{st3.cache_spilled_bytes}B "
+             f"fetched={st3.cache_fetched_pages}p/"
+             f"{st3.cache_fetched_bytes}B "
+             f"evicted={st3.cache_evicted_cols} "
+             f"reprefill={st3.cache_reprefill_cols}")
+        scenarios.append({
+            "scenario": f"cache_{tag}", "store_pages": store_pages,
+            "cache_hot_hits": st3.cache_hot_hits,
+            "cache_spilled_pages": st3.cache_spilled_pages,
+            "cache_spilled_bytes": st3.cache_spilled_bytes,
+            "cache_fetched_pages": st3.cache_fetched_pages,
+            "cache_fetched_bytes": st3.cache_fetched_bytes,
+            "cache_evicted_cols": st3.cache_evicted_cols,
+            "cache_reprefill_cols": st3.cache_reprefill_cols})
 
 
 def bench_decode_kernel() -> None:
@@ -534,10 +628,15 @@ def main() -> None:
                     help="serving bench: also run the disagg scenario over "
                          "SocketTransport against a decode host spawned in "
                          "a second OS process (localhost TCP)")
+    ap.add_argument("--store-pages", type=int, default=4096,
+                    help="serving bench: LRU cap (pages) for the content-"
+                         "addressed stores (transport digest store + "
+                         "PageCache warm tier)")
     args = ap.parse_args()
-    global SMOKE, SOCKET
+    global SMOKE, SOCKET, STORE_PAGES
     SMOKE = args.smoke
     SOCKET = args.socket
+    STORE_PAGES = args.store_pages
     names = args.only.split(",") if args.only else list(ALL)
     print("name,us_per_call,derived")
     for n in names:

@@ -108,7 +108,7 @@ def run_decode_host(args) -> int:
     cfg, run = build_cfg_run(args)
     eng = ServeEngine(cfg, run, tp=args.tp, n_slots=args.slots,
                       max_len=args.max_len, seed=args.seed,
-                      eos_id=args.eos_id)
+                      eos_id=args.eos_id, store_pages=args.store_pages)
     host = PageHost(DecodeReplica(eng), _fingerprint(args, cfg, run),
                     max_store_pages=args.store_pages)
     listener = socket.create_server((args.host, args.port))
@@ -132,7 +132,7 @@ def run_driver(args) -> int:
                        n_slots=args.slots, max_len=args.max_len,
                        seed=args.seed, eos_id=args.eos_id,
                        transport=transport, streaming=args.streaming,
-                       decode_addrs=addrs)
+                       decode_addrs=addrs, store_pages=args.store_pages)
     reqs = demo_requests(cfg, args)
     results, st = eng.run(reqs)
     transport.close()
@@ -213,7 +213,8 @@ def run_selftest(args) -> int:
                   "--cache-block", str(args.cache_block),
                   "--tp", str(args.tp), "--slots", str(args.slots),
                   "--max-len", str(args.max_len), "--seed", str(args.seed),
-                  "--decode-backend", args.decode_backend]
+                  "--decode-backend", args.decode_backend,
+                  "--store-pages", str(args.store_pages)]
     if args.eos_id is not None:
         model_args += ["--eos-id", str(args.eos_id)]
     proc, port = spawn_decode_host(model_args, tp=args.tp)
@@ -258,7 +259,9 @@ def main(argv=None) -> int:
     ap.add_argument("--once", action="store_true",
                     help="exit after the first driver session ends")
     ap.add_argument("--store-pages", type=int, default=4096,
-                    help="digest-store LRU cap (pages)")
+                    help="LRU cap (pages) for the content-addressed "
+                         "stores: the transport digest store AND the "
+                         "engine PageCache warm tier")
     # driver flags
     ap.add_argument("--decode-addr", default=None,
                     help="comma-separated host:port decode hosts")

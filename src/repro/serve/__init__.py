@@ -1,12 +1,14 @@
 """Serving: fixed-batch prefill+decode, continuous batching over the paged
 LEXI-compressed cache (``engine`` device code, ``scheduler`` loop), and
 disaggregated prefill→decode replicas over compressed page transfer
-(``disagg`` routing, ``transport`` wire format + digest stores, ``net``
-socket transport between OS processes) — see docs/ARCHITECTURE.md for the
+(``disagg`` routing, ``transport`` wire format + digest stores,
+``pagecache`` tiered content-addressed page retention, ``net`` socket
+transport between OS processes) — see docs/ARCHITECTURE.md for the
 end-to-end walkthrough."""
 from . import engine  # noqa: F401
 from .scheduler import (Request, RequestResult, RequestScheduler,  # noqa: F401
                         ServeEngine, ServeStats)
+from .pagecache import PageCache  # noqa: F401
 from .disagg import (DecodeReplica, DisaggEngine, DisaggStats,  # noqa: F401
                      PrefillReplica)
 from .transport import (DigestStore, LoopbackTransport,  # noqa: F401

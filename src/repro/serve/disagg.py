@@ -100,6 +100,12 @@ class DisaggStats:
     pages_resent: int              # inline re-sends after receiver eviction
     store_evicted: int             # receiver-store pages evicted (LRU cap)
     decode_prefix_hits: int        # page columns reused across imports
+    cache_hot_hits: int            # retained zero-ref columns re-acquired
+    cache_spilled_pages: int       # payloads spilled to decode warm stores
+    cache_spilled_bytes: int
+    cache_fetched_pages: int       # payloads restored from warm/remote
+    cache_fetched_bytes: int
+    cache_reprefill_cols: int      # warm columns lost on every tier
     link_model_ms: float           # LinkModel latency of the wire bytes
     link_model_ms_raw: float       # ... of the bf16-dense baseline
     wall_s: float
@@ -283,13 +289,15 @@ class DecodeReplica:
     into its own pool (fresh pages from ITS free list), and step through
     the engine's fused decode windows until termination.
 
-    When the engine allows prefix sharing (pure attention), imported
-    sequences register their full page columns in the replica's prefix
-    index, so a LATER import with the same prompt prefix maps the resident
-    pages instead of allocating duplicates — cross-replica prefix reuse
-    composes with the transport's wire-level dedup (the repeated pages
-    already crossed as 13 B references; this keeps them from occupying
-    pool pages twice)."""
+    When the engine allows prefix sharing, imported sequences register
+    their full page columns in the replica's tiered PageCache, so a LATER
+    import with the same prompt prefix maps the resident pages instead of
+    allocating duplicates — and columns released since stay retained
+    (hot) or restorable (warm / remote-fetch by digest), so the reuse
+    survives gaps in residency.  Cross-replica prefix reuse composes with
+    the transport's wire-level dedup (the repeated pages already crossed
+    as 13 B references; this keeps them from occupying pool pages
+    twice)."""
 
     def __init__(self, engine: ServeEngine):
         self.engine = engine
@@ -302,8 +310,15 @@ class DecodeReplica:
         return not self.ls.live_slots()
 
     def decode_stats(self) -> Dict[str, int]:
+        c = self.engine.cache
         return {"steps": self.ls.steps, "dispatches": self.ls.dispatches,
-                "shared_hits": self.ls.shared_hits}
+                "shared_hits": self.ls.shared_hits,
+                "cache_hot_hits": c.hot_hits,
+                "cache_spilled_pages": c.spilled_pages,
+                "cache_spilled_bytes": c.spilled_bytes,
+                "cache_fetched_pages": c.fetched_pages,
+                "cache_fetched_bytes": c.fetched_bytes,
+                "cache_reprefill_cols": c.reprefill_cols}
 
     def drop_live(self) -> int:
         """Evict every live slot and forget its request: a remote driver
@@ -375,14 +390,26 @@ class DecodeReplica:
                 # prompt's full page columns already resident in the index
                 keys = eng._prefix_keys(np.asarray(req.prompt),
                                         blob.length // eng.blk_tokens)
-                while m < len(keys) and keys[m] in eng._prefix_index:
+                while m < len(keys) and keys[m] in eng.cache.index:
                     m += 1
                 mkeys = keys[:m]
+            ids = np.zeros((eng.tp, eng._maxp), np.int32)
+            for c, key in enumerate(mkeys):
+                # acquire (pin) the matched columns BEFORE the pressure
+                # valve runs — a retained zero-ref column this import is
+                # about to map must not be evicted to make room for it
+                ids[:, c] = eng.cache.acquire(key)
+                eng._slot_keys[s].append(key)
+            eng._ensure_free_pages(max(blob.valid_cols(t) - m
+                                       for t in range(eng.tp)))
             used = np.asarray(eng.state.kv.page_used)     # (tp, L, P)
             free_pages = used.shape[-1] - used.sum(axis=-1)
             need = np.array([max(blob.valid_cols(t) - m, 0)
                              for t in range(eng.tp)])[:, None]
             if (free_pages < need).any():
+                for key in mkeys:       # undo the pins: nothing dispatched
+                    eng.cache.release(key)
+                eng._slot_keys[s] = []
                 raise RuntimeError(
                     "decode-replica page pool oversubscribed: import needs "
                     f"{need.max()} pages but a shard/layer has only "
@@ -410,16 +437,10 @@ class DecodeReplica:
             ssm = SSMState(h=jnp.asarray(h_), conv_x=jnp.asarray(cx),
                            conv_bc=jnp.asarray(cbc))
         if m:                       # map resident shared columns first
-            ids = np.zeros((eng.tp, eng._maxp), np.int32)
-            for c, key in enumerate(mkeys):
-                ids[:, c] = eng._prefix_index[key]
             eng.state = eng._map_shared_for()(
                 eng.state, jnp.asarray(s, jnp.int32), jnp.asarray(ids),
                 jnp.asarray(m, jnp.int32),
                 jnp.asarray(m * eng.blk_tokens, jnp.int32))
-            for key in mkeys:
-                eng._prefix_ref[key] += 1
-                eng._slot_keys[s].append(key)
             ls.shared_hits += m
         eng.state = eng._import_for(blob.n_cols - m)(
             eng.state, jnp.asarray(s, jnp.int32), kvw, ssm,
@@ -473,12 +494,13 @@ class DisaggEngine:
                  max_fuse_steps: int = 32,
                  transport: Optional[PageTransport] = None,
                  streaming: bool = False,
-                 decode_addrs: Optional[Sequence[str]] = None):
+                 decode_addrs: Optional[Sequence[str]] = None,
+                 store_pages: int = 4096):
         if n_prefill < 1 or (n_decode < 1 and decode_addrs is None):
             raise ValueError("need at least one replica of each kind")
         self.cfg, self.run_cfg = cfg, run
         self.transport = transport if transport is not None \
-            else LoopbackTransport()
+            else LoopbackTransport(max_store_pages=store_pages)
         mk = dict(tp=tp, n_slots=n_slots, max_len=max_len, seed=seed,
                   eos_id=eos_id, stop_seqs=stop_seqs,
                   max_fuse_steps=max_fuse_steps)
@@ -522,12 +544,33 @@ class DisaggEngine:
         if decode_addrs is None:
             for i in range(n_decode):
                 # decode replicas DO have overlapping residency: imported
-                # sequences register in the prefix index (auto-disabled
-                # per the usual pure-attention rules inside ServeEngine)
-                eng = ServeEngine(cfg, run, params=params, **mk)
+                # sequences register in the tiered PageCache (auto-disabled
+                # for MoE/MLA per the usual rules inside ServeEngine)
+                eng = ServeEngine(cfg, run, params=params,
+                                  store_pages=store_pages, **mk)
                 self.decodes.append(DecodeReplica(eng))
                 self._names.append(f"decode{i}")
+            for i, d in enumerate(self.decodes):
+                # remote tier: a decode replica whose warm store lost a
+                # payload pulls it back by digest — its own transport-side
+                # store first (pages that crossed the link land there),
+                # then its peers' (PageTransport.fetch = the FETCH message
+                # when the transport is socket-backed)
+                d.engine.cache.remote_fetch = self._make_fetch(
+                    self._names[i])
         self.params = params
+
+    def _make_fetch(self, own: str):
+        def fetch(digests):
+            out: Dict[bytes, bytes] = {}
+            rest = list(digests)
+            for dst in [own] + [n for n in self._names if n != own]:
+                if not rest:
+                    break
+                out.update(self.transport.fetch(dst, rest))
+                rest = [d for d in rest if d not in out]
+            return out
+        return fetch
 
     def run(self, requests: List[Request]
             ) -> Tuple[List[RequestResult], DisaggStats]:
@@ -611,6 +654,17 @@ class DisaggEngine:
             pages_resent=ts.pages_resent,
             store_evicted=ts.store_evicted,
             decode_prefix_hits=sum(d["shared_hits"] for d in dst),
+            cache_hot_hits=sum(d.get("cache_hot_hits", 0) for d in dst),
+            cache_spilled_pages=sum(
+                d.get("cache_spilled_pages", 0) for d in dst),
+            cache_spilled_bytes=sum(
+                d.get("cache_spilled_bytes", 0) for d in dst),
+            cache_fetched_pages=sum(
+                d.get("cache_fetched_pages", 0) for d in dst),
+            cache_fetched_bytes=sum(
+                d.get("cache_fetched_bytes", 0) for d in dst),
+            cache_reprefill_cols=sum(
+                d.get("cache_reprefill_cols", 0) for d in dst),
             link_model_ms=ts.model_ns * 1e-6,
             link_model_ms_raw=ts.model_ns_raw * 1e-6,
             wall_s=wall,

@@ -618,13 +618,13 @@ def map_shared_slot(state: PagedState, slot, page_ids: jax.Array,
     """Admit a prefix-cache hit: map ``n_cols`` already-filled page columns
     (per-shard ids ``page_ids`` (maxp,)) into ``slot``'s page-table rows of
     every layer, with zero prefill FLOPs and zero page copies.  The slot
-    starts at ``base_len`` = n_cols * block * tp tokens; the prompt suffix
-    replays through ``paged_replay_steps``.  Pure-attention-only: recurrent
-    SSM state cannot be reconstructed from shared pages, and MoE/MLA decode
-    is not bit-equal to prefill for the replayed suffix, so the scheduler
-    never takes this path for those architectures.
+    starts at ``base_len`` tokens; for pure attention the prompt suffix
+    replays through ``paged_replay_steps``.  Any recurrent state is left
+    UNTOUCHED — for hybrids the scheduler restores the matching boundary
+    SSM snapshot in a separate dispatch (pages alone cannot reconstruct a
+    recurrence), and MoE/MLA never take this path at all (their suffix
+    replay is not bit-equal to prefill).
     """
-    assert state.ssm is None, "prefix sharing covers attention-only caches"
     slot = jnp.asarray(slot, jnp.int32)
     kv = jax.vmap(lambda pkv: cache_mod.map_prefix_pages(
         pkv, slot, page_ids, n_cols))(state.kv)

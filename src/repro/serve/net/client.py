@@ -138,6 +138,22 @@ class SocketTransport(PageTransport):
         st.pages_ref += len(refs)
         st.model_ns += self.link.transfer_ns(len(data), self.hops)
 
+    def fetch(self, dst: str,
+              digests: Sequence[bytes]) -> Dict[bytes, bytes]:
+        """Pull pages back OUT of the host's digest store by content
+        digest — the remote tier of the tiered PageCache.  Returns the
+        subset held (a missing digest is not an error); transfer is
+        priced through the LinkModel like every data-plane move."""
+        pages = fr.unpack_pages(self._rpc(
+            dst, fr.MSG_FETCH, fr.pack_inventory(set(digests)),
+            fr.MSG_FETCH_OK))
+        nbytes = sum(len(p) for p in pages.values())
+        st = self.stats
+        st.pages_fetched += len(pages)
+        st.fetch_bytes += nbytes
+        st.model_ns += self.link.transfer_ns(nbytes, self.hops)
+        return pages
+
     def abort_stream(self, dst, seq_id) -> None:
         reply = fr.unpack_json(self._rpc(
             dst, fr.MSG_ABORT, struct.pack("<I", seq_id), fr.MSG_ABORT_OK))
@@ -224,8 +240,11 @@ class RemoteDecodeReplica:
 
     def decode_stats(self) -> Dict[str, int]:
         st = self.transport.status(self.dst)
-        return {k: int(st[k]) for k in ("steps", "dispatches",
-                                        "shared_hits")}
+        return {k: int(st.get(k, 0))
+                for k in ("steps", "dispatches", "shared_hits",
+                          "cache_hot_hits", "cache_spilled_pages",
+                          "cache_spilled_bytes", "cache_fetched_pages",
+                          "cache_fetched_bytes", "cache_reprefill_cols")}
 
     def deliver(self, h, transport, dst) -> None:
         self._admit_t[int(h.req.uid)] = h.admit_t

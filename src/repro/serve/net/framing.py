@@ -38,8 +38,21 @@ host; every request frame gets exactly one response frame):
                                          the pool untouched).
     STEP          → RESULTS              run one fused decode window,
                                          return newly finished requests.
-    STATUS_REQ    → STATUS               free slots / live slots / decode
-                                         counters (routing + stats).
+    STATUS_REQ    → STATUS               free slots / live slots / store
+                                         occupancy + capacity / decode and
+                                         PageCache counters (routing +
+                                         stats).
+    FETCH         → FETCH_OK             pull pages back OUT of the host's
+                                         digest store by content digest —
+                                         the remote tier of the tiered
+                                         PageCache (a replica restores a
+                                         spilled prefix column from a peer
+                                         instead of re-prefilling).
+                                         Request: a digest list
+                                         (``pack_inventory``); reply: the
+                                         subset held, digest + payload
+                                         (``pack_pages``) — a missing
+                                         digest is not an error.
     BYE           → BYE_OK               orderly session end.
 """
 
@@ -65,7 +78,7 @@ _HELLO = struct.Struct("<4sHB16s")          # magic, proto, wire, fingerprint
 (MSG_HELLO, MSG_HELLO_OK, MSG_ERROR, MSG_INVENTORY_REQ, MSG_INVENTORY,
  MSG_PAGE_CHUNK, MSG_CHUNK_OK, MSG_ABORT, MSG_ABORT_OK, MSG_SEQ,
  MSG_SEQ_OK, MSG_STEP, MSG_RESULTS, MSG_STATUS_REQ, MSG_STATUS,
- MSG_BYE, MSG_BYE_OK) = range(1, 18)
+ MSG_BYE, MSG_BYE_OK, MSG_FETCH, MSG_FETCH_OK) = range(1, 20)
 
 
 class FrameError(ConnectionError):
@@ -163,6 +176,38 @@ def unpack_inventory(payload: bytes) -> Set[bytes]:
                          f"{len(payload) - 4} bytes")
     return {payload[4 + i * _DIGEST_BYTES:4 + (i + 1) * _DIGEST_BYTES]
             for i in range(n)}
+
+
+def pack_pages(pages: Dict[bytes, bytes]) -> bytes:
+    """FETCH_OK payload: the subset of requested pages the store holds —
+    u32 count, then per page (sorted by digest) the digest, a u32 payload
+    length and the payload bytes."""
+    out = [struct.pack("<I", len(pages))]
+    for digest in sorted(pages):
+        body = pages[digest]
+        out.append(digest + struct.pack("<I", len(body)) + body)
+    return b"".join(out)
+
+
+def unpack_pages(payload: bytes) -> Dict[bytes, bytes]:
+    (n,) = struct.unpack_from("<I", payload, 0)
+    off = 4
+    pages: Dict[bytes, bytes] = {}
+    for _ in range(n):
+        if off + _DIGEST_BYTES + 4 > len(payload):
+            raise FrameError("page list overruns the frame")
+        digest = payload[off:off + _DIGEST_BYTES]
+        (ln,) = struct.unpack_from("<I", payload, off + _DIGEST_BYTES)
+        off += _DIGEST_BYTES + 4
+        if off + ln > len(payload):
+            raise FrameError(f"page payload of {ln} bytes overruns "
+                             "the frame")
+        pages[digest] = payload[off:off + ln]
+        off += ln
+    if off != len(payload):
+        raise FrameError(f"{len(payload) - off} trailing bytes after "
+                         f"{n} pages")
+    return pages
 
 
 def pack_json(obj: Any) -> bytes:

@@ -40,6 +40,14 @@ class PageHost:
         self.replica = replica
         self.fingerprint = fingerprint
         self.store = DigestStore(max_store_pages)
+        # remote tier of the replica's tiered PageCache: a warm prefix
+        # column whose payload fell out of the engine-side store restores
+        # from the transport store (streamed/deduped pages land here and
+        # often outlive the engine's own spill window)
+        self.replica.engine.cache.remote_fetch = self._fetch_pages
+
+    def _fetch_pages(self, digests):
+        return {d: self.store[d] for d in digests if d in self.store}
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -143,7 +151,11 @@ class PageHost:
                 free_slots=self.replica.free_slots(),
                 live=len(self.replica.ls.live_slots()),
                 store_pages=len(self.store),
+                store_capacity=self.store.max_pages,
                 **self.replica.decode_stats()))
+        if msg == fr.MSG_FETCH:
+            digests = fr.unpack_inventory(payload)
+            return fr.MSG_FETCH_OK, fr.pack_pages(self._fetch_pages(digests))
         raise ValueError(f"unknown message type {msg}")
 
     def _ingest_chunk(self, payload: bytes, open_seqs: Set[int]) -> bytes:

@@ -29,8 +29,12 @@ one ``PagedState``; ``RequestScheduler`` is the admission queue.  The loop:
                   complete a stop sequence (host-side rolling suffix match
                   over the emitted tokens) release their pages
                   (``release_slots``) at the window boundary; with prefix
-                  sharing a page is freed only when its host-side refcount
-                  hits zero
+                  sharing the release routes through the tiered
+                  ``PageCache``: a column whose refcount hits zero is
+                  RETAINED on the device (hot tier) after its immutable
+                  payload spilled to host RAM (warm tier), so a later
+                  identical prefix re-maps or re-imports it with zero
+                  prefill FLOPs
 
 The same machinery also runs SPLIT across replicas: ``repro.serve.disagg``
 drives ``_admit_phase`` on prefill replicas and ``_decode_window`` on
@@ -49,15 +53,26 @@ must stay under tp tokens to preserve the legacy-exact split).
 
 **Prefix sharing bookkeeping (host-side).**  Full pages are immutable
 once LEXI-FW-compressed, so sharing is pure page-table indirection.  The
-host owns a prefix index ``chained digest of the token prefix -> per-
-shard page-id vector`` (32-byte SHA-256 chain links, O(len) to build) plus a refcount per indexed prefix column; page ids are read
-back from the device page table at admit/release boundaries only (no
-per-token sync).  Ids are tracked per shard because unaligned releases
-can permanently permute the free-list order between shards.  Sharing is
-pure-attention-only — recurrent SSM state cannot be reconstructed from
-KV pages, and MoE/MLA decode is not bit-equal to prefill for the suffix
-replay — so those architectures auto-disable it (streams are unchanged
-either way; hits are simply zero).
+host owns a tiered content-addressed ``repro.serve.pagecache.PageCache``
+keyed by the chained prefix digests of ``repro.serve.digest.chain_keys``
+(32-byte SHA-256 chain links, O(len) to build): the **hot** tier maps a
+key to its per-shard page-id vector (ids are tracked per shard because
+unaligned releases can permanently permute the free-list order between
+shards), retains zero-ref columns under an LRU, and evicts them only
+under pool pressure (``_ensure_free_pages``); the **warm** tier holds
+the columns' compressed payloads in host RAM (spilled at last release,
+restored by a device import — no prefill); the **remote** tier pulls
+spilled payloads back from a peer replica's digest store by content
+digest (the ``FETCH`` message of ``repro.serve.net``).  Page ids are
+read back from the device page table at admit/release boundaries only
+(no per-token sync).  MoE/MLA decode is not bit-equal to prefill for
+the suffix replay, so those architectures auto-disable sharing (streams
+are unchanged either way; hits are simply zero).  Hybrids (SSM +
+attention) cannot replay a suffix bit-exactly either, but they DO share
+whole page-aligned prompts: admission captures the recurrent state at
+the prompt boundary (``_capture_snapshots``) and a later identical
+prompt maps/imports every page column and restores that snapshot —
+replay-free, hence bit-exact (``_snapshot_match``).
 
 Device state crosses jit boundaries as global arrays with one leading
 "model"-sharded axis per leaf (each shard's page pool / page table / ring
@@ -75,7 +90,6 @@ Constraints (documented, validated in ``submit``):
 from __future__ import annotations
 
 import dataclasses
-import hashlib
 import time
 from collections import deque
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -87,10 +101,15 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import MeshConfig, ModelConfig, RunConfig
 from repro.core import collectives as cl
+from repro.core import packing
 from repro.kernels import ops as kernel_ops
 from repro.models import cache as cache_mod
 from repro.models import lm, params as PM
+from repro.models.ssm import SSMState
 from . import engine
+from . import transport
+from .digest import chain_keys
+from .pagecache import PageCache
 
 
 @dataclasses.dataclass
@@ -135,6 +154,15 @@ class ServeStats:
     latency_p50_s: float
     latency_p95_s: float
     decode_backend: str              # resolved pallas | interpret | jax
+    # tiered PageCache lifecycle counters (engine lifetime, like
+    # n_admit_compiles — see repro.serve.pagecache)
+    cache_hot_hits: int = 0          # retained zero-ref columns re-acquired
+    cache_spilled_pages: int = 0     # page payloads written to the warm store
+    cache_spilled_bytes: int = 0
+    cache_fetched_pages: int = 0     # payloads restored from warm/remote
+    cache_fetched_bytes: int = 0
+    cache_reprefill_cols: int = 0    # warm columns lost on every tier
+    cache_evicted_cols: int = 0      # hot columns evicted under pool pressure
 
     @property
     def cache_ratio(self) -> float:
@@ -230,7 +258,8 @@ class ServeEngine:
                  n_slots: int = 4, max_len: int = 256, params=None,
                  seed: int = 0, eos_id: Optional[int] = None,
                  stop_seqs: Optional[Sequence[Sequence[int]]] = None,
-                 max_fuse_steps: int = 32, prefix_sharing: bool = True):
+                 max_fuse_steps: int = 32, prefix_sharing: bool = True,
+                 store_pages: int = 4096, remote_fetch=None):
         if cfg.encdec or cfg.frontend != "none":
             raise ValueError("continuous batching covers decoder-only, "
                              "text-frontend architectures")
@@ -241,14 +270,15 @@ class ServeEngine:
         self.eos_id = eos_id
         self.stop_seqs = _norm_stops(stop_seqs)
         self.max_fuse_steps = max_fuse_steps
-        # sharing needs KV pages (attention), no recurrent state (the SSM
-        # state at a prefix boundary is not recoverable from pages), and a
-        # decode path that is bit-equal to prefill for in-prompt positions
-        # (the matched prefix skips prefill; the suffix replays through
-        # decode steps) — which rules out MoE / MLA too, see _bucket_of
+        # sharing needs KV pages (attention) and a decode path that is
+        # bit-equal to prefill at in-prompt positions (the matched prefix
+        # skips prefill; the suffix replays through decode steps) — which
+        # rules out MoE / MLA, see _bucket_of.  Hybrids (SSM + attention)
+        # cannot suffix-replay either, but share whole page-aligned
+        # prompts through boundary SSM snapshots (_snapshot_match), so
+        # they stay enabled.
         self.prefix_sharing = bool(prefix_sharing and cfg.n_heads > 0
-                                   and cfg.ssm is None and cfg.moe is None
-                                   and cfg.mla is None)
+                                   and cfg.moe is None and cfg.mla is None)
         mesh_cfg = MeshConfig(data=1, model=tp, pod=1)
         self.mesh = jax.make_mesh((1, tp), ("data", "model"))
         self.table = lm.lm_table(cfg, mesh_cfg, run)
@@ -272,9 +302,11 @@ class ServeEngine:
                       if shard.kv is not None else 0)
 
         # host-side page-lifecycle bookkeeping (see module docstring):
-        # prefix key = bytes of the token prefix covering cols 0..c
-        self._prefix_index: Dict[bytes, np.ndarray] = {}  # key -> (tp,) ids
-        self._prefix_ref: Dict[bytes, int] = {}           # key -> #slots
+        # the tiered content-addressed PageCache owns the prefix index,
+        # refcounts, retention LRU, warm spill store and SSM snapshots;
+        # _slot_keys mirrors which prefix keys each slot holds refs on
+        self.cache = PageCache(max_store_pages=store_pages,
+                               remote_fetch=remote_fetch)
         self._slot_keys: List[List[bytes]] = [[] for _ in range(n_slots)]
         self._slot_busy = np.zeros((n_slots,), bool)
 
@@ -296,6 +328,18 @@ class ServeEngine:
             self._sspec))
         self._release_shared = None
         self._map_shared = None
+        self._restore_ssm = None
+
+    # legacy aliases: the prefix index/refcounts now live in the PageCache
+    # (kept as views — the disagg import path and tests poke them directly)
+
+    @property
+    def _prefix_index(self) -> Dict[bytes, np.ndarray]:
+        return self.cache.index
+
+    @property
+    def _prefix_ref(self) -> Dict[bytes, int]:
+        return self.cache.ref
 
     # -- shard_map bodies --------------------------------------------------
 
@@ -338,6 +382,24 @@ class ServeEngine:
                 (self._sspec, P(), P("model", None), P(), P()),
                 self._sspec))
         return self._map_shared
+
+    def _restore_ssm_for(self):
+        """(state, slot, ssm slot leaves (tp, L, ...)) -> state: scatter a
+        boundary SSM snapshot into one slot.  The hybrid half of a
+        snapshot hit whose page columns were ALL still hot — no import
+        dispatch runs, so the recurrent state needs its own scatter."""
+        if self._restore_ssm is None:
+            def rs(st_g, slot, ssm_g):
+                st = self._squeeze(st_g)
+                ssm = jax.tree_util.tree_map(
+                    lambda a, v: a.at[:, slot].set(v.astype(a.dtype)),
+                    st.ssm, self._squeeze(ssm_g))
+                return self._unsqueeze(st._replace(ssm=ssm))
+
+            self._restore_ssm = jax.jit(cl.shmap(
+                rs, self.mesh, (self._sspec, P(), P("model")),
+                self._sspec))
+        return self._restore_ssm
 
     def _export_for(self, n_cols: int):
         """(state, slot, col0) -> (kv wire (tp, L, ...) leaves, ssm slot
@@ -505,47 +567,88 @@ class ServeEngine:
     # -- prefix index ------------------------------------------------------
 
     def _prefix_keys(self, prompt: np.ndarray, n_cols: int) -> List[bytes]:
-        """Chained content keys, one per full page column: key c digests
-        (key c-1 ‖ column c's tokens), so building all keys of a prompt is
-        O(len) total instead of O(len^2) for full-prefix bytes, and the
-        index holds 32-byte digests regardless of prompt length."""
-        bt = self.blk_tokens
-        keys: List[bytes] = []
-        h = b""
-        for c in range(n_cols):
-            blk = np.ascontiguousarray(prompt[c * bt:(c + 1) * bt],
-                                       dtype=np.int32).tobytes()
-            h = hashlib.sha256(h + blk).digest()
-            keys.append(h)
-        return keys
+        """Chained content keys, one per full page column — shared with
+        the transport's dedup layer, see ``repro.serve.digest``."""
+        return chain_keys(prompt, n_cols, self.blk_tokens)
 
     def _prefix_match_cols(self, prompt: np.ndarray
-                           ) -> Tuple[int, List[bytes]]:
-        """(matched column count, their index keys) for this prompt.
+                           ) -> Tuple[int, List[bytes], List[List[bytes]]]:
+        """(matched column count, their keys, warm payload columns).
 
-        The longest run of leading full page columns present in the index,
-        capped so at least one suffix token remains to replay (the first
-        generated token needs logits from the last prompt position) — and
-        gated on replay cost: a match is only worth taking when the
-        unmatched suffix replay is no longer than the cold path's own
-        bucket-tail replay (plus at most one column), otherwise a shallow
-        hit on a long prompt (e.g. a shared short preamble) would trade one
-        batched prefill dispatch for a long per-token replay.  The matched
-        keys are returned so admission reuses them instead of re-hashing."""
-        if not self.prefix_sharing:
-            return 0, []
+        The longest run of leading full page columns restorable from the
+        cache — hot columns (mapped for free) extended by warm columns
+        (payloads fetched from the host-RAM store or a peer, imported
+        without prefill FLOPs).  Capped so at least one suffix token
+        remains to replay (the first generated token needs logits from
+        the last prompt position) — and gated on replay cost: a match is
+        only worth taking when the unmatched suffix replay is no longer
+        than the cold path's own bucket-tail replay (plus at most one
+        column), otherwise a shallow hit on a long prompt (e.g. a shared
+        short preamble) would trade one batched prefill dispatch for a
+        long per-token replay.  The gate is monotone in the match depth,
+        so it is checked against the deepest candidate BEFORE any warm
+        bytes are fetched.  Hybrids never take this path (suffix replay
+        is not bit-equal for the recurrence) — see ``_snapshot_match``."""
+        if not self.prefix_sharing or self.cfg.ssm is not None:
+            return 0, [], []
         bt = self.blk_tokens
         keys = self._prefix_keys(prompt, (len(prompt) - 1) // bt)
-        m = 0
-        while m < len(keys) and keys[m] in self._prefix_index:
+        h = 0
+        while h < len(keys) and keys[h] in self.cache.index:
+            h += 1
+        m_cand = h
+        while m_cand < len(keys) and self.cache.has_warm(keys[m_cand]):
+            m_cand += 1
+
+        def ok(mm: int) -> bool:
+            if mm < 1:
+                return False
+            suffix = len(prompt) - mm * bt
+            cold_tail = len(prompt) - self._bucket_of(len(prompt))
+            return suffix <= max(cold_tail, bt)
+
+        if not ok(m_cand):
+            return 0, [], []
+        warm: List[List[bytes]] = []
+        m = h
+        for j in range(h, m_cand):
+            payloads = self.cache.fetch_warm(keys[j])
+            if payloads is None:        # gone on every tier: truncate
+                break
+            warm.append(payloads)
             m += 1
-        if m == 0:
-            return 0, []
-        suffix = len(prompt) - m * bt
-        cold_tail = len(prompt) - self._bucket_of(len(prompt))
-        if suffix > max(cold_tail, bt):
-            return 0, []
-        return m, keys[:m]
+        if not ok(m):
+            return 0, [], []
+        return m, keys[:m], warm
+
+    def _snapshot_match(self, prompt: np.ndarray):
+        """Hybrid replay-free hit: ``(keys, hot cols, warm payload
+        columns, snapshot)`` when EVERY full column of this page-aligned
+        prompt is restorable (hot or warm) AND its boundary SSM snapshot
+        exists; ``None`` otherwise.  Partial matches stay cold — replaying
+        a suffix through the recurrence is not bit-equal to prefill, so
+        the only exact hybrid hit is the whole prompt plus the captured
+        state at its boundary."""
+        bt = self.blk_tokens
+        if len(prompt) < bt or len(prompt) % bt != 0:
+            return None
+        n = len(prompt) // bt
+        keys = self._prefix_keys(prompt, n)
+        snap = self.cache.get_snapshot(keys[-1])
+        if snap is None:
+            return None
+        h = 0
+        while h < n and keys[h] in self.cache.index:
+            h += 1
+        if any(not self.cache.has_warm(keys[j]) for j in range(h, n)):
+            return None
+        warm: List[List[bytes]] = []
+        for j in range(h, n):
+            payloads = self.cache.fetch_warm(keys[j])
+            if payloads is None:
+                return None
+            warm.append(payloads)
+        return keys, h, warm, snap
 
     def _register_prefixes(self, slots_prompts) -> None:
         """Index the freshly admitted slots' full page columns.
@@ -561,22 +664,81 @@ class ServeEngine:
         for slot, prompt, length in slots_prompts:
             keys = self._prefix_keys(prompt, length // self.blk_tokens)
             for c, key in enumerate(keys):
-                if key in self._prefix_index:
+                if key in self.cache.index:
                     continue
                 ids = rows[:, slot, c].copy()
                 assert (ids >= 0).all(), (slot, c, ids)
-                self._prefix_index[key] = ids
-                self._prefix_ref[key] = 1
+                self.cache.insert(key, ids)
                 self._slot_keys[slot].append(key)
 
-    # -- slot release (refcounted) -----------------------------------------
+    # -- slot release (tiered retention) -----------------------------------
+
+    def _page_geometry(self) -> Tuple[int, int, int, int, int]:
+        """(blk, w, k, esc_cap, npad) of one page in this pool — the
+        payload geometry shared with the transport wire format."""
+        codec = self.run_cfg.codec
+        blk = codec.cache_block
+        w = cache_mod.kv_width(self.cfg) if self.cfg.n_heads > 0 else 0
+        n = blk * w
+        if n == 0:
+            return blk, 0, codec.k, 0, 0
+        return blk, w, codec.k, codec.esc_capacity(n), packing.pad_to_lanes(n)
+
+    def _spill_slots(self, slots: List[int], rows: np.ndarray) -> None:
+        """Export and spill every page column whose LAST reference is
+        being released — the hot -> warm handoff, run BEFORE the refcount
+        drop while the releasing slot's page-table row still addresses
+        the pages (an evicted column is in no row, so spilling later
+        would be impossible).  Columns already warm skip the export."""
+        holds: Dict[bytes, int] = {}
+        for s in slots:
+            for key in self._slot_keys[s]:
+                holds[key] = holds.get(key, 0) + 1
+        codec_on = bool(self.run_cfg.codec.cache)
+        fields = (("signman", "planes", "dict_syms", "esc_pos", "esc_raw")
+                  if codec_on else ("raw_pages",))
+        done = set()
+        for s in slots:
+            colof = {int(rows[0, s, c]): c for c in range(self._maxp)
+                     if rows[0, s, c] >= 0}
+            pend = []
+            for key in self._slot_keys[s]:
+                if (key in done or self.cache.has_warm(key)
+                        or self.cache.ref.get(key, 0) != holds[key]):
+                    continue          # other refs remain: stays hot there
+                ids = self.cache.index.get(key)
+                c = None if ids is None else colof.get(int(ids[0]))
+                if c is None:
+                    continue          # duplicate column owned elsewhere
+                pend.append((key, c))
+            if not pend:
+                continue
+            span = max(c for _, c in pend) + 1
+            n = 1
+            while n < span:           # power-of-two export windows keep
+                n *= 2                # the jit cache at O(log maxp)
+            n = min(n, self._maxp)
+            kvw, _, _ = self._export_for(n)(
+                self.state, jnp.asarray(s, jnp.int32),
+                jnp.asarray(0, jnp.int32))
+            kv = {f: np.asarray(getattr(kvw, f)) for f in fields}
+            for key, c in pend:
+                payloads = [transport.page_payload(kv, codec_on, t, l, c)
+                            for t in range(self.tp)
+                            for l in range(self.cfg.n_layers)]
+                self.cache.spill(key, payloads)
+                done.add(key)
 
     def _free_slots(self, slots: List[int]) -> None:
-        """Evict ``slots``: decrement their prefix refcounts and free
-        exactly the pages that hit zero (all their pages when sharing is
-        off).  Double release is rejected loudly — freeing a slot that is
-        not occupied would hand its (possibly shared) pages back to the
-        allocator while another sequence still reads them."""
+        """Evict ``slots`` through the tiered PageCache: spill last-copy
+        columns to the warm store, drop the slots' references (columns at
+        zero are RETAINED on the device under the cache's LRU — the
+        tentpole change from free-at-zero), and free only the pages no
+        index entry claims (decode-grown columns, duplicates; all pages
+        when sharing is off).  Double release is rejected loudly —
+        freeing a slot that is not occupied would hand its (possibly
+        shared) pages back to the allocator while another sequence still
+        reads them."""
         slots = [int(s) for s in slots]
         for s in slots:
             if not self._slot_busy[s]:
@@ -588,32 +750,78 @@ class ServeEngine:
             self.state = self._release(self.state, jnp.asarray(mask))
         else:
             rows = np.asarray(self.state.kv.page_table)[:, 0]  # (tp,S,maxp)
-            for s in slots:                       # 1) drop references
+            self._spill_slots(slots, rows)        # 1) hot -> warm handoff
+            for s in slots:                       # 2) drop references
                 for key in self._slot_keys[s]:
-                    r = self._prefix_ref[key] - 1
-                    if r < 0:
-                        raise RuntimeError(f"prefix refcount underflow "
-                                           f"for slot {s}")
-                    self._prefix_ref[key] = r
+                    self.cache.release(key)       # zero-ref -> retained
             free = np.zeros((self.tp, self._n_pages), bool)
-            for s in slots:                       # 2) free non-kept pages
+            for s in slots:                       # 3) free unindexed pages
                 for t in range(self.tp):
-                    keep = {int(self._prefix_index[key][t])
+                    keep = {int(self.cache.index[key][t])
                             for key in self._slot_keys[s]
-                            if self._prefix_ref[key] > 0}
+                            if key in self.cache.index}
                     for p in rows[t, s]:
                         if p >= 0 and int(p) not in keep:
                             free[t, int(p)] = True
-            for s in slots:                       # 3) drop dead index keys
-                for key in self._slot_keys[s]:
-                    if key in self._prefix_ref and \
-                            self._prefix_ref[key] == 0:
-                        del self._prefix_ref[key]
-                        del self._prefix_index[key]
                 self._slot_keys[s] = []
             self.state = self._release_shared_for()(
                 self.state, jnp.asarray(mask), jnp.asarray(free))
         self._slot_busy[mask] = False
+
+    def _lfp(self, length: int, t: int) -> int:
+        """Full page columns shard ``t`` holds at sequence ``length`` —
+        host arithmetic mirroring the device flush rule."""
+        if length <= 0:
+            return 0
+        blk = self.run_cfg.codec.cache_block
+        return max((length - 1 - t) // self.tp + 1, 0) // blk
+
+    def _page_growth(self, l0: int, l1: int) -> int:
+        """Worst-per-shard new full pages when a slot grows l0 -> l1."""
+        return max(self._lfp(l1, t) - self._lfp(l0, t)
+                   for t in range(self.tp))
+
+    def _ensure_free_pages(self, need: int) -> None:
+        """Make room for ``need`` fresh pages per shard/layer pool by
+        evicting retained zero-ref columns (LRU order) from the hot tier.
+        Retention must never cause an allocation failure the free-at-zero
+        engine could not have had — this is the pool-pressure valve,
+        called before every page-allocating dispatch.  Spilling happened
+        at release time, so eviction is pure ``page_used`` clearing."""
+        if need <= 0 or not self.cache.lru or self.state.kv is None:
+            return
+        used = np.asarray(self.state.kv.page_used)      # (tp, L, P)
+        free = self._n_pages - int(used.sum(axis=-1).max())
+        if free >= need:
+            return
+        fmask = np.zeros((self.tp, self._n_pages), bool)
+        n = 0
+        while free + n < need and self.cache.lru:
+            _, ids = self.cache.evict_lru()
+            for t in range(self.tp):
+                fmask[t, int(ids[t])] = True
+            n += 1
+        self.state = self._release_shared_for()(
+            self.state, jnp.asarray(np.zeros((self.n_slots,), bool)),
+            jnp.asarray(fmask))
+
+    def drop_cache(self) -> int:
+        """Evict every RETAINED (zero-ref) column and clear the warm +
+        snapshot tiers — the explicit teardown free-at-zero used to do
+        implicitly at the last release.  Live slots are untouched.
+        Returns the number of hot columns dropped."""
+        if not self.prefix_sharing or self.state.kv is None:
+            return 0
+        ids = self.cache.drop_retained()
+        if ids:
+            fmask = np.zeros((self.tp, self._n_pages), bool)
+            for v in ids:
+                for t in range(self.tp):
+                    fmask[t, int(v[t])] = True
+            self.state = self._release_shared_for()(
+                self.state, jnp.asarray(np.zeros((self.n_slots,), bool)),
+                jnp.asarray(fmask))
+        return len(ids)
 
     # -- metrics -----------------------------------------------------------
 
@@ -718,24 +926,112 @@ class ServeEngine:
     def _free_slot_ids(self, ls: _LoopState) -> List[int]:
         return [s for s in range(self.n_slots) if ls.slot_req[s] is None]
 
+    def _warm_wire(self, warm: List[List[bytes]]):
+        """Assemble fetched warm payload columns into one import-ready
+        ``PageWire`` (global view, leading shard axis; zero ring — warm
+        restores are page-aligned by construction, so the partial-block
+        ring is never read before it is overwritten)."""
+        blk, w, k, esc_cap, npad = self._page_geometry()
+        codec_on = bool(self.run_cfg.codec.cache)
+        tp, L = self.tp, self.cfg.n_layers
+        kv = transport.empty_page_fields(codec_on, tp, L, len(warm),
+                                         blk, w, k, esc_cap, npad)
+        for c, payloads in enumerate(warm):
+            i = 0
+            for t in range(tp):        # shard-major, the spill order
+                for l in range(L):
+                    transport.scatter_page_payload(
+                        kv, codec_on, t, l, c, payloads[i], blk=blk,
+                        w=w, k=k, esc_cap=esc_cap, npad=npad)
+                    i += 1
+        ring = jnp.zeros((tp, L, blk, w), jnp.bfloat16)
+        if codec_on:
+            return cache_mod.PageWire(
+                signman=jnp.asarray(kv["signman"]),
+                planes=jnp.asarray(kv["planes"]),
+                dict_syms=jnp.asarray(kv["dict_syms"]),
+                esc_pos=jnp.asarray(kv["esc_pos"]),
+                esc_raw=jnp.asarray(kv["esc_raw"]),
+                raw_pages=None, ring=ring)
+        return cache_mod.PageWire(
+            signman=None, planes=None, dict_syms=None, esc_pos=None,
+            esc_raw=None, raw_pages=jnp.asarray(kv["raw_pages"]),
+            ring=ring)
+
     def _admit_shared(self, ls: _LoopState, s: int, req: Request, m: int,
-                      keys: List[bytes]) -> None:
-        """Prefix-cache hit: map m full columns, replay the suffix."""
-        ids = np.zeros((self.tp, self._maxp), np.int32)
-        for c, key in enumerate(keys):
-            ids[:, c] = self._prefix_index[key]
-            self._prefix_ref[key] += 1
-            self._slot_keys[s].append(key)
-        base_len = m * self.blk_tokens
+                      keys: List[bytes],
+                      warm: List[List[bytes]]) -> None:
+        """Prefix-cache hit: map the hot columns, import the warm ones
+        (fetched payloads, no prefill FLOPs), replay the suffix.  Hot
+        keys are acquired BEFORE the pool-pressure valve runs so a
+        retained column this admission is about to map cannot be evicted
+        to make room for its own warm import."""
+        h = m - len(warm)
         ls.admit_t.setdefault(req.uid, time.perf_counter())
-        self.state = self._map_shared_for()(
-            self.state, jnp.asarray(s, jnp.int32), jnp.asarray(ids),
-            jnp.asarray(m, jnp.int32), jnp.asarray(base_len, jnp.int32))
+        ids = np.zeros((self.tp, self._maxp), np.int32)
+        for c in range(h):
+            ids[:, c] = self.cache.acquire(keys[c])
+            self._slot_keys[s].append(keys[c])
+        if warm:
+            self._ensure_free_pages(len(warm))
+        if h:
+            base_cols = h if warm else m    # import (below) sets the
+            self.state = self._map_shared_for()(  # final length otherwise
+                self.state, jnp.asarray(s, jnp.int32), jnp.asarray(ids),
+                jnp.asarray(h, jnp.int32),
+                jnp.asarray(base_cols * self.blk_tokens, jnp.int32))
+        if warm:
+            self.state = self._import_for(len(warm))(
+                self.state, jnp.asarray(s, jnp.int32),
+                self._warm_wire(warm), None,
+                jnp.asarray(m * self.blk_tokens, jnp.int32),
+                jnp.asarray(h, jnp.int32))
         ls.shared_hits += m
         ls.slot_req[s] = req
         self._slot_busy[s] = True
-        ls.slot_len[s] = base_len
+        ls.slot_len[s] = m * self.blk_tokens
         ls.emitted[req.uid] = []
+
+    def _admit_snapshot(self, ls: _LoopState, s: int, req: Request,
+                        keys: List[bytes], h: int,
+                        warm: List[List[bytes]], snap) -> None:
+        """Hybrid snapshot hit: map/import ALL page columns and restore
+        the boundary SSM state — zero prefill FLOPs, zero replay.  The
+        first greedy token comes from the snapshot, computed by the
+        original admission at the same boundary, so the stream is
+        bit-exact by construction."""
+        n, nr = len(keys), len(warm)
+        ls.admit_t.setdefault(req.uid, time.perf_counter())
+        ids = np.zeros((self.tp, self._maxp), np.int32)
+        for c in range(h):
+            ids[:, c] = self.cache.acquire(keys[c])
+            self._slot_keys[s].append(keys[c])
+        if nr:
+            self._ensure_free_pages(nr)
+        if h:
+            base_cols = h if nr else n
+            self.state = self._map_shared_for()(
+                self.state, jnp.asarray(s, jnp.int32), jnp.asarray(ids),
+                jnp.asarray(h, jnp.int32),
+                jnp.asarray(base_cols * self.blk_tokens, jnp.int32))
+        ssm_dev = SSMState(*(jnp.asarray(a) for a in snap["ssm"]))
+        if nr:
+            self.state = self._import_for(nr)(
+                self.state, jnp.asarray(s, jnp.int32),
+                self._warm_wire(warm), ssm_dev,
+                jnp.asarray(n * self.blk_tokens, jnp.int32),
+                jnp.asarray(h, jnp.int32))
+        else:
+            self.state = self._restore_ssm_for()(
+                self.state, jnp.asarray(s, jnp.int32), ssm_dev)
+        t = int(snap["g0"])
+        ls.shared_hits += n
+        ls.slot_req[s] = req
+        self._slot_busy[s] = True
+        ls.slot_len[s] = n * self.blk_tokens
+        ls.emitted[req.uid] = [t]
+        ls.cur[s] = t
+        self._check_done(ls, s, req)
 
     def _admit_cold_batch(self, ls: _LoopState, batch: List[Request],
                           slots: List[int], trunk: int, replays) -> None:
@@ -745,6 +1041,8 @@ class ServeEngine:
         now = time.perf_counter()
         for r in batch:
             ls.admit_t.setdefault(r.uid, now)
+        blk = self.run_cfg.codec.cache_block
+        self._ensure_free_pages(len(batch) * ((trunk // self.tp) // blk))
         toks, self.state = fn(self.params, self.state,
                               jnp.asarray(prompts, jnp.int32),
                               jnp.asarray(slots, jnp.int32))
@@ -782,6 +1080,12 @@ class ServeEngine:
                 t_s = rem[s][off[s]:off[s] + k]
                 toks[:len(t_s), s, 0] = t_s
                 feed[:len(t_s), s] = True
+            if self.cache.lru:              # pool-pressure valve
+                self._ensure_free_pages(sum(
+                    self._page_growth(
+                        ls.slot_len[s],
+                        ls.slot_len[s] + min(k, len(rem[s]) - off[s]))
+                    for s in rem))
             seq, self.state = self._replay_for(k)(
                 self.params, self.state, jnp.asarray(toks),
                 jnp.asarray(feed))
@@ -817,14 +1121,25 @@ class ServeEngine:
             if not free or not len(self.scheduler):
                 break
             if self.prefix_sharing:       # pass A: prefix-cache hits
+                hybrid = self.cfg.ssm is not None
                 rest = deque()
                 q = self.scheduler.queue
                 while q and free:
                     req = q.popleft()
-                    m, mkeys = self._prefix_match_cols(req.prompt)
+                    if hybrid:            # whole-prompt snapshot hits only
+                        hit = self._snapshot_match(req.prompt)
+                        if hit is not None:
+                            s = free.pop(0)
+                            self._admit_snapshot(ls, s, req, *hit)
+                            new_slots.append(s)
+                            progress = True
+                        else:
+                            rest.append(req)
+                        continue
+                    m, mkeys, warm = self._prefix_match_cols(req.prompt)
                     if m >= 1:
                         s = free.pop(0)
-                        self._admit_shared(ls, s, req, m, mkeys)
+                        self._admit_shared(ls, s, req, m, mkeys, warm)
                         replays.append(
                             (s, np.asarray(req.prompt[m * self.blk_tokens:],
                                            np.int32)))
@@ -869,6 +1184,35 @@ class ServeEngine:
         self._run_replays(ls, replays)
         self._register_prefixes(
             [(s, ls.slot_req[s].prompt, ls.slot_len[s]) for s in new_slots])
+        if self.prefix_sharing and self.cfg.ssm is not None:
+            self._capture_snapshots(ls, new_slots)
+
+    def _capture_snapshots(self, ls: _LoopState,
+                           new_slots: List[int]) -> None:
+        """Capture boundary SSM snapshots for tail-less page-aligned
+        admissions (hybrids only): the recurrent state after consuming
+        exactly the prompt, plus the first greedy token — the unit that
+        makes a later identical prompt replay-free.  One device read of
+        the SSM leaves per admission round, only when needed."""
+        todo = []
+        for s in new_slots:
+            req = ls.slot_req[s]
+            if req is None:
+                continue
+            ln = ls.slot_len[s]
+            if (ln != len(req.prompt) or ln % self.blk_tokens != 0
+                    or not ls.emitted.get(req.uid)):
+                continue
+            keys = self._prefix_keys(req.prompt, ln // self.blk_tokens)
+            if self.cache.get_snapshot(keys[-1]) is not None:
+                continue
+            todo.append((s, keys[-1], int(ls.emitted[req.uid][0])))
+        if not todo:
+            return
+        leaves = [np.asarray(a) for a in self.state.ssm]
+        for s, key, g0 in todo:
+            snap = SSMState(*(a[:, :, s].copy() for a in leaves))
+            self.cache.put_snapshot(key, {"ssm": snap, "g0": g0})
 
     def _decode_window(self, ls: _LoopState) -> None:
         """One fused decode dispatch: K steps as one scan, K bounded by the
@@ -885,6 +1229,10 @@ class ServeEngine:
         bound = min(ls.slot_req[s].max_new_tokens - len(ls.emitted[
             ls.slot_req[s].uid]) for s in live)
         n_steps = self._fuse_steps(bound)
+        if self.cache.lru:                  # pool-pressure valve
+            self._ensure_free_pages(sum(
+                self._page_growth(ls.slot_len[s], ls.slot_len[s] + n_steps)
+                for s in live))
         seq, self.state = self._decode_for(n_steps)(
             self.params, self.state, jnp.asarray(ls.cur))
         ls.steps += n_steps
@@ -924,7 +1272,14 @@ class ServeEngine:
             mean_latency_s=float(np.mean(lats)) if lats else 0.0,
             latency_p50_s=pct(50), latency_p95_s=pct(95),
             decode_backend=kernel_ops.resolve_decode_backend(
-                self.run_cfg.codec))
+                self.run_cfg.codec),
+            cache_hot_hits=self.cache.hot_hits,
+            cache_spilled_pages=self.cache.spilled_pages,
+            cache_spilled_bytes=self.cache.spilled_bytes,
+            cache_fetched_pages=self.cache.fetched_pages,
+            cache_fetched_bytes=self.cache.fetched_bytes,
+            cache_reprefill_cols=self.cache.reprefill_cols,
+            cache_evicted_cols=self.cache.evicted_cols)
 
     def run(self, requests: List[Request]
             ) -> Tuple[List[RequestResult], ServeStats]:
@@ -962,10 +1317,10 @@ def demo_serving_setup(run: RunConfig, vocab_size: int, tp: int,
     Shrinks the cache block so the paged pool is exercised at demo prompt
     sizes and generates a mixed-length queue with SHARED PREFIXES: two base
     prompts cycle, repeats of a base reuse its exact tokens, and budgets
-    are staggered (long-prompt requests run longer) so repeats admit while
-    the original still holds its pages — prefix pages are freed at
-    refcount zero, so hits need overlapping residency (watch
-    ``shared_page_hits``).
+    are staggered (long-prompt requests run longer).  Zero-ref prefix
+    columns stay RETAINED in the tiered PageCache, so even repeats that
+    admit after the original released still hit the hot tier (watch
+    ``shared_page_hits`` and ``cache_hot_hits``).
     """
     rng = np.random.default_rng(seed)
     blk = max(4, (prompt_len // tp) // 4)
@@ -982,7 +1337,7 @@ def demo_serving_setup(run: RunConfig, vocab_size: int, tp: int,
 
 
 def format_stats(st: ServeStats) -> str:
-    """Three-line human summary of a serving run (demo output)."""
+    """Four-line human summary of a serving run (demo output)."""
     return (f"{st.n_requests} reqs, {st.decode_steps} decode steps in "
             f"{st.n_dispatches} dispatches ({st.decode_backend} backend), "
             f"{st.requests_per_s:.2f} req/s, {st.tokens_per_s:.1f} tok/s "
@@ -996,4 +1351,11 @@ def format_stats(st: ServeStats) -> str:
             f"{st.peak_cache_raw_bytes / 1e3:.1f} kB raw "
             f"({st.cache_ratio:.2f}x); mean request latency "
             f"{st.mean_latency_s * 1e3:.0f} ms (incl. each bucket's "
-            f"first-use compile)")
+            f"first-use compile)\n"
+            f"retention: {st.cache_hot_hits} hot-tier re-acquires, "
+            f"{st.cache_spilled_pages} pages spilled "
+            f"({st.cache_spilled_bytes / 1e3:.1f} kB), "
+            f"{st.cache_fetched_pages} fetched back "
+            f"({st.cache_fetched_bytes / 1e3:.1f} kB), "
+            f"{st.cache_evicted_cols} columns evicted, "
+            f"{st.cache_reprefill_cols} re-prefills")

@@ -47,7 +47,6 @@ same :class:`TransportStats` so the serving bench reads one ledger.
 from __future__ import annotations
 
 import dataclasses
-import hashlib
 import itertools
 import struct
 from collections import OrderedDict
@@ -63,9 +62,15 @@ except ImportError:  # pragma: no cover - jax always bundles ml_dtypes
 
 from repro.hw.noc import LinkModel
 
+# content addressing is shared with the scheduler's prefix index and the
+# tiered PageCache (repro.serve.digest owns both hash conventions); the
+# old private names stay importable — framing, server, and tests key on
+# them
+from .digest import DIGEST_BYTES as _DIGEST_BYTES
+from .digest import page_digest as _page_digest
+
 MAGIC = b"LXSQ"
 VERSION = 1
-_DIGEST_BYTES = 12
 _FLAG_CODEC, _FLAG_KV, _FLAG_SSM = 1, 2, 4
 _HDR = struct.Struct("<4sBBHHHHIHIIIiH")   # through n_emitted
 
@@ -74,15 +79,12 @@ _CHDR = struct.Struct("<4sBIH")            # magic, version, seq_id, entries
 _CENT = struct.Struct("<HHHB")             # shard, layer, col, tag
 
 
-def _page_digest(payload: bytes) -> bytes:
-    return hashlib.sha256(payload).digest()[:_DIGEST_BYTES]
-
-
 def page_payload(kv: Dict[str, np.ndarray], codec_on: bool,
                  t: int, l: int, c: int) -> bytes:
     """One page's wire payload (the field concatenation of the WIRE FORMAT
     page section) from a ``(tp, L, cols, ...)`` field dict — shared by the
-    whole-blob serializer and the streaming chunk exporter."""
+    whole-blob serializer, the streaming chunk exporter, and the warm-tier
+    spill path of ``repro.serve.pagecache``."""
     if codec_on:
         return b"".join((
             kv["signman"][t, l, c].tobytes(),
@@ -91,6 +93,65 @@ def page_payload(kv: Dict[str, np.ndarray], codec_on: bool,
             kv["esc_pos"][t, l, c].tobytes(),
             kv["esc_raw"][t, l, c].tobytes()))
     return kv["raw_pages"][t, l, c].tobytes()
+
+
+def payload_nbytes(codec_on: bool, blk: int, w: int, k: int,
+                   esc_cap: int, npad: int) -> int:
+    """Byte size of one page payload under the given codec geometry."""
+    n = blk * w
+    if not codec_on:
+        return n * 2
+    return (n + k * (npad // 32) * 4 + (1 << k) + esc_cap * 4 + esc_cap)
+
+
+def empty_page_fields(codec_on: bool, tp: int, n_layers: int, n_cols: int,
+                      blk: int, w: int, k: int, esc_cap: int,
+                      npad: int) -> Dict[str, np.ndarray]:
+    """Zeroed ``(tp, L, cols, ...)`` field arrays for ``n_cols`` page
+    columns (the host-side shape :func:`scatter_page_payload` fills)."""
+    n = blk * w
+    if codec_on:
+        return {
+            "signman": np.zeros((tp, n_layers, n_cols, n), np.uint8),
+            "planes": np.zeros((tp, n_layers, n_cols, k, npad // 32),
+                               np.uint32),
+            "dict_syms": np.zeros((tp, n_layers, n_cols, 1 << k), np.uint8),
+            "esc_pos": np.zeros((tp, n_layers, n_cols, esc_cap), np.int32),
+            "esc_raw": np.zeros((tp, n_layers, n_cols, esc_cap), np.uint8),
+        }
+    return {"raw_pages": np.zeros((tp, n_layers, n_cols, blk, w), BF16)}
+
+
+def scatter_page_payload(kv: Dict[str, np.ndarray], codec_on: bool,
+                         t: int, l: int, c: int, payload: bytes, *,
+                         blk: int, w: int, k: int, esc_cap: int,
+                         npad: int) -> None:
+    """Inverse of :func:`page_payload`: split one payload back into the
+    ``(tp, L, cols, ...)`` field dict at ``[t, l, c]``.  Loud on a length
+    mismatch — a payload that does not fit the geometry never lands."""
+    size = payload_nbytes(codec_on, blk, w, k, esc_cap, npad)
+    if len(payload) != size:
+        raise ValueError(
+            f"page payload is {len(payload)} bytes, geometry says "
+            f"{size} (shard {t}, layer {l}, col {c})")
+    if not codec_on:
+        kv["raw_pages"][t, l, c] = np.frombuffer(
+            payload, BF16).reshape(blk, w)
+        return
+    n = blk * w
+    o = 0
+    kv["signman"][t, l, c] = np.frombuffer(payload, np.uint8, n, o)
+    o += n
+    npl = k * (npad // 32)
+    kv["planes"][t, l, c] = np.frombuffer(
+        payload, np.uint32, npl, o).reshape(k, npad // 32)
+    o += npl * 4
+    nd = 1 << k
+    kv["dict_syms"][t, l, c] = np.frombuffer(payload, np.uint8, nd, o)
+    o += nd
+    kv["esc_pos"][t, l, c] = np.frombuffer(payload, np.int32, esc_cap, o)
+    o += esc_cap * 4
+    kv["esc_raw"][t, l, c] = np.frombuffer(payload, np.uint8, esc_cap, o)
 
 
 # ---------------------------------------------------------------------------
@@ -332,24 +393,9 @@ class SequenceBlob:
         kv = None
         if flags & _FLAG_KV:
             ring = rd(BF16, (tp, n_layers, blk, w))
-            n = blk * w
-            if codec_on:
-                kv = {
-                    "signman": np.zeros((tp, n_layers, n_cols, n), np.uint8),
-                    "planes": np.zeros((tp, n_layers, n_cols, k, npad // 32),
-                                       np.uint32),
-                    "dict_syms": np.zeros((tp, n_layers, n_cols, 1 << k),
-                                          np.uint8),
-                    "esc_pos": np.zeros((tp, n_layers, n_cols, esc_cap),
-                                        np.int32),
-                    "esc_raw": np.zeros((tp, n_layers, n_cols, esc_cap),
-                                        np.uint8),
-                    "ring": ring,
-                }
-            else:
-                kv = {"raw_pages": np.zeros((tp, n_layers, n_cols, blk, w),
-                                            BF16),
-                      "ring": ring}
+            kv = empty_page_fields(codec_on, tp, n_layers, n_cols, blk, w,
+                                   k, esc_cap, npad)
+            kv["ring"] = ring
             blob = cls(codec_on=codec_on, tp=tp, n_layers=n_layers,
                        n_cols=n_cols, blk=blk, w=w, k=k, esc_cap=esc_cap,
                        npad=npad, length=length, cur_token=cur_token,
@@ -391,39 +437,14 @@ class SequenceBlob:
                    emitted=emitted, kv=None, ssm=ssm)
 
     def _payload_size(self) -> int:
-        n = self.blk * self.w
-        if not self.codec_on:
-            return n * 2
-        return (n + self.k * (self.npad // 32) * 4 + (1 << self.k)
-                + self.esc_cap * 4 + self.esc_cap)
+        return payload_nbytes(self.codec_on, self.blk, self.w, self.k,
+                              self.esc_cap, self.npad)
 
     def _scatter_payload(self, t: int, l: int, c: int,
                          payload: bytes) -> None:
-        kv = self.kv
-        if len(payload) != self._payload_size():
-            raise ValueError(
-                f"page payload is {len(payload)} bytes, geometry says "
-                f"{self._payload_size()} (shard {t}, layer {l}, col {c})")
-        if not self.codec_on:
-            kv["raw_pages"][t, l, c] = np.frombuffer(
-                payload, BF16).reshape(self.blk, self.w)
-            return
-        n = self.blk * self.w
-        o = 0
-        kv["signman"][t, l, c] = np.frombuffer(payload, np.uint8, n, o)
-        o += n
-        npl = self.k * (self.npad // 32)
-        kv["planes"][t, l, c] = np.frombuffer(
-            payload, np.uint32, npl, o).reshape(self.k, self.npad // 32)
-        o += npl * 4
-        nd = 1 << self.k
-        kv["dict_syms"][t, l, c] = np.frombuffer(payload, np.uint8, nd, o)
-        o += nd
-        kv["esc_pos"][t, l, c] = np.frombuffer(payload, np.int32,
-                                               self.esc_cap, o)
-        o += self.esc_cap * 4
-        kv["esc_raw"][t, l, c] = np.frombuffer(payload, np.uint8,
-                                               self.esc_cap, o)
+        scatter_page_payload(self.kv, self.codec_on, t, l, c, payload,
+                             blk=self.blk, w=self.w, k=self.k,
+                             esc_cap=self.esc_cap, npad=self.npad)
 
 
 # ---------------------------------------------------------------------------
@@ -538,6 +559,9 @@ class TransportStats:
     pages_resent: int = 0        # inline payloads re-sent after receiver
                                  # eviction (the store forgot them)
     store_evicted: int = 0       # receiver-store pages dropped by LRU trim
+    pages_fetched: int = 0       # payloads pulled BACK by digest (FETCH —
+                                 # the remote tier of the PageCache)
+    fetch_bytes: int = 0         # bytes of those fetched payloads
     model_ns: float = 0.0        # LinkModel latency of the wire bytes
     model_ns_raw: float = 0.0    # LinkModel latency of the raw baseline
 
@@ -601,6 +625,14 @@ class PageTransport:
 
     def recv(self, data: bytes, dst: str,
              seq_id: Optional[int] = None) -> SequenceBlob:
+        raise NotImplementedError
+
+    def fetch(self, dst: str,
+              digests: Sequence[bytes]) -> Dict[bytes, bytes]:
+        """Remote tier: pull page payloads back OUT of ``dst``'s store by
+        content digest (the reverse direction of ``send``).  Returns the
+        subset found — a missing digest is not an error, the caller falls
+        back to its next tier (ultimately re-prefill)."""
         raise NotImplementedError
 
 
@@ -692,3 +724,14 @@ class LoopbackTransport(PageTransport):
             store.release(seq_id)
         self.stats.store_evicted += store.trim()
         return blob
+
+    def fetch(self, dst: str,
+              digests: Sequence[bytes]) -> Dict[bytes, bytes]:
+        store = self.store(dst)
+        out = {d: store[d] for d in digests if d in store}
+        nbytes = sum(len(p) for p in out.values())
+        st = self.stats
+        st.pages_fetched += len(out)
+        st.fetch_bytes += nbytes
+        st.model_ns += self.link.transfer_ns(nbytes, self.hops)
+        return out

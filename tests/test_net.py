@@ -218,6 +218,7 @@ def test_socket_disagg_identity_threaded():
     assert st_s.wire_bytes == st_l.wire_bytes
     assert st_s.pages_streamed == st_l.pages_streamed
     assert st_s.decode_prefix_hits == st_l.decode_prefix_hits
+    dec_eng.drop_cache()
     assert dec_eng._pages_in_use() == 0
 
 
@@ -302,7 +303,54 @@ def test_socket_midstream_disconnect_pool_untouched():
         tr.close()
         for x, y in zip(res_m, res_s):
             assert x.tokens == y.tokens, x.uid
+        dec_eng.drop_cache()
         assert dec_eng._pages_in_use() == 0
+    finally:
+        listener.close()
+
+
+def test_pack_pages_roundtrip_and_corruption():
+    """The FETCH_OK payload codec is lossless and loud on truncation or
+    trailing garbage."""
+    pages = {_page_digest(b"a" * 9): b"a" * 9, _page_digest(b"bb"): b"bb"}
+    data = fr.pack_pages(pages)
+    assert fr.unpack_pages(data) == pages
+    assert fr.unpack_pages(fr.pack_pages({})) == {}
+    with pytest.raises(fr.FrameError, match="overruns"):
+        fr.unpack_pages(data[:-1])
+    with pytest.raises(fr.FrameError, match="trailing"):
+        fr.unpack_pages(data + b"x")
+
+
+def test_socket_fetch_by_digest():
+    """FETCH pulls pages back OUT of the host's digest store (the remote
+    tier of the tiered PageCache): the reply is the held subset — a
+    missing digest is not an error — and the transport meters the fetch;
+    STATUS reports store occupancy and capacity."""
+    run = _run_cfg(True)
+    host, listener, port, dec_eng = _start_host(run, once=False)
+    try:
+        tr = SocketTransport()
+        tr.connect("d", "127.0.0.1", port, _fingerprint(run))
+        st = tr.status("d")
+        assert st["store_pages"] == 0 and st["store_capacity"] == 4096
+        # stage two pages into the host store via a streamed chunk
+        bodies = [b"payload-a" * 8, b"payload-b" * 8]
+        data, _, _ = pack_chunk(3, [(0, 0, i, b)
+                                    for i, b in enumerate(bodies)])
+        fr.send_frame(tr._socks["d"], fr.MSG_PAGE_CHUNK, data)
+        msg, _ = fr.recv_frame(tr._socks["d"])
+        assert msg == fr.MSG_CHUNK_OK
+        digests = [_page_digest(b) for b in bodies]
+        missing = _page_digest(b"never shipped")
+        got = tr.fetch("d", digests + [missing])
+        assert got == dict(zip(digests, bodies))
+        assert tr.stats.pages_fetched == 2
+        assert tr.stats.fetch_bytes == sum(len(b) for b in bodies)
+        assert int(tr.status("d")["store_pages"]) == 2
+        # the host-side replica's remote tier reads the same store
+        assert host._fetch_pages([digests[0]]) == {digests[0]: bodies[0]}
+        tr.close()
     finally:
         listener.close()
 

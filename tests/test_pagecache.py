@@ -1,0 +1,263 @@
+"""Tiered PageCache retention-lifecycle tests.
+
+Pure-host randomized schedule sweeps (fixed seeds) drive every
+insert/acquire/release/evict/spill/fetch interleaving against a shadow
+model — refcounts, LRU residency and index consistency must hold after
+every step, double-release and double-register fail loudly — plus
+deterministic spill → store-eviction → remote-fetch → re-prefill fallback
+coverage, and engine-level randomized admit/share/evict interleavings
+that must never change a token stream.
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.core.collectives import CodecConfig
+from repro.serve import PageCache, Request, ServeEngine
+from repro.serve.digest import page_digest
+
+RNG = np.random.default_rng(5)
+
+CFG = ModelConfig(name="t1", family="dense", n_layers=2, d_model=64,
+                  n_heads=8, n_kv_heads=4, d_ff=128, vocab_size=500,
+                  head_dim=16)
+MAXLEN = 64
+
+
+def _run_cfg():
+    import dataclasses
+    return RunConfig(codec=dataclasses.replace(CodecConfig(cache_block=4),
+                                               decode_backend="jax"))
+
+
+# ---------------------------------------------------------------------------
+# pure-host lifecycle (no engine, no device state)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_randomized_schedule_invariants(seed):
+    """A fixed-seed random interleaving of every cache operation keeps the
+    ledger consistent with a shadow model at every step: refcounts match,
+    the LRU holds exactly the zero-ref indexed columns, page ids never
+    alias, and hot hits are counted exactly once per retained revival."""
+    rng = np.random.default_rng(seed)
+    cache = PageCache(max_store_pages=8)
+    shadow = {}                  # key -> refcount (indexed columns only)
+    payload_of = {}              # key -> its immutable page payloads
+    next_page = 0
+    want_hits = 0
+
+    def check():
+        assert set(cache.index) == set(cache.ref) == set(shadow)
+        assert all(cache.ref[k] == r for k, r in shadow.items())
+        assert set(cache.lru) == {k for k, r in shadow.items() if r == 0}
+        assert cache.retained() == len(cache.lru)
+        ids = [int(cache.index[k][0]) for k in cache.index]
+        assert len(ids) == len(set(ids))          # no column aliasing
+
+    for _ in range(400):
+        op = int(rng.integers(0, 5))
+        held = [k for k, r in shadow.items() if r > 0]
+        retained = [k for k in shadow if shadow[k] == 0]
+        if op == 0 or not shadow:
+            key = rng.bytes(12)
+            if key in shadow:
+                continue
+            cache.insert(key, np.array([next_page]))
+            next_page += 1
+            shadow[key] = 1
+            payload_of[key] = [rng.bytes(24), rng.bytes(24)]
+        elif op == 1:
+            key = list(shadow)[int(rng.integers(0, len(shadow)))]
+            if shadow[key] == 0:
+                want_hits += 1
+            np.testing.assert_array_equal(cache.acquire(key),
+                                          cache.index[key])
+            shadow[key] += 1
+        elif op == 2 and held:
+            key = held[int(rng.integers(0, len(held)))]
+            if shadow[key] == 1 and not cache.has_warm(key):
+                cache.spill(key, payload_of[key])     # last release spills
+            cache.release(key)
+            shadow[key] -= 1
+        elif op == 3 and retained:
+            key, ids = cache.evict_lru()
+            assert shadow.pop(key) == 0
+            assert key not in cache.index
+        elif op == 4:
+            gone = [k for k in payload_of
+                    if k not in shadow and cache.has_warm(k)]
+            if gone:
+                key = gone[int(rng.integers(0, len(gone)))]
+                got = cache.fetch_warm(key)
+                # the bounded store may have evicted the payloads (no
+                # remote tier wired here): that is a counted re-prefill
+                # and the dead warm entry is dropped
+                if got is None:
+                    assert not cache.has_warm(key)
+                else:
+                    assert got == payload_of[key]
+        check()
+
+    assert cache.hot_hits == want_hits
+    assert cache.fetched_pages + cache.reprefill_cols + \
+        cache.spilled_pages >= 0
+    # drain: release everything, then drop_retained empties the ledger
+    for key, r in list(shadow.items()):
+        for _ in range(r):
+            cache.release(key)
+    dropped = cache.drop_retained()
+    assert len(dropped) == len(shadow)
+    assert not cache.index and not cache.ref and not cache.lru
+    assert not cache.warm and len(cache.store) == 0
+
+
+def test_underflow_and_double_register_loud():
+    cache = PageCache()
+    cache.insert(b"K" * 12, np.array([0]))
+    with pytest.raises(AssertionError, match="registered twice"):
+        cache.insert(b"K" * 12, np.array([1]))
+    cache.release(b"K" * 12)
+    with pytest.raises(RuntimeError, match="underflow"):
+        cache.release(b"K" * 12)
+    with pytest.raises(RuntimeError, match="underflow"):
+        cache.release(b"?" * 12)              # never-registered key
+
+
+def test_spill_fetch_remote_fallback_and_reprefill():
+    """Warm payloads evicted from the bounded local store restore from the
+    remote tier (digest-verified, re-warmed locally, counted); when every
+    tier misses, the caller is told to re-prefill exactly once."""
+    peer = {}
+    calls = []
+
+    def remote(digests):
+        calls.append(list(digests))
+        return {d: peer[d] for d in digests if d in peer}
+
+    cache = PageCache(max_store_pages=1, remote_fetch=remote)
+    pa, pb = [b"a" * 32, b"b" * 32], [b"c" * 32, b"d" * 32]
+    cache.insert(b"A" * 12, np.array([0]))
+    cache.insert(b"B" * 12, np.array([1]))
+    cache.spill(b"A" * 12, pa)
+    cache.spill(b"B" * 12, pb)                # store cap 1: A's bytes gone
+    assert cache.spilled_pages == 4 and cache.spilled_bytes == 128
+    for p in pa + pb:
+        peer[page_digest(p)] = p
+    assert cache.fetch_warm(b"A" * 12) == pa
+    assert calls and cache.remote_pages > 0
+    assert cache.fetched_pages == 2
+
+    # a remote payload that does not hash to its digest is loud
+    bad = PageCache(max_store_pages=1,
+                    remote_fetch=lambda ds: {d: b"corrupt" for d in ds})
+    bad.insert(b"A" * 12, np.array([0]))
+    bad.insert(b"B" * 12, np.array([1]))
+    bad.spill(b"A" * 12, pa)
+    bad.spill(b"B" * 12, pb)
+    with pytest.raises(ValueError, match="hash"):
+        bad.fetch_warm(b"A" * 12)
+
+    # every tier misses: None, warm entry dropped, re-prefill counted
+    lost = PageCache(max_store_pages=1)
+    lost.insert(b"A" * 12, np.array([0]))
+    lost.insert(b"B" * 12, np.array([1]))
+    lost.spill(b"A" * 12, pa)
+    lost.spill(b"B" * 12, pb)
+    assert lost.fetch_warm(b"A" * 12) is None
+    assert not lost.has_warm(b"A" * 12)
+    assert lost.reprefill_cols == 1
+    assert lost.fetch_warm(b"Z" * 12) is None       # never spilled: no count
+    assert lost.reprefill_cols == 1
+
+
+def test_snapshot_lru_bound():
+    cache = PageCache(max_snapshots=3)
+    for i in range(4):
+        cache.put_snapshot(bytes([i]) * 12, {"g0": i})
+    assert cache.get_snapshot(bytes([0]) * 12) is None      # oldest evicted
+    assert cache.get_snapshot(bytes([1]) * 12) == {"g0": 1}  # refreshed
+    cache.put_snapshot(bytes([9]) * 12, {"g0": 9})
+    assert cache.get_snapshot(bytes([2]) * 12) is None      # 1 outlived 2
+    assert cache.get_snapshot(bytes([1]) * 12) == {"g0": 1}
+
+
+# ---------------------------------------------------------------------------
+# engine-level: randomized interleavings + evict/spill/restore identity
+# ---------------------------------------------------------------------------
+
+
+def test_evict_spill_restore_identity():
+    """The acceptance path: release retains + spills, pool pressure evicts
+    the hot columns, and a re-admission restores the prefix from the warm
+    store WITHOUT re-prefill — token stream unchanged, bytes counted."""
+    run = _run_cfg()
+    eng = ServeEngine(CFG, run, tp=1, n_slots=2, max_len=MAXLEN, seed=1)
+    a = RNG.integers(0, 500, (16,)).astype(np.int32)   # 4 aligned columns
+    (r1,), st1 = eng.run([Request(uid=0, prompt=a, max_new_tokens=4)])
+    assert eng.cache.retained() > 0
+    keys = list(eng.cache.index)
+    assert all(eng.cache.has_warm(k) for k in keys)    # spilled at release
+    assert st1.cache_spilled_pages > 0
+
+    eng._ensure_free_pages(1 << 30)          # evict every retained column
+    assert eng.cache.retained() == 0
+    assert eng.cache.evicted_cols == len(keys)
+    assert eng._pages_in_use() == 0
+
+    (r2,), st2 = eng.run([Request(uid=1, prompt=a.copy(),
+                                  max_new_tokens=4)])
+    assert r2.tokens == r1.tokens
+    assert st2.shared_page_hits > 0                    # restored, not cold
+    assert st2.cache_fetched_pages > st1.cache_fetched_pages
+    assert st2.cache_fetched_bytes > 0
+    eng.drop_cache()
+    assert eng._pages_in_use() == 0
+
+
+@pytest.mark.parametrize("seed", [13, 14])
+def test_engine_randomized_interleaving_identity(seed):
+    """Fixed-seed randomized admit/share/evict interleavings (duplicate
+    prompts, forks, fresh prompts, forced evict-all between rounds) serve
+    streams identical to the sharing-off engine, and the ledger drains."""
+    rng = np.random.default_rng(seed)
+    run = _run_cfg()
+    bases = [rng.integers(0, 500, (16,)).astype(np.int32),
+             rng.integers(0, 500, (16,)).astype(np.int32)]
+
+    def mk(uid):
+        kind = int(rng.integers(0, 3))
+        if kind == 0:                        # exact duplicate
+            p = bases[int(rng.integers(0, 2))].copy()
+        elif kind == 1:                      # fork off a shared prefix
+            b = bases[int(rng.integers(0, 2))]
+            p = np.concatenate([b[:8], rng.integers(0, 500, (8,)
+                                                    ).astype(np.int32)])
+        else:                                # fresh prompt
+            p = rng.integers(0, 500, (8,)).astype(np.int32)
+        return Request(uid=uid, prompt=p,
+                       max_new_tokens=int(rng.integers(2, 5)))
+
+    eng_on = ServeEngine(CFG, run, tp=1, n_slots=2, max_len=MAXLEN, seed=1)
+    eng_off = ServeEngine(CFG, run, tp=1, n_slots=2, max_len=MAXLEN,
+                          seed=1, prefix_sharing=False)
+    uid = 0
+    for rnd in range(3):
+        reqs = []
+        for _ in range(4):
+            reqs.append(mk(uid))
+            uid += 1
+        res_on, st_on = eng_on.run(reqs)
+        res_off, _ = eng_off.run([Request(uid=r.uid, prompt=r.prompt,
+                                          max_new_tokens=r.max_new_tokens)
+                                  for r in reqs])
+        for x, y in zip(res_on, res_off):
+            assert x.tokens == y.tokens, (seed, rnd, x.uid)
+        if rnd == 1:
+            eng_on._ensure_free_pages(1 << 30)   # forced eviction storm
+            assert eng_on.cache.retained() == 0
+    eng_on.drop_cache()
+    assert eng_on._pages_in_use() == 0
+    assert not eng_on._prefix_index and not eng_on._prefix_ref

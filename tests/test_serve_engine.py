@@ -102,12 +102,17 @@ def test_continuous_matches_fixed_batch(case, codec_on):
 
 
 def test_pages_released_after_run():
-    """Eviction returns every page to the pool."""
+    """Eviction frees every page except the retained (hot-tier) prefix
+    columns; dropping the cache drains the pool completely."""
     cfg = CASES["dense"]
     eng = ServeEngine(cfg, _run_cfg(True), tp=TP, n_slots=2, max_len=MAXLEN,
                       seed=1)
     results, stats = eng.run(_requests())
     assert stats.peak_pages > 0
+    # the aligned 16-token prompt leaves its prefix column retained
+    assert eng.cache.retained() > 0
+    assert int(np.asarray(eng.state.kv.page_used).sum()) > 0
+    eng.drop_cache()
     assert int(np.asarray(eng.state.kv.page_used).sum()) == 0
     assert int(np.asarray(eng.state.active).sum()) == 0
 
@@ -297,9 +302,9 @@ def _shared_mix():
 def test_prefix_sharing_token_identity(case, codec_on):
     """Serving a shared-prefix mix with page sharing ON is token-identical
     to the sharing-OFF engine, across dense/hybrid/MoE and codec on/off —
-    with hits, fewer admit prefills and a lower page peak where sharing
-    applies (hybrid/MoE auto-disable: recurrent state is not in pages and
-    MoE suffix replay is not bit-equal to prefill)."""
+    with hits and fewer admit prefills where sharing applies.  Hybrids
+    share via SSM snapshots at page boundaries; MoE auto-disables (its
+    decode float path is not bit-equal to prefill)."""
     cfg = CASES[case]
     run = _run_cfg(codec_on)
     eng_on = ServeEngine(cfg, run, tp=TP2, n_slots=2, max_len=MAXLEN, seed=1)
@@ -312,15 +317,22 @@ def test_prefix_sharing_token_identity(case, codec_on):
     assert st_off.shared_page_hits == 0
     if case == "dense":
         assert st_on.shared_page_hits > 0
-        assert st_on.peak_pages < st_off.peak_pages
-        assert st_on.peak_cache_bytes < st_off.peak_cache_bytes
         assert st_on.n_admit_dispatches < st_on.n_requests
+    elif case == "hybrid":
+        # the page-aligned duplicates of A restore pages + SSM snapshot
+        # without any re-prefill
+        assert st_on.shared_page_hits > 0
+        assert eng_on.prefix_sharing
     else:
-        # hybrid (recurrent state) and MoE (decode float path != prefill)
-        # auto-disable sharing: streams unchanged, hits zero
+        # MoE (decode float path != prefill) auto-disables sharing:
+        # streams unchanged, hits zero
         assert st_on.shared_page_hits == 0
         assert not eng_on.prefix_sharing
-    # pool fully drained, prefix index empty after the last release
+    # release RETAINS indexed prefix columns (hot tier); dropping the
+    # cache drains the pool and empties the index
+    if eng_on.prefix_sharing:
+        assert eng_on.cache.retained() > 0
+    eng_on.drop_cache()
     if cfg.n_heads > 0:
         assert eng_on._pages_in_use() == 0
     assert not eng_on._prefix_index and not eng_on._prefix_ref
@@ -422,8 +434,8 @@ def test_page_refcount_lifecycle():
 
     # a matcher whose prompt extends A maps BOTH columns, zero page copies
     a_ext = np.concatenate([a, RNG.integers(0, 500, (4,)).astype(np.int32)])
-    m, keys = eng._prefix_match_cols(a_ext)
-    assert m == 2
+    m, keys, warm = eng._prefix_match_cols(a_ext)
+    assert m == 2 and warm == []
     ids = np.zeros((TP2, eng._maxp), np.int32)
     for c, key in enumerate(keys):
         ids[:, c] = eng._prefix_index[key]
@@ -441,7 +453,19 @@ def test_page_refcount_lifecycle():
     assert len(eng._prefix_index) == 2
     with pytest.raises(RuntimeError, match="double release"):
         eng._free_slots([0])
-    eng._free_slots([1])                   # last reference: drain + deindex
+    eng._free_slots([1])                   # last reference: retain, spill
+    # the hot tier keeps the columns resident (LRU, ref 0) and the last
+    # release spilled their compressed payloads to the warm tier
+    assert eng._pages_in_use() == owner_pages
+    assert eng.cache.retained() == 2
+    assert all(eng.cache.has_warm(k) for k in keys)
+    assert eng.cache.spilled_pages > 0
+    # re-acquiring from the hot tier pins the column again (a hit)...
+    page = eng.cache.acquire(keys[0])
+    assert eng.cache.hot_hits == 1 and eng.cache.retained() == 1
+    eng.cache.release(keys[0])
+    # ...and dropping the cache drains the pool and empties the index
+    eng.drop_cache()
     assert eng._pages_in_use() == 0
     assert not eng._prefix_index and not eng._prefix_ref
 
@@ -460,6 +484,7 @@ def test_sharing_oversubscription_stress():
     toks0 = results[0].tokens
     for r in results[1:]:                 # identical prompts, same stream
         assert r.tokens == toks0
+    eng.drop_cache()
     assert eng._pages_in_use() == 0
     assert not eng._prefix_index
 
@@ -557,6 +582,7 @@ def test_stop_string_budget_eos_interplay():
         eng.run([Request(uid=5, prompt=prompt, max_new_tokens=2,
                          stop_seqs=[()])])
     assert int(np.asarray(eng.state.active).sum()) == 0
+    eng.drop_cache()
     assert eng._pages_in_use() == 0
 
 
