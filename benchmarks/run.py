@@ -272,6 +272,10 @@ def bench_serving() -> None:
             "cache_fetched_bytes": st.cache_fetched_bytes,
             "cache_reprefill_cols": st.cache_reprefill_cols,
             "cache_evicted_cols": st.cache_evicted_cols,
+            "weights_compressed": st.weights_compressed,
+            "weight_backend": st.weight_backend,
+            "weight_bytes_per_step": st.weight_bytes_per_step,
+            "weight_raw_bytes_per_step": st.weight_raw_bytes_per_step,
         }
 
     scenarios = []
@@ -455,9 +459,10 @@ def bench_serving() -> None:
                 except Exception:
                     proc.kill()
     _cache_pressure_scenarios(scenarios)
+    _weights_scenarios(scenarios)
     if SMOKE:
         emit("serving.smoke", 0.0,
-             "smoke pass ok incl. disagg + cache pressure"
+             "smoke pass ok incl. disagg + cache pressure + packed weights"
              + (" + two-process socket" if SOCKET else "")
              + " (no JSON written)")
         return
@@ -540,6 +545,67 @@ def _cache_pressure_scenarios(scenarios: list) -> None:
             "cache_reprefill_cols": st3.cache_reprefill_cols})
 
 
+def _weights_scenarios(scenarios: list) -> None:
+    """Weight-plane scenario: serve the same request stream from raw bf16
+    weights and from the LEXI-packed at-rest store (``--compress-weights``),
+    on both the exact unpack-then-einsum backend and the fused
+    decompress_matmul kernel.  Token streams must be bit-identical and the
+    packed store must hold <= 0.85x the raw bf16 HBM bytes per decode step.
+    Runs under --smoke (it is the CI weight-plane check); rows land in
+    BENCH_serving.json."""
+    import dataclasses
+    from repro.configs.base import RunConfig
+    from repro.core.collectives import CodecConfig
+    from repro.launch.disagg_host import tiny_bench_config
+    from repro.serve import Request, ServeEngine
+
+    cfg = tiny_bench_config()
+    rng = np.random.default_rng(5)
+    base = [rng.integers(0, 512, (16,)).astype(np.int32) for _ in range(3)]
+    mk = lambda: [Request(uid=i, prompt=p.copy(), max_new_tokens=8)
+                  for i, p in enumerate(base)]
+
+    run_raw = RunConfig(codec=dataclasses.replace(
+        CodecConfig(cache_block=8), decode_backend="jax"))
+    eng_r = ServeEngine(cfg, run_raw, tp=1, n_slots=2, max_len=48, seed=1)
+    t0 = time.perf_counter()
+    res_r, st_r = eng_r.run(mk())
+    dt_r = time.perf_counter() - t0
+    raw_tokens = [r.tokens for r in res_r]
+
+    for wb in ("jax", "interpret"):
+        run_pk = RunConfig(codec=dataclasses.replace(
+            CodecConfig(cache_block=8), decode_backend="jax",
+            weight_backend=wb))
+        eng_p = ServeEngine(cfg, run_pk, tp=1, n_slots=2, max_len=48,
+                            seed=1, compress_weights=True)
+        t0 = time.perf_counter()
+        res_p, st_p = eng_p.run(mk())
+        dt_p = time.perf_counter() - t0
+        # serving from the packed store must not change a single token
+        assert [r.tokens for r in res_p] == raw_tokens, wb
+        # acceptance bar: packed weight HBM bytes <= 0.85x raw bf16
+        assert st_p.weight_ratio <= 0.85, (wb, st_p.weight_ratio)
+        assert st_p.weights_compressed and not st_r.weights_compressed
+        tok_s = st_p.n_tokens / max(dt_p, 1e-9)
+        emit(f"serving.weights.{wb}", 0.0,
+             f"packed={st_p.weight_bytes_per_step / 1e3:.1f}kB/step "
+             f"raw={st_p.weight_raw_bytes_per_step / 1e3:.1f}kB "
+             f"ratio={st_p.weight_ratio:.3f} "
+             f"tok/s={tok_s:.1f} (raw engine "
+             f"{st_r.n_tokens / max(dt_r, 1e-9):.1f}) "
+             f"streams identical")
+        scenarios.append({
+            "scenario": f"weights_{wb}", "weight_backend": wb,
+            "weights_compressed": True,
+            "weight_bytes_per_step": st_p.weight_bytes_per_step,
+            "weight_raw_bytes_per_step": st_p.weight_raw_bytes_per_step,
+            "weight_ratio": st_p.weight_ratio,
+            "tokens_per_s": tok_s,
+            "raw_tokens_per_s": st_r.n_tokens / max(dt_r, 1e-9),
+            "streams_identical": True})
+
+
 def bench_decode_kernel() -> None:
     """Microbench: the fused paged decompress+attend kernel vs the pure-JAX
     page-scan reference on a serving-shaped problem (per-slot lengths,
@@ -579,11 +645,33 @@ def bench_decode_kernel() -> None:
         rows[name] = us
         emit(f"decode_kernel.paged.{name}", us,
              f"S={n_s} maxp={maxp} blk={blk} Hq={h} Hkv={hkv} hd={hd}")
+
+    # weight-plane microbench: fused decompress_matmul on a packed (K, N)
+    # weight vs the pure-JAX unpack-then-matmul reference, decode-shaped
+    # activations (M = slot count)
+    from repro.kernels import decompress_matmul as dm
+    M, K, N, wk = n_s, 128, 256, 5
+    wmat = jnp.asarray(rng.normal(0, 0.05, (K, N)), jnp.bfloat16)
+    signman, planes, dict_syms, nesc = kref.compress_weight_2d(wmat, k=wk)
+    assert nesc == 0
+    x = jnp.asarray(rng.normal(0, 1, (M, K)), jnp.bfloat16)
+    fused_w = jax.jit(lambda x_: dm.decompress_matmul(
+        x_, signman, planes, dict_syms, k=wk,
+        interpret=not kops.on_tpu()))
+    pure_w = jax.jit(lambda x_: kref.decompress_matmul_ref(
+        x_, signman, planes, dict_syms, k=wk))
+    for name, fn in (("decompress_matmul_fused", fused_w),
+                     ("decompress_matmul_ref", pure_w)):
+        us = timeit(fn, x, iters=3)
+        rows[name] = us
+        emit(f"decode_kernel.weights.{name}", us,
+             f"M={M} K={K} N={N} k={wk}")
     out = {"bench": "decode_kernel",
            "backend": "interpret" if not kops.on_tpu() else "pallas",
            "jax_backend": jax.default_backend(),
            "shape": {"slots": n_s, "maxp": maxp, "block": blk, "heads": h,
-                     "kv_heads": hkv, "head_dim": hd},
+                     "kv_heads": hkv, "head_dim": hd,
+                     "weight_matmul": {"M": M, "K": K, "N": N, "k": wk}},
            "us_per_call": rows}
     path = _repo_root() / "BENCH_decode_kernel.json"
     path.write_text(json.dumps(out, indent=2) + "\n")

@@ -44,6 +44,11 @@ class CodecConfig:
     # repro.kernels.ops.resolve_decode_backend).  auto = pallas on TPU,
     # pure-JAX elsewhere; interpret runs the fused kernels on CPU.
     decode_backend: str = "auto"
+    # serving weight-matmul backend: auto | pallas | interpret | jax (see
+    # repro.kernels.ops.resolve_weight_backend).  Same semantics: how
+    # PackedWeight leaves are multiplied — fused decompress_matmul
+    # (pallas/interpret) or exact unpack-then-einsum (jax).
+    weight_backend: str = "auto"
 
     def esc_capacity(self, n: int) -> int:
         return max(n // self.esc_frac, 8)

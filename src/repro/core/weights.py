@@ -18,10 +18,12 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from . import fixed
+from . import entropy, fixed, packing
 from .collectives import CodecConfig
 
 MIN_COMPRESS_SIZE = 1 << 12   # leaves below 4096 elements stay raw
+WEIGHT_K = 6                  # exponent-code width for at-rest serving weights
+LANES = 32                    # bit-plane word width (columns per u32)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -110,3 +112,195 @@ def fsdp_gather_params(cparams: Any, axis_name: str,
 
     return jax.tree_util.tree_map(
         one, cparams, is_leaf=lambda l: isinstance(l, MaybeCompressed))
+
+
+# ---------------------------------------------------------------------------
+# serving-side packed store: whole-model weights in the LEXI-FW 2-D layout
+# consumed by the fused ``kernels.decompress_matmul`` kernel
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedWeight:
+    """A bulk 2-D (or stacked-2-D) weight leaf in LEXI-FW packed form.
+
+    Fields follow ``kernels.ref.compress_weight_2d``, with any leading
+    stack dims (scan-stacked layers, MoE experts) prepended to every child
+    so ``lax.scan`` / indexing slice all three buffers coherently:
+
+      signman   (..., K, N)       u8   sign<<7 | mantissa
+      planes    (..., k, K, N/32) u32  bit-planes of k-bit exponent codes
+      dict_syms (..., 2^k)        u8   per-slice exponent dictionary
+
+    ``aux`` carries ``k`` and the *resolved* compute backend baked in at
+    pack time ("pallas" | "interpret" | "jax"), so jit caches key on the
+    dispatch decision and model code needs no config threading.  The format
+    is escape-free by construction: the packer verifies zero escapes per
+    slice and leaves escaping tensors raw.
+    """
+
+    signman: Any
+    planes: Any
+    dict_syms: Any
+    k: int = WEIGHT_K
+    backend: str = "jax"
+
+    @property
+    def shape(self):          # logical (unpacked) weight shape
+        return self.signman.shape
+
+    @property
+    def ndim(self):
+        return self.signman.ndim
+
+    def tree_flatten(self):
+        return ((self.signman, self.planes, self.dict_syms),
+                (self.k, self.backend))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], children[2], aux[0], aux[1])
+
+
+def _is_packed(x) -> bool:
+    return isinstance(x, PackedWeight)
+
+
+def unpack_weight(pw: PackedWeight) -> jax.Array:
+    """Exact in-graph decode of a packed leaf back to bf16 (the pure-JAX
+    reference plane — mirrors ``kernels.ref.decompress_matmul_ref``'s
+    decode, vmapped over any leading stack dims)."""
+
+    def one(sm, pls, d):
+        codes = packing.bitplane_unpack(jnp.moveaxis(pls, 0, -2), pw.k)
+        exp = d[codes.astype(jnp.int32)]
+        return entropy.jnp_from_u16(entropy.jnp_combine(sm, exp))
+
+    fn = one
+    for _ in range(pw.signman.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(pw.signman, pw.planes, pw.dict_syms)
+
+
+def _leaf_eligible(path: str, x, spec, tp: int) -> bool:
+    """Bulk 2-D matmul operands only.  Raw stays raw when:
+
+    - it is an embedding table (consumed by gather, not matmul),
+    - it is small (dictionary overhead beats the savings), not bf16, or <2-D,
+    - its tp-local column count breaks the 32-lane bit-plane alignment, or
+    - (checked later, at pack time) any 2-D slice needs escape symbols.
+    """
+    if "embed" in path:
+        return False
+    if not hasattr(x, "dtype") or x.dtype != jnp.bfloat16 or x.ndim < 2:
+        return False
+    if x.shape[-2] * x.shape[-1] < MIN_COMPRESS_SIZE:
+        return False
+    dims = tuple(spec) if spec is not None else ()
+    dims = dims + (None,) * (x.ndim - len(dims))
+    n_local = x.shape[-1] // tp if dims[-1] is not None else x.shape[-1]
+    return n_local % LANES == 0
+
+
+def _pack_leaf(x, max_k: int):
+    """Host-side pack of one leaf at the smallest escape-free code width
+    k ∈ {4..max_k} (weight exponent histograms are narrow, so most leaves
+    fit k=4 → 12 of 16 bits per element).  All leading-dim slices must
+    agree on k (it is leaf-level aux).  Returns ``(fields, k)`` or None if
+    even max_k would need escapes — that leaf stays raw."""
+    import numpy as np
+
+    from ..kernels import ref   # lazy: core must not import kernels at load
+
+    arr = np.asarray(x)
+    lead = arr.shape[:-2]
+    for k in range(4, max_k + 1):
+        sms, plss, ds = [], [], []
+        for idx in np.ndindex(*lead):
+            sm, pls, d, nesc = ref.compress_weight_2d(jnp.asarray(arr[idx]),
+                                                      k=k)
+            if int(nesc) != 0:
+                break
+            sms.append(np.asarray(sm))
+            plss.append(np.asarray(pls))
+            ds.append(np.asarray(d))
+        else:
+            def stack(parts):
+                if not lead:
+                    return jnp.asarray(parts[0])
+                return jnp.asarray(
+                    np.stack(parts).reshape(lead + parts[0].shape))
+            return (stack(sms), stack(plss), stack(ds)), k
+    return None
+
+
+def _packed_spec(spec, ndim: int, k: int, backend: str):
+    """Derive the PartitionSpec node for a packed leaf from the raw leaf's
+    spec: signman keeps it, planes gain an unsharded ``k`` axis before K
+    (the N/32 word axis shards exactly like N — eligibility guarantees the
+    local column count is lane-aligned), the per-slice dictionary keeps
+    only the leading stack dims.  The node's aux (k, backend) must equal
+    the param node's so shard_map's tree matching lines the specs up."""
+    from jax.sharding import PartitionSpec as P
+    dims = tuple(spec) if spec is not None else ()
+    dims = dims + (None,) * (ndim - len(dims))
+    lead, kd, nd = dims[:-2], dims[-2], dims[-1]
+    return PackedWeight(P(*lead, kd, nd),
+                        P(*lead, None, kd, nd),
+                        P(*lead, None), k, backend)
+
+
+def pack_serving_params(params: Any, pspecs: Any, *, k: int = WEIGHT_K,
+                        backend: str = "jax", tp: int = 1):
+    """Whole-model serving param store: bulk 2-D leaves -> PackedWeight
+    (escape-free LEXI-FW layout at the smallest code width ≤ ``k``),
+    everything else raw.  Returns ``(packed_params, packed_pspecs)`` with
+    spec nodes swapped to match.  Idempotent: already-packed leaves pass
+    through (disagg replicas share one params tree)."""
+    from jax.sharding import PartitionSpec as P
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=_is_packed)
+    # PartitionSpec is tuple-like, so flatten the spec tree with its own
+    # is_leaf (None / P / PackedWeight) instead of flatten_up_to
+    sflat, sdef = jax.tree_util.tree_flatten(
+        pspecs, is_leaf=lambda s: s is None or isinstance(s, (P, PackedWeight)))
+    assert len(flat) == len(sflat), (len(flat), len(sflat))
+    out_p, out_s = [], []
+    for (path, x), spec in zip(flat, sflat):
+        pstr = jax.tree_util.keystr(path)
+        if _is_packed(x):
+            out_p.append(x)
+            out_s.append(spec if _is_packed(spec)
+                         else _packed_spec(spec, x.ndim, x.k, x.backend))
+            continue
+        packed = (_pack_leaf(x, k)
+                  if _leaf_eligible(pstr, x, spec, tp) else None)
+        if packed is None:
+            out_p.append(x)
+            out_s.append(spec)
+        else:
+            fields, leaf_k = packed
+            out_p.append(PackedWeight(*fields, leaf_k, backend))
+            out_s.append(_packed_spec(spec, x.ndim, leaf_k, backend))
+    return (jax.tree_util.tree_unflatten(treedef, out_p),
+            jax.tree_util.tree_unflatten(sdef, out_s))
+
+
+def weight_plane_bytes(params: Any) -> tuple:
+    """(stored, raw_bf16) HBM bytes of the serving weight store — the
+    per-decode-step weight traffic, analytically, the way
+    ``models/cache.py:page_bytes`` meters KV bytes.  ``stored`` counts
+    packed buffers for PackedWeight leaves and full bf16 for raw ones;
+    ``raw_bf16`` is the same store with every leaf unpacked."""
+    stored = raw = 0
+    for leaf in jax.tree_util.tree_leaves(params, is_leaf=_is_packed):
+        if _is_packed(leaf):
+            stored += sum(int(b.size) * b.dtype.itemsize
+                          for b in (leaf.signman, leaf.planes,
+                                    leaf.dict_syms))
+            raw += int(leaf.signman.size) * 2
+        else:
+            stored += int(leaf.size) * leaf.dtype.itemsize
+            raw += int(leaf.size) * leaf.dtype.itemsize
+    return stored, raw

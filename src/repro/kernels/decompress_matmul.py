@@ -11,10 +11,15 @@ the decode phase (weight-bandwidth-bound).
 
 W_packed = (signman (K,N) u8, planes (k,K,N/32) u32, dict (2^k,) u8), as
 produced by ``ref.compress_weight_2d``.  Escape-free tiles only (k=6 at-rest
-weights never escape in practice; ``ops.decompress_matmul`` verifies).
+weights never escape in practice; the param packer verifies at pack time).
 
-Block shapes are MXU-aligned (bm, bk, bn multiples of 128 for the dot dims;
-bn additionally a multiple of 32 for the planes).
+Serving shapes are arbitrary (M=1 decode rows, tp-sharded N), so the wrapper
+pads every dim up to a block multiple and slices the result: padded x rows/
+columns are zero, so the padded K tail contributes exactly 0.0 to every
+accumulator (0 × decoded-garbage == 0 — padded plane words decode to
+dict[0]'s exponent with a zero mantissa, a finite value), and padded M/N
+output is sliced off.  N itself must be a multiple of 32 (the bit-plane
+lane width — a pack-time invariant of the format, not a block-shape limit).
 """
 
 from __future__ import annotations
@@ -38,10 +43,10 @@ def _dm_kernel(x_ref, sm_ref, planes_ref, dict_ref, out_ref, *, k: int):
         bits = (words[b][..., None] >> lane) & jnp.uint32(1)
         codes = codes | (bits << jnp.uint32(b))
     codes = codes.reshape(sm.shape)                   # (bk, bn)
-    d = dict_ref[...]
-    exp = jnp.zeros(sm.shape, jnp.uint16)
-    for j in range(d.shape[0]):                       # unrolled select-sum
-        exp = jnp.where(codes == jnp.uint32(j), jnp.uint16(0) + d[j], exp)
+    # hoisted dictionary LUT (pre-widened to u16 by the wrapper, pinned in
+    # VMEM by its constant index_map): one gather replaces the former
+    # 2^k-iteration where-select — the same pattern decode_attend uses.
+    exp = jnp.take(dict_ref[...], codes.astype(jnp.int32))
     smu = sm.astype(jnp.uint16)
     u16 = ((smu & jnp.uint16(0x80)) << 8) | (exp << 7) | (smu & jnp.uint16(0x7F))
     w = jax.lax.bitcast_convert_type(u16, jnp.bfloat16)
@@ -61,22 +66,36 @@ def decompress_matmul(x: jax.Array, signman: jax.Array, planes: jax.Array,
                       dict_syms: jax.Array, *, k: int = 6, bm: int = 128,
                       bk: int = 128, bn: int = 256,
                       interpret: bool = True) -> jax.Array:
-    """x (M,K) bf16 @ packed W (K,N) -> (M,N) f32."""
+    """x (M,K) bf16 @ packed W (K,N) -> (M,N) f32.  Any M/K/N (N % 32 == 0):
+    non-block-multiple dims are padded in, computed, and sliced back out."""
     m, kk = x.shape
     _, n = signman.shape
+    assert n % LANES == 0, "packed N must be a multiple of 32 (bit-plane lanes)"
     bm, bk, bn = min(bm, m), min(bk, kk), min(bn, n)
-    assert m % bm == 0 and kk % bk == 0 and n % bn == 0 and bn % LANES == 0
-    grid = (m // bm, n // bn, kk // bk)
-    return pl.pallas_call(
+    mp = -(-m // bm) * bm
+    kp = -(-kk // bk) * bk
+    np_ = -(-n // bn) * bn
+    if mp != m or kp != kk:
+        x = jnp.pad(x, ((0, mp - m), (0, kp - kk)))
+    if kp != kk or np_ != n:
+        signman = jnp.pad(signman, ((0, kp - kk), (0, np_ - n)))
+        planes = jnp.pad(planes, ((0, 0), (0, kp - kk),
+                                  (0, (np_ - n) // LANES)))
+    dict_lut = dict_syms.astype(jnp.uint16)
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
         functools.partial(_dm_kernel, k=k),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
             pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
             pl.BlockSpec((k, bk, bn // LANES), lambda i, j, l: (0, l, j)),
-            pl.BlockSpec((dict_syms.shape[0],), lambda i, j, l: (0,)),
+            pl.BlockSpec((dict_lut.shape[0],), lambda i, j, l: (0,)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
         interpret=interpret,
-    )(x, signman, planes, dict_syms)
+    )(x, signman, planes, dict_lut)
+    if mp != m or np_ != n:
+        out = out[:m, :n]
+    return out

@@ -65,6 +65,57 @@ def resolve_decode_backend(codec=None) -> str:
     return be
 
 
+# ---------------------------------------------------------------------------
+# serving weight-matmul backend dispatch
+#
+# ``CodecConfig.weight_backend`` selects how matmuls against PackedWeight
+# leaves (the compressed-at-rest serving store, ``core.weights``) compute.
+# ``models.layers.matmul_f32``/``pdot`` route every weight-consuming einsum
+# through here, so attention/MLP/MoE/LM-head cannot diverge:
+#
+#   auto      -- pallas on TPU, jax elsewhere
+#   pallas    -- fused decompress_matmul (packed tiles HBM->VMEM, decoded on
+#                the VPU, fed to the MXU; bf16 W never lands in HBM)
+#   interpret -- the same kernel under the Pallas interpreter (CPU testing)
+#   jax       -- exact in-graph unpack + einsum (the CPU correctness gate:
+#                bit-identical to serving from raw bf16 weights)
+# ---------------------------------------------------------------------------
+
+WEIGHT_BACKENDS = ("auto", "pallas", "interpret", "jax")
+
+
+def resolve_weight_backend(codec=None) -> str:
+    """Resolve a CodecConfig's weight_backend to a concrete backend name."""
+    be = getattr(codec, "weight_backend", "auto") if codec is not None \
+        else "auto"
+    if be not in WEIGHT_BACKENDS:
+        raise ValueError(f"weight_backend must be one of {WEIGHT_BACKENDS}, "
+                         f"got {be!r}")
+    if be == "auto":
+        return "pallas" if on_tpu() else "jax"
+    return be
+
+
+def matmul_packed(x: jax.Array, pw) -> jax.Array:
+    """``x @ unpack(pw)`` in f32 for a ``core.weights.PackedWeight`` leaf,
+    on the backend baked into the leaf at pack time.
+
+    The fused path handles 2-D packed leaves (stacked leaves are sliced by
+    scan/indexing before they get here, but vmapped closures can still see
+    them — those fall back to the exact path, as does backend "jax")."""
+    from repro.core import weights as W
+    be = pw.backend
+    if be == "jax" or pw.signman.ndim != 2:
+        w = W.unpack_weight(pw)
+        return jnp.einsum("...k,kn->...n", x, w,
+                          preferred_element_type=jnp.float32)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.bfloat16)
+    out = _dm(x2, pw.signman, pw.planes, pw.dict_syms, k=pw.k,
+              interpret=(be == "interpret") or _interpret())
+    return out.reshape(lead + (out.shape[-1],))
+
+
 def _blockify(x: jax.Array, block: int) -> Tuple[jax.Array, int]:
     """Flatten + zero-pad to (G, block)."""
     flat = x.reshape(-1)

@@ -67,7 +67,8 @@ def build_cfg_run(args):
     codec = (CodecConfig(cache_block=args.cache_block) if args.codec == "on"
              else dataclasses.replace(CodecConfig.off(),
                                       cache_block=args.cache_block))
-    codec = dataclasses.replace(codec, decode_backend=args.decode_backend)
+    codec = dataclasses.replace(codec, decode_backend=args.decode_backend,
+                                weight_backend=args.weight_backend)
     return cfg, RunConfig(codec=codec)
 
 
@@ -108,7 +109,8 @@ def run_decode_host(args) -> int:
     cfg, run = build_cfg_run(args)
     eng = ServeEngine(cfg, run, tp=args.tp, n_slots=args.slots,
                       max_len=args.max_len, seed=args.seed,
-                      eos_id=args.eos_id, store_pages=args.store_pages)
+                      eos_id=args.eos_id, store_pages=args.store_pages,
+                      compress_weights=args.compress_weights)
     host = PageHost(DecodeReplica(eng), _fingerprint(args, cfg, run),
                     max_store_pages=args.store_pages)
     listener = socket.create_server((args.host, args.port))
@@ -132,7 +134,8 @@ def run_driver(args) -> int:
                        n_slots=args.slots, max_len=args.max_len,
                        seed=args.seed, eos_id=args.eos_id,
                        transport=transport, streaming=args.streaming,
-                       decode_addrs=addrs, store_pages=args.store_pages)
+                       decode_addrs=addrs, store_pages=args.store_pages,
+                       compress_weights=args.compress_weights)
     reqs = demo_requests(cfg, args)
     results, st = eng.run(reqs)
     transport.close()
@@ -214,7 +217,10 @@ def run_selftest(args) -> int:
                   "--tp", str(args.tp), "--slots", str(args.slots),
                   "--max-len", str(args.max_len), "--seed", str(args.seed),
                   "--decode-backend", args.decode_backend,
+                  "--weight-backend", args.weight_backend,
                   "--store-pages", str(args.store_pages)]
+    if args.compress_weights:
+        model_args += ["--compress-weights"]
     if args.eos_id is not None:
         model_args += ["--eos-id", str(args.eos_id)]
     proc, port = spawn_decode_host(model_args, tp=args.tp)
@@ -246,6 +252,14 @@ def main(argv=None) -> int:
     ap.add_argument("--codec", default="on", choices=["on", "off"])
     ap.add_argument("--cache-block", type=int, default=8)
     ap.add_argument("--decode-backend", default="jax",
+                    choices=["auto", "pallas", "interpret", "jax"])
+    ap.add_argument("--compress-weights", action="store_true",
+                    help="serve from the LEXI-packed at-rest weight store "
+                         "(both replica kinds; token streams unchanged)")
+    # default "auto" (NOT "jax" like --decode-backend): weight_backend is
+    # part of the codec repr the config fingerprint hashes, and external
+    # drivers (tests, bench) build codecs with the "auto" default
+    ap.add_argument("--weight-backend", default="auto",
                     choices=["auto", "pallas", "interpret", "jax"])
     ap.add_argument("--tp", type=int, default=1)
     ap.add_argument("--slots", type=int, default=2)

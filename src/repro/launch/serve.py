@@ -48,6 +48,14 @@ def main(argv=None) -> int:
                     choices=["auto", "pallas", "interpret", "jax"],
                     help="decode-attention backend (fused Pallas kernels "
                          "vs pure-JAX scan)")
+    ap.add_argument("--compress-weights", action="store_true",
+                    help="continuous/disagg: serve from the LEXI-packed "
+                         "at-rest weight store (fused JIT decompress+matmul "
+                         "on the decode path; token streams are identical)")
+    ap.add_argument("--weight-backend", default="auto",
+                    choices=["auto", "pallas", "interpret", "jax"],
+                    help="how packed weights are multiplied (fused "
+                         "decompress_matmul vs exact unpack-then-einsum)")
     ap.add_argument("--eos-id", type=int, default=None,
                     help="continuous mode: evict a slot when it emits "
                          "this token id")
@@ -79,7 +87,8 @@ def main(argv=None) -> int:
     codec = {"full": CodecConfig(cache_block=32),
              "weights": CodecConfig.weights_only(),
              "off": CodecConfig.off()}[args.codec]
-    codec = dataclasses.replace(codec, decode_backend=args.decode_backend)
+    codec = dataclasses.replace(codec, decode_backend=args.decode_backend,
+                                weight_backend=args.weight_backend)
     run = RunConfig(codec=codec)
     cfg = get_config(args.arch)
     if args.reduced:
@@ -153,14 +162,16 @@ def _serve_continuous(cfg, run, tp: int, args) -> int:
                            n_decode=args.decode_replicas,
                            n_slots=args.slots, max_len=max_len,
                            seed=run.seed, eos_id=args.eos_id,
-                           stop_seqs=stops, streaming=args.streaming)
+                           stop_seqs=stops, streaming=args.streaming,
+                           compress_weights=args.compress_weights)
         results, st = eng.run(reqs)
         print("[serve] disagg:", format_disagg_stats(st))
     else:
         eng = ServeEngine(cfg, run, tp=tp, n_slots=args.slots,
                           max_len=max_len, seed=run.seed,
                           eos_id=args.eos_id, stop_seqs=stops,
-                          prefix_sharing=not args.no_prefix_sharing)
+                          prefix_sharing=not args.no_prefix_sharing,
+                          compress_weights=args.compress_weights)
         results, st = eng.run(reqs)
         print("[serve] continuous:", format_stats(st))
     print("[serve] sample continuations:",

@@ -29,7 +29,8 @@ from repro.configs.base import ModelConfig, RunConfig
 from repro.core import collectives as cl
 from repro.kernels.decode_attend import WINDOW_NONE
 from . import layers
-from .layers import AttnSpec, apply_rope, pdot, rope_tables
+from .layers import (AttnSpec, apply_rope, matmul_f32, pdot, raw_weight,
+                     rope_tables)
 from .params import PDef
 
 
@@ -140,12 +141,8 @@ def project_qkv(cfg: ModelConfig, p, xg: jax.Array, positions: jax.Array,
         dsh = cfg.d_model // tp
         i = jax.lax.axis_index("model") * dsh
         xs = jax.lax.dynamic_slice_in_dim(xg, i, dsh, axis=-1)
-        k = jax.lax.psum(jnp.einsum(
-            "bsk,kn->bsn", xs, p["wk"],
-            preferred_element_type=jnp.float32), "model")
-        v = jax.lax.psum(jnp.einsum(
-            "bsk,kn->bsn", xs, p["wv"],
-            preferred_element_type=jnp.float32), "model")
+        k = jax.lax.psum(matmul_f32(xs, p["wk"]), "model")
+        v = jax.lax.psum(matmul_f32(xs, p["wv"]), "model")
         if cfg.qkv_bias:
             k, v = k + p["bk"].astype(jnp.float32), v + p["bv"].astype(jnp.float32)
         k = _heads(k.astype(jnp.bfloat16), nkv, hd)
@@ -190,15 +187,12 @@ def project_qkv_mla(cfg: ModelConfig, p, xg: jax.Array,
 
     # latent: row-parallel + psum (shared across heads); local at tp=1
     if tp == 1:
-        lat = jnp.einsum("bsk,kn->bsn", xg, p["w_dkv"],
-                         preferred_element_type=jnp.float32
-                         ).astype(jnp.bfloat16)
+        lat = matmul_f32(xg, p["w_dkv"]).astype(jnp.bfloat16)
     else:
         dsh = cfg.d_model // tp
         i = jax.lax.axis_index("model") * dsh
         xs = jax.lax.dynamic_slice_in_dim(xg, i, dsh, axis=-1)
-        lat = jax.lax.psum(jnp.einsum("bsk,kn->bsn", xs, p["w_dkv"],
-                                      preferred_element_type=jnp.float32),
+        lat = jax.lax.psum(matmul_f32(xs, p["w_dkv"]),
                            "model").astype(jnp.bfloat16)
     c_kv = layers.rms_norm(lat[..., :m.kv_lora_rank], p["kv_norm"],
                            cfg.norm_eps)
@@ -248,8 +242,7 @@ def attn_forward(cfg: ModelConfig, run: RunConfig, p, xg: jax.Array,
         qkv.q, qkv.k, qkv.v, positions, positions, aspec, window=window,
         chunk_q=run.attn_chunk_q, chunk_kv=run.attn_chunk_kv)
     out = out.transpose(0, 2, 1, 3).reshape(b, s, hq_loc * hd_v)
-    o = jnp.einsum("bsk,kn->bsn", out, p["wo"],
-                   preferred_element_type=jnp.float32)   # partial over model
+    o = matmul_f32(out, p["wo"])                         # partial over model
     return o, cache
 
 
@@ -284,8 +277,7 @@ def decode_qkv(cfg: ModelConfig, p, h: jax.Array, pos, tp: int):
         dsh = cfg.d_model // tp
         i = jax.lax.axis_index("model") * dsh
         hs = jax.lax.dynamic_slice_in_dim(h, i, dsh, axis=-1)
-        lat = jax.lax.psum(jnp.einsum("bsk,kn->bsn", hs, p["w_dkv"],
-                                      preferred_element_type=jnp.float32),
+        lat = jax.lax.psum(matmul_f32(hs, p["w_dkv"]),
                            "model").astype(jnp.bfloat16)[:, 0]      # (B, lora+dr)
         c_kv = layers.rms_norm(lat[..., :m.kv_lora_rank], p["kv_norm"],
                                cfg.norm_eps)
@@ -297,7 +289,7 @@ def decode_qkv(cfg: ModelConfig, p, h: jax.Array, pos, tp: int):
         # absorbed query: q_lat = [q_nope @ W_uk(head), q_rope]
         q_nope, q_rope = q[..., :dn], q[..., dn:]
         q_rope = apply_rope(q_rope, cos, sin)
-        w_uk = p["w_uk"].reshape(m.kv_lora_rank, hq_loc, dn)
+        w_uk = raw_weight(p["w_uk"]).reshape(m.kv_lora_rank, hq_loc, dn)
         q_lat = jnp.einsum("bhsd,lhd->bhsl", q_nope.astype(jnp.float32),
                            w_uk.astype(jnp.float32)).astype(jnp.bfloat16)
         q_full = jnp.concatenate([q_lat, q_rope], axis=-1)  # (B,hq_loc,1,lora+dr)
@@ -317,12 +309,8 @@ def decode_qkv(cfg: ModelConfig, p, h: jax.Array, pos, tp: int):
         dsh = cfg.d_model // tp
         i = jax.lax.axis_index("model") * dsh
         hs = jax.lax.dynamic_slice_in_dim(h, i, dsh, axis=-1)
-        k = jax.lax.psum(jnp.einsum("bsk,kn->bsn", hs, p["wk"],
-                                    preferred_element_type=jnp.float32),
-                         "model")
-        v = jax.lax.psum(jnp.einsum("bsk,kn->bsn", hs, p["wv"],
-                                    preferred_element_type=jnp.float32),
-                         "model")
+        k = jax.lax.psum(matmul_f32(hs, p["wk"]), "model")
+        v = jax.lax.psum(matmul_f32(hs, p["wv"]), "model")
         if cfg.qkv_bias:
             k, v = k + p["bk"].astype(jnp.float32), v + p["bv"].astype(jnp.float32)
         k = k.astype(jnp.bfloat16).reshape(b, 1, nkv, hd).transpose(0, 2, 1, 3)
@@ -356,12 +344,11 @@ def decode_out(cfg: ModelConfig, p, merged: jax.Array, tp: int) -> jax.Array:
     loc = jax.lax.dynamic_slice_in_dim(merged, ti * hq_loc, hq_loc, axis=1)
     if cfg.mla is not None:
         m = cfg.mla
-        w_uv = p["w_uv"].reshape(m.kv_lora_rank, hq_loc, m.v_dim)
+        w_uv = raw_weight(p["w_uv"]).reshape(m.kv_lora_rank, hq_loc, m.v_dim)
         loc = jnp.einsum("bhsl,lhv->bhsv", loc.astype(jnp.float32),
                          w_uv.astype(jnp.float32)).astype(jnp.bfloat16)
     loc = loc.transpose(0, 2, 1, 3).reshape(b, 1, -1)
-    return jnp.einsum("bsk,kn->bsn", loc, p["wo"],
-                      preferred_element_type=jnp.float32)
+    return matmul_f32(loc, p["wo"])
 
 
 def new_vals_width_matches(cfg: ModelConfig) -> int:

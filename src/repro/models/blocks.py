@@ -100,7 +100,12 @@ def gather_fsdp(params, dims, run: RunConfig, in_scan: bool = True):
             return cl.lexi_all_gather(w, axes, run.codec, gather_axis=ax)
         return jax.lax.all_gather(w, axes, axis=ax, tiled=True)
 
-    return jax.tree_util.tree_map(one, params, dims)
+    # PackedWeight leaves are never FSDP-sharded (serving meshes are
+    # data=1): is_leaf stops the map from descending into their children,
+    # which would misalign against dims' None.
+    return jax.tree_util.tree_map(
+        one, params, dims,
+        is_leaf=lambda w: isinstance(w, layers.PackedWeight))
 
 
 # ---------------------------------------------------------------------------
@@ -181,8 +186,7 @@ def block_forward(cfg: ModelConfig, run: RunConfig, p, x: jax.Array,
         m = p["mlp"]
         act = layers.swiglu(layers.pdot(hg, m["w_gate"]),
                             layers.pdot(hg, m["w_up"]))
-        y = jnp.einsum("bsk,kn->bsn", act, m["w_down"],
-                       preferred_element_type=jnp.float32)
+        y = layers.matmul_f32(act, m["w_down"])
         y = (y.astype(jnp.bfloat16) if local else
              jax.lax.psum_scatter(y.astype(jnp.bfloat16), "model",
                                   scatter_dimension=1, tiled=True))
@@ -214,11 +218,9 @@ def cross_attn_forward(cfg: ModelConfig, run: RunConfig, p, xg: jax.Array,
         dsh = cfg.d_model // tp
         i = jax.lax.axis_index("model") * dsh
         ms = jax.lax.dynamic_slice_in_dim(memory, i, dsh, axis=-1)
-        k = jax.lax.psum(jnp.einsum("bsk,kn->bsn", ms, p["wk"],
-                                    preferred_element_type=jnp.float32),
+        k = jax.lax.psum(layers.matmul_f32(ms, p["wk"]),
                          "model").astype(jnp.bfloat16)
-        v = jax.lax.psum(jnp.einsum("bsk,kn->bsn", ms, p["wv"],
-                                    preferred_element_type=jnp.float32),
+        v = jax.lax.psum(layers.matmul_f32(ms, p["wv"]),
                          "model").astype(jnp.bfloat16)
         k = k.reshape(b, -1, nkv, hd).transpose(0, 2, 1, 3)
         v = v.reshape(b, -1, nkv, hd).transpose(0, 2, 1, 3)
@@ -232,6 +234,5 @@ def cross_attn_forward(cfg: ModelConfig, run: RunConfig, p, xg: jax.Array,
                                  chunk_q=run.attn_chunk_q,
                                  chunk_kv=run.attn_chunk_kv)
     out = out.transpose(0, 2, 1, 3).reshape(b, s, hq_loc * hd)
-    o = jnp.einsum("bsk,kn->bsn", out, p["wo"],
-                   preferred_element_type=jnp.float32)
+    o = layers.matmul_f32(out, p["wo"])
     return o, ((k, v) if want_cache else None)

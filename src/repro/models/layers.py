@@ -21,11 +21,31 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.weights import PackedWeight, unpack_weight
+from repro.kernels import ops as kops
 
-def pdot(x: jax.Array, w: jax.Array, bias: jax.Array | None = None) -> jax.Array:
+
+def matmul_f32(x: jax.Array, w) -> jax.Array:
+    """``x @ w`` with f32 accumulation — the single weight-consuming matmul
+    primitive.  ``w`` is either a raw array or a ``PackedWeight`` leaf of
+    the compressed serving store; packed leaves dispatch to
+    ``kernels.ops.matmul_packed`` on the backend baked in at pack time
+    (fused decompress+matmul, or exact unpack-then-einsum)."""
+    if isinstance(w, PackedWeight):
+        return kops.matmul_packed(x, w)
+    return jnp.einsum("...k,kn->...n", x, w,
+                      preferred_element_type=jnp.float32)
+
+
+def raw_weight(w):
+    """Materialize a weight for non-matmul consumers (gathers, reshapes):
+    exact in-graph decode for PackedWeight, identity for raw arrays."""
+    return unpack_weight(w) if isinstance(w, PackedWeight) else w
+
+
+def pdot(x: jax.Array, w, bias: jax.Array | None = None) -> jax.Array:
     """x @ w with f32 accumulation, bf16 result (MXU dtype policy)."""
-    out = jnp.einsum("...k,kn->...n", x, w,
-                     preferred_element_type=jnp.float32)
+    out = matmul_f32(x, w)
     if bias is not None:
         out = out + bias.astype(jnp.float32)
     return out.astype(jnp.bfloat16)

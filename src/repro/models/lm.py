@@ -182,8 +182,7 @@ def chunked_xent(cfg: ModelConfig, run: RunConfig, x: jax.Array,
 
     def step(acc, inp):
         xc, lc = inp                                   # (B,c,D), (B,c)
-        logits = jnp.einsum("bcd,dv->bcv", xc, head,
-                            preferred_element_type=jnp.float32)
+        logits = layers.matmul_f32(xc, head)
         if cfg.final_softcap is not None:
             logits = layers.softcap(logits, cfg.final_softcap)
         logits = jnp.where(col_ok[None, None, :], logits, layers.NEG_INF)
@@ -213,8 +212,7 @@ def logits_for(cfg: ModelConfig, run: RunConfig, params, dims,
     without the mask greedy decode can emit out-of-vocab ids).
     """
     head = gathered_head(cfg, params, dims, run)
-    logits = jnp.einsum("bsd,dv->bsv", x, head,
-                        preferred_element_type=jnp.float32)
+    logits = layers.matmul_f32(x, head)
     if cfg.final_softcap is not None:
         logits = layers.softcap(logits, cfg.final_softcap)
     v_loc = head.shape[1]

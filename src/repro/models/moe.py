@@ -59,8 +59,7 @@ def moe_forward(cfg: ModelConfig, run: RunConfig, p, x: jax.Array,
     xt = x.reshape(n, d)
 
     # --- routing (local) ------------------------------------------------
-    logits = jnp.einsum("nd,de->ne", xt, p["router"],
-                        preferred_element_type=jnp.float32)
+    logits = layers.matmul_f32(xt, p["router"])
     probs = jax.nn.softmax(logits, axis=-1)
     gates, experts = jax.lax.top_k(probs, e.top_k)        # (n, k)
     gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
@@ -96,13 +95,14 @@ def moe_forward(cfg: ModelConfig, run: RunConfig, p, x: jax.Array,
     moved = moved.reshape(tp, el, cap, d).transpose(1, 0, 2, 3) \
         .reshape(el, tp * cap, d)                         # tokens per local expert
 
-    # --- expert FFN (local slice of experts) ----------------------------
+    # --- expert FFN (local slice of experts; stacked packed leaves are
+    # decoded per-expert in-graph via raw_weight) ------------------------
     h = layers.swiglu(
-        jnp.einsum("ecd,edf->ecf", moved, p["w_gate"],
+        jnp.einsum("ecd,edf->ecf", moved, layers.raw_weight(p["w_gate"]),
                    preferred_element_type=jnp.float32).astype(jnp.bfloat16),
-        jnp.einsum("ecd,edf->ecf", moved, p["w_up"],
+        jnp.einsum("ecd,edf->ecf", moved, layers.raw_weight(p["w_up"]),
                    preferred_element_type=jnp.float32).astype(jnp.bfloat16))
-    out = jnp.einsum("ecf,efd->ecd", h, p["w_down"],
+    out = jnp.einsum("ecf,efd->ecd", h, layers.raw_weight(p["w_down"]),
                      preferred_element_type=jnp.float32).astype(jnp.bfloat16)
 
     # --- return a2a + combine -------------------------------------------
@@ -119,8 +119,7 @@ def moe_forward(cfg: ModelConfig, run: RunConfig, p, x: jax.Array,
     if e.n_shared:
         hs = layers.swiglu(layers.pdot(xt, p["ws_gate"]),
                            layers.pdot(xt, p["ws_up"]))
-        ys = jnp.einsum("nf,fd->nd", hs, p["ws_down"],
-                        preferred_element_type=jnp.float32)
+        ys = layers.matmul_f32(hs, p["ws_down"])
         y = y + (ys if tp == 1
                  else jax.lax.psum(ys.astype(jnp.bfloat16), "model"
                                    ).astype(jnp.float32))

@@ -69,16 +69,12 @@ def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
 def _proj_bc(cfg: ModelConfig, p, xg: jax.Array, tp: int) -> jax.Array:
     """Row-parallel shared B/C projection (B,S,2N) + psum (local at tp=1)."""
     if tp == 1:
-        return jnp.einsum("bsk,kn->bsn", xg, p["w_bc"],
-                          preferred_element_type=jnp.float32
-                          ).astype(jnp.bfloat16)
+        return layers.matmul_f32(xg, p["w_bc"]).astype(jnp.bfloat16)
     dsh = cfg.d_model // tp
     i = jax.lax.axis_index("model") * dsh
     xs = jax.lax.dynamic_slice_in_dim(xg, i, dsh, axis=-1)
     return jax.lax.psum(
-        jnp.einsum("bsk,kn->bsn", xs, p["w_bc"],
-                   preferred_element_type=jnp.float32), "model"
-    ).astype(jnp.bfloat16)
+        layers.matmul_f32(xs, p["w_bc"]), "model").astype(jnp.bfloat16)
 
 
 def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
@@ -152,18 +148,19 @@ def ssm_forward(cfg: ModelConfig, run: RunConfig, p, xg: jax.Array,
 
     zx = layers.pdot(xg, p["w_zx"])                     # (B,S,2*di_loc)
     z, xin = zx[..., :di_loc], zx[..., di_loc:]
-    dt = jnp.einsum("bsk,kn->bsn", xg, p["w_dt"],
-                    preferred_element_type=jnp.float32)  # (B,S,nh_loc)
+    dt = layers.matmul_f32(xg, p["w_dt"])               # (B,S,nh_loc)
     bc = _proj_bc(cfg, p, xg, tp)                       # (B,S,2N)
 
     # depthwise causal conv (+silu) on x and shared B/C; keep the raw tails
-    # (pre-conv) for the decode-phase conv ring buffers.
+    # (pre-conv) for the decode-phase conv ring buffers.  conv weights are
+    # consumed by slice/broadcast, not matmul -> raw_weight (decoded
+    # in-graph if the store packed them)
     ti = jax.lax.axis_index("model") if tp > 1 else 0
     convx_w = jax.lax.dynamic_slice_in_dim(
-        p["conv_x"], ti * di_loc, di_loc, axis=1)
+        layers.raw_weight(p["conv_x"]), ti * di_loc, di_loc, axis=1)
     xin_raw, bc_raw = xin, bc
     xin = _causal_conv(xin, convx_w)
-    bc = _causal_conv(bc, p["conv_bc"])
+    bc = _causal_conv(bc, layers.raw_weight(p["conv_bc"]))
     b_, c_ = bc[..., :n], bc[..., n:]
 
     a = -jnp.exp(p["a_log"].astype(jnp.float32))        # (nh_loc,)
@@ -176,8 +173,7 @@ def ssm_forward(cfg: ModelConfig, run: RunConfig, p, xg: jax.Array,
     y = layers.rms_norm(
         y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32)),
         p["gate_norm"], cfg.norm_eps)
-    out = jnp.einsum("bsk,kn->bsn", y, p["w_out"],
-                     preferred_element_type=jnp.float32)  # partial over model
+    out = layers.matmul_f32(y, p["w_out"])              # partial over model
 
     if not want_state:
         return out, None
@@ -202,24 +198,20 @@ def ssm_decode_step(cfg: ModelConfig, p, x: jax.Array, state: SSMState,
 
     zx = layers.pdot(x, p["w_zx"])
     z, xin = zx[..., :di_loc], zx[..., di_loc:]         # (B,1,di_loc)
-    dt = jnp.einsum("bsk,kn->bsn", x, p["w_dt"],
-                    preferred_element_type=jnp.float32)[:, 0]  # (B,nh_loc)
+    dt = layers.matmul_f32(x, p["w_dt"])[:, 0]          # (B,nh_loc)
     if tp == 1:
-        bc = jnp.einsum("bsk,kn->bsn", x, p["w_bc"],
-                        preferred_element_type=jnp.float32
-                        ).astype(jnp.bfloat16)
+        bc = layers.matmul_f32(x, p["w_bc"]).astype(jnp.bfloat16)
     else:
         dsh = cfg.d_model // tp
         i = jax.lax.axis_index("model") * dsh
         xs = jax.lax.dynamic_slice_in_dim(x, i, dsh, axis=-1)
-        bc = jax.lax.psum(jnp.einsum("bsk,kn->bsn", xs, p["w_bc"],
-                                     preferred_element_type=jnp.float32),
+        bc = jax.lax.psum(layers.matmul_f32(xs, p["w_bc"]),
                           "model").astype(jnp.bfloat16)     # (B,1,2N)
 
     # conv ring update (pre-activation inputs in the ring)
     ti = jax.lax.axis_index("model") if tp > 1 else 0
     convx_w = jax.lax.dynamic_slice_in_dim(
-        p["conv_x"], ti * di_loc, di_loc, axis=1)
+        layers.raw_weight(p["conv_x"]), ti * di_loc, di_loc, axis=1)
     ring_x = jnp.concatenate([state.conv_x, xin], axis=1)   # (B,K,di_loc)
     ring_bc = jnp.concatenate([state.conv_bc, bc], axis=1)
     xin_c = jax.nn.silu(jnp.einsum(
@@ -227,7 +219,7 @@ def ssm_decode_step(cfg: ModelConfig, p, x: jax.Array, state: SSMState,
         convx_w.astype(jnp.float32)))[:, None]              # (B,1,di_loc)
     bc_c = jax.nn.silu(jnp.einsum(
         "bkc,kc->bc", ring_bc.astype(jnp.float32),
-        p["conv_bc"].astype(jnp.float32)))[:, None]
+        layers.raw_weight(p["conv_bc"]).astype(jnp.float32)))[:, None]
     b_, c_ = bc_c[..., :n], bc_c[..., n:]
 
     a = -jnp.exp(p["a_log"].astype(jnp.float32))
@@ -241,7 +233,6 @@ def ssm_decode_step(cfg: ModelConfig, p, x: jax.Array, state: SSMState,
     y = y.reshape(bs, 1, di_loc)
     y = layers.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)),
                         p["gate_norm"], cfg.norm_eps)
-    out = jnp.einsum("bsk,kn->bsn", y, p["w_out"],
-                     preferred_element_type=jnp.float32)
+    out = layers.matmul_f32(y, p["w_out"])
     new = SSMState(h=h, conv_x=ring_x[:, 1:], conv_bc=ring_bc[:, 1:])
     return out, new

@@ -495,15 +495,19 @@ class DisaggEngine:
                  transport: Optional[PageTransport] = None,
                  streaming: bool = False,
                  decode_addrs: Optional[Sequence[str]] = None,
-                 store_pages: int = 4096):
+                 store_pages: int = 4096, compress_weights: bool = False):
         if n_prefill < 1 or (n_decode < 1 and decode_addrs is None):
             raise ValueError("need at least one replica of each kind")
         self.cfg, self.run_cfg = cfg, run
         self.transport = transport if transport is not None \
             else LoopbackTransport(max_store_pages=store_pages)
+        # compress_weights reaches BOTH replica kinds via mk; packing is
+        # idempotent, so the shared param tree is packed once by the first
+        # prefill replica and passed through by the rest
         mk = dict(tp=tp, n_slots=n_slots, max_len=max_len, seed=seed,
                   eos_id=eos_id, stop_seqs=stop_seqs,
-                  max_fuse_steps=max_fuse_steps)
+                  max_fuse_steps=max_fuse_steps,
+                  compress_weights=compress_weights)
         self.decodes: List = []
         self._names: List[str] = []
         if decode_addrs is not None:

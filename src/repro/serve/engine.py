@@ -202,8 +202,7 @@ def _moe_decode(cfg: ModelConfig, run: RunConfig, p, x: jax.Array,
     e = cfg.moe
     b = x.shape[0]
     xt = x[:, 0]                                        # (B, D)
-    logits = jnp.einsum("nd,de->ne", xt, p["router"],
-                        preferred_element_type=jnp.float32)
+    logits = layers.matmul_f32(xt, p["router"])
     probs = jax.nn.softmax(logits, axis=-1)
     gates, experts = jax.lax.top_k(probs, e.top_k)
     gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
@@ -211,14 +210,19 @@ def _moe_decode(cfg: ModelConfig, run: RunConfig, p, x: jax.Array,
     ti = jax.lax.axis_index("model")
     lo = ti * el
     y = jnp.zeros((b, cfg.d_model), jnp.float32)
+    # expert stacks decoded once per step (raw_weight: exact in-graph decode
+    # for packed leaves), then gathered per hit as before
+    ewg = layers.raw_weight(p["w_gate"])
+    ewu = layers.raw_weight(p["w_up"])
+    ewd = layers.raw_weight(p["w_down"])
     # tokens are replicated: each shard evaluates only its experts' hits
     for j in range(e.top_k):                            # unrolled, small
         eid = experts[:, j]
         local = (eid >= lo) & (eid < lo + el)
         idx = jnp.clip(eid - lo, 0, el - 1)
-        wg = p["w_gate"][idx]                           # (B, D, F) gathered
-        wu = p["w_up"][idx]
-        wd = p["w_down"][idx]
+        wg = ewg[idx]                                   # (B, D, F) gathered
+        wu = ewu[idx]
+        wd = ewd[idx]
         h = layers.swiglu(
             jnp.einsum("bd,bdf->bf", xt, wg,
                        preferred_element_type=jnp.float32).astype(jnp.bfloat16),
@@ -230,8 +234,7 @@ def _moe_decode(cfg: ModelConfig, run: RunConfig, p, x: jax.Array,
     if e.n_shared:
         hs = layers.swiglu(layers.pdot(xt, p["ws_gate"]),
                            layers.pdot(xt, p["ws_up"]))
-        y = y + jnp.einsum("nf,fd->nd", hs, p["ws_down"],
-                           preferred_element_type=jnp.float32)
+        y = y + layers.matmul_f32(hs, p["ws_down"])
     return jax.lax.psum(y.astype(jnp.bfloat16), "model")[:, None]
 
 
@@ -288,8 +291,7 @@ def _ffn_decode(cfg: ModelConfig, run: RunConfig, p, x: jax.Array,
         m = p["mlp"]
         act = layers.swiglu(layers.pdot(h2, m["w_gate"]),
                             layers.pdot(h2, m["w_up"]))
-        y = jnp.einsum("bsk,kn->bsn", act, m["w_down"],
-                       preferred_element_type=jnp.float32)
+        y = layers.matmul_f32(act, m["w_down"])
         y = jax.lax.psum(y.astype(jnp.bfloat16), "model")
         if cfg.post_norm:
             y = layers.rms_norm(y, p["ln2b"], cfg.norm_eps)

@@ -102,6 +102,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import MeshConfig, ModelConfig, RunConfig
 from repro.core import collectives as cl
 from repro.core import packing
+from repro.core import weights as weights_mod
 from repro.kernels import ops as kernel_ops
 from repro.models import cache as cache_mod
 from repro.models import lm, params as PM
@@ -163,10 +164,23 @@ class ServeStats:
     cache_fetched_bytes: int = 0
     cache_reprefill_cols: int = 0    # warm columns lost on every tier
     cache_evicted_cols: int = 0      # hot columns evicted under pool pressure
+    # serving weight plane (compressed-at-rest params, core.weights): HBM
+    # bytes a decode step streams for weights — analytic, like
+    # models/cache.py:page_bytes meters KV bytes
+    weights_compressed: bool = False
+    weight_backend: str = "jax"      # resolved pallas | interpret | jax
+    weight_bytes_per_step: int = 0   # stored (packed + raw-leaf) bytes
+    weight_raw_bytes_per_step: int = 0   # same store, all-bf16
 
     @property
     def cache_ratio(self) -> float:
         return self.peak_cache_raw_bytes / max(self.peak_cache_bytes, 1)
+
+    @property
+    def weight_ratio(self) -> float:
+        """Packed/raw weight HBM traffic per decode step (≤1; 1.0 = raw)."""
+        return self.weight_bytes_per_step / max(self.weight_raw_bytes_per_step,
+                                                1)
 
 
 def _norm_stops(stop_seqs) -> Tuple[Tuple[int, ...], ...]:
@@ -259,7 +273,8 @@ class ServeEngine:
                  seed: int = 0, eos_id: Optional[int] = None,
                  stop_seqs: Optional[Sequence[Sequence[int]]] = None,
                  max_fuse_steps: int = 32, prefix_sharing: bool = True,
-                 store_pages: int = 4096, remote_fetch=None):
+                 store_pages: int = 4096, remote_fetch=None,
+                 compress_weights: bool = False):
         if cfg.encdec or cfg.frontend != "none":
             raise ValueError("continuous batching covers decoder-only, "
                              "text-frontend architectures")
@@ -286,6 +301,17 @@ class ServeEngine:
         self.params = (params if params is not None
                        else PM.init_params(self.table, jax.random.key(seed)))
         self._pspecs = PM.param_pspecs(self.table)
+        # serving weight plane: pack bulk 2-D leaves into the LEXI-FW
+        # at-rest layout (idempotent — disagg replicas share one tree) and
+        # swap the matching pspec nodes; every jitted fn below closes over
+        # self._pspecs, so the packed store flows into all dispatch paths.
+        self.compress_weights = bool(compress_weights)
+        self.weight_backend = kernel_ops.resolve_weight_backend(run.codec)
+        if self.compress_weights:
+            self.params, self._pspecs = weights_mod.pack_serving_params(
+                self.params, self._pspecs, backend=self.weight_backend,
+                tp=tp)
+        self._weight_bytes = weights_mod.weight_plane_bytes(self.params)
         self.scheduler = RequestScheduler(tp, max_len)
 
         shard = engine.empty_paged_state(cfg, run, n_slots, max_len, tp)
@@ -1279,7 +1305,11 @@ class ServeEngine:
             cache_fetched_pages=self.cache.fetched_pages,
             cache_fetched_bytes=self.cache.fetched_bytes,
             cache_reprefill_cols=self.cache.reprefill_cols,
-            cache_evicted_cols=self.cache.evicted_cols)
+            cache_evicted_cols=self.cache.evicted_cols,
+            weights_compressed=self.compress_weights,
+            weight_backend=self.weight_backend,
+            weight_bytes_per_step=self._weight_bytes[0],
+            weight_raw_bytes_per_step=self._weight_bytes[1])
 
     def run(self, requests: List[Request]
             ) -> Tuple[List[RequestResult], ServeStats]:
@@ -1358,4 +1388,10 @@ def format_stats(st: ServeStats) -> str:
             f"{st.cache_fetched_pages} fetched back "
             f"({st.cache_fetched_bytes / 1e3:.1f} kB), "
             f"{st.cache_evicted_cols} columns evicted, "
-            f"{st.cache_reprefill_cols} re-prefills")
+            f"{st.cache_reprefill_cols} re-prefills\n"
+            f"weights: "
+            f"{'packed' if st.weights_compressed else 'raw bf16'} "
+            f"({st.weight_backend} backend), "
+            f"{st.weight_bytes_per_step / 1e3:.1f} kB HBM per decode step / "
+            f"{st.weight_raw_bytes_per_step / 1e3:.1f} kB raw "
+            f"({st.weight_ratio:.2f}x)")

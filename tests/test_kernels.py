@@ -16,6 +16,16 @@ def bf16(shape, std=0.1):
     return jnp.asarray(RNG.normal(0, std, shape), jnp.bfloat16)
 
 
+def narrow_bf16(shape, n_exp=8):
+    """bf16 values spanning exactly ``n_exp`` exponents (deterministic) —
+    packs escape-free even at k=4 (15-symbol dictionary)."""
+    rng = np.random.default_rng(7)
+    mag = 2.0 ** rng.integers(-n_exp, 0, shape).astype(np.float64)
+    mant = 1.0 + rng.integers(0, 128, shape) / 128.0
+    sgn = rng.choice([-1.0, 1.0], shape)
+    return jnp.asarray(sgn * mag * mant, jnp.bfloat16)
+
+
 def assert_bits_equal(a, b):
     assert jnp.array_equal(jax.lax.bitcast_convert_type(a, jnp.uint16),
                            jax.lax.bitcast_convert_type(b, jnp.uint16))
@@ -94,6 +104,57 @@ class TestDecompressMatmul:
         out = ops.matmul_compressed(ident, sm, pl, d, bm=128, bk=128, bn=256)
         assert jnp.array_equal(out.astype(jnp.bfloat16), w)
 
+    @pytest.mark.parametrize("k", [4, 5, 6])
+    def test_k_sweep(self, k):
+        """Small dictionaries: weights with few distinct exponents pack at
+        k=4 without escapes and the kernel must track the ref bit-for-bit
+        (single k-block -> one jnp.dot on both sides)."""
+        x = bf16((16, 128), 1.0)
+        w = narrow_bf16((128, 256))
+        sm, pl, d, nesc = ops.compress_weight(w, k=k)
+        assert int(nesc) == 0
+        out = ops.matmul_compressed(x, sm, pl, d, k=k, bm=64, bk=128, bn=256)
+        want = ref.decompress_matmul_ref(x, sm, pl, d, k)
+        assert jnp.array_equal(out, want)
+
+    @pytest.mark.parametrize("mkn", [(1, 128, 256),   # M=1 decode row
+                                     (5, 100, 96),    # ragged M and K
+                                     (33, 70, 64)])
+    def test_nonmultiple_shapes(self, mkn):
+        """Serving shapes don't align to kernel tiles: the wrapper pads M/K/N
+        up to block multiples and slices the result (N still %32 — the packed
+        layout's lane width)."""
+        m, k_, n = mkn
+        x = bf16((m, k_), 1.0)
+        w = bf16((k_, n), 0.02)
+        sm, pl, d, nesc = ops.compress_weight(w)
+        assert int(nesc) == 0
+        out = ops.matmul_compressed(x, sm, pl, d)
+        assert out.shape == (m, n)
+        want = ref.decompress_matmul_ref(x, sm, pl, d, 6)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-6, atol=2e-5)
+
+    @pytest.mark.parametrize("tp", [1, 2])
+    def test_inside_shard_map(self, tp):
+        """Tensor-parallel serving slices packed weights along N (signman
+        and planes shard on the model axis, the dictionary replicates)."""
+        from jax.sharding import PartitionSpec as P
+        from repro.core import collectives as cl
+        x = bf16((4, 128), 1.0)
+        w = narrow_bf16((128, 64 * tp))
+        sm, pl, d, nesc = ops.compress_weight(w)
+        assert int(nesc) == 0
+        mesh = jax.make_mesh((tp,), ("model",))
+        f = lambda x_, sm_, pl_, d_: ops.matmul_compressed(x_, sm_, pl_, d_)
+        fj = jax.jit(cl.shmap(
+            f, mesh,
+            (P(), P(None, "model"), P(None, None, "model"), P()),
+            P(None, "model")))
+        out = fj(x, sm, pl, d)
+        want = ref.decompress_matmul_ref(x, sm, pl, d, 6)
+        assert jnp.array_equal(out, want)
+
 
 def _normalized(out, l):
     return np.asarray(out) / np.maximum(np.asarray(l)[..., None], 1e-30)
@@ -167,7 +228,13 @@ class TestDecodeAttend:
         from repro.kernels.decode_attend import WINDOW_NONE, decode_attend
         w = 2 * hkv * hd
         x = np.asarray(bf16((nblk, b, blk, w), 0.5), np.float32)
-        x[0, :, ::3, ::5] = RNG.uniform(1e28, 1e36, x[0, :, ::3, ::5].shape)
+        # deterministic block 0: 15 frequent exponents fill the k=4
+        # dictionary exactly, then 4 rare huge values MUST take the escape
+        # side channel (capacity max(n/128, 8) = 8 here) — guaranteed
+        # 0 < n_escapes <= capacity regardless of RNG state
+        base = np.float32(2.0) ** ((np.arange(blk * w) % 15) - 10)
+        base[-4:] = np.float32(2.0) ** np.asarray([40, 45, 50, 55])
+        x[0] = base.reshape(b, blk, w)
         blocks = jnp.asarray(x).astype(jnp.bfloat16)
         ring = bf16((b, blk, w), 0.5)
         q = bf16((b, h, hd), 1.0)
