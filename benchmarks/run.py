@@ -187,6 +187,11 @@ SOCKET = False  # set by --socket: run the disagg scenario a second time
 STORE_PAGES = 4096  # set by --store-pages: LRU cap for the content-
                     # addressed stores (transport digest store + PageCache
                     # warm tier) on every engine the serving bench builds
+TRACE_OUT = None    # set by --trace-out: write the disagg serving
+                    # scenario's Chrome trace-event JSON here (each disagg
+                    # scenario overwrites it, so the file ends up holding
+                    # the LAST one — the two-process socket run under
+                    # --socket; validate with scripts/trace_summary.py)
 
 
 def bench_serving() -> None:
@@ -276,6 +281,12 @@ def bench_serving() -> None:
             "weight_backend": st.weight_backend,
             "weight_bytes_per_step": st.weight_bytes_per_step,
             "weight_raw_bytes_per_step": st.weight_raw_bytes_per_step,
+            "ttft_mean_ms": st.ttft_mean_s * 1e3,
+            "ttft_p50_ms": st.ttft_p50_s * 1e3,
+            "ttft_p95_ms": st.ttft_p95_s * 1e3,
+            "admit_window_mean_ms": st.admit_window_mean_s * 1e3,
+            "decode_window_mean_ms": st.decode_window_mean_s * 1e3,
+            "inter_token_mean_ms": st.inter_token_mean_s * 1e3,
         }
 
     scenarios = []
@@ -386,6 +397,10 @@ def bench_serving() -> None:
             "decode_steps": st_d.decode_steps,
             "n_dispatches": st_d.n_dispatches,
             "wall_s": st_d.wall_s,
+            "ttft_mean_ms": st_d.ttft_mean_s * 1e3,
+            "ttft_p50_ms": st_d.ttft_p50_s * 1e3,
+            "ttft_p95_ms": st_d.ttft_p95_s * 1e3,
+            "transfer_mean_ms": st_d.transfer_mean_s * 1e3,
         }
 
     def emit_disagg(tag, st_d, ratio):
@@ -404,6 +419,14 @@ def bench_serving() -> None:
              f"link_ms={st_d.link_model_ms:.4f}/"
              f"{st_d.link_model_ms_raw:.4f}")
 
+    from repro.serve.telemetry import Tracer
+
+    def write_trace(tracer):
+        if TRACE_OUT:
+            tracer.write(TRACE_OUT)
+            emit("serving.trace", 0.0,
+                 f"wrote {TRACE_OUT} ({len(tracer.events)} spans)")
+
     mono_tokens = {}
     for label, codec in codecs:
         run = RunConfig(codec=dataclasses.replace(codec,
@@ -411,9 +434,10 @@ def bench_serving() -> None:
         eng_m = ServeEngine(cfg, run, tp=1, n_slots=2, max_len=96, seed=1)
         res_m, _ = eng_m.run(make_reqs())
         mono_tokens[label] = [r.tokens for r in res_m]
+        tr_d = Tracer(enabled=TRACE_OUT is not None)
         dis = DisaggEngine(cfg, run, tp=1, n_prefill=1, n_decode=1,
                            n_slots=2, max_len=96, seed=1, streaming=True,
-                           store_pages=STORE_PAGES)
+                           store_pages=STORE_PAGES, tracer=tr_d)
         res_d, st_d = dis.run(make_reqs())
         assert [r.tokens for r in res_d] == mono_tokens[label]
         assert st_d.n_transfers > 0
@@ -429,6 +453,7 @@ def bench_serving() -> None:
             assert ratio <= 0.6, ratio
         emit_disagg("disagg", st_d, ratio)
         scenarios.append(disagg_row("disagg", st_d, ratio))
+        write_trace(tr_d)
         if SOCKET:
             # same stream, decode replica in ANOTHER OS PROCESS: spawn a
             # decode host, route the handoffs over TCP, assert identity
@@ -442,15 +467,17 @@ def bench_serving() -> None:
                  "--store-pages", str(STORE_PAGES)])
             tr = SocketTransport()
             try:
+                tr_s = Tracer(enabled=TRACE_OUT is not None)
                 dis_s = DisaggEngine(
                     cfg, run, tp=1, n_prefill=1, n_slots=2, max_len=96,
                     seed=1, transport=tr, streaming=True,
-                    decode_addrs=[f"127.0.0.1:{port}"])
+                    decode_addrs=[f"127.0.0.1:{port}"], tracer=tr_s)
                 res_s, st_s = dis_s.run(make_reqs())
                 assert [r.tokens for r in res_s] == mono_tokens[label]
                 ratio_s = st_s.wire_bytes / max(st_s.wire_raw_bytes, 1)
                 emit_disagg("disagg_socket", st_s, ratio_s)
                 scenarios.append(disagg_row("disagg_socket", st_s, ratio_s))
+                write_trace(tr_s)
             finally:
                 tr.close()
                 proc.terminate()
@@ -720,11 +747,18 @@ def main() -> None:
                     help="serving bench: LRU cap (pages) for the content-"
                          "addressed stores (transport digest store + "
                          "PageCache warm tier)")
+    ap.add_argument("--trace-out", default=None,
+                    help="serving bench: write the disagg scenario's "
+                         "Chrome trace-event JSON here (the last disagg "
+                         "scenario wins — under --socket that is the "
+                         "two-process run); check with "
+                         "scripts/trace_summary.py")
     args = ap.parse_args()
-    global SMOKE, SOCKET, STORE_PAGES
+    global SMOKE, SOCKET, STORE_PAGES, TRACE_OUT
     SMOKE = args.smoke
     SOCKET = args.socket
     STORE_PAGES = args.store_pages
+    TRACE_OUT = args.trace_out
     names = args.only.split(",") if args.only else list(ALL)
     print("name,us_per_call,derived")
     for n in names:

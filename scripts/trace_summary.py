@@ -1,0 +1,206 @@
+#!/usr/bin/env python3
+"""Summarize / validate a serving trace written by ``--trace-out``.
+
+The input is the Chrome trace-event JSON produced by
+``repro.serve.telemetry.Tracer.to_chrome_trace`` (``src/repro/serve/
+telemetry.py``): ``{"traceEvents": [...]}`` where request-lifecycle spans
+are complete ("ph": "X") events with microsecond ``ts``/``dur`` and the
+request uid repeated in ``args`` — see docs/ARCHITECTURE.md §9 for the
+span taxonomy.  Stdlib only (CI runs it on a bare python3).
+
+    python3 scripts/trace_summary.py serving-trace.json          # table
+    python3 scripts/trace_summary.py serving-trace.json --check  # lint
+
+Validation (both modes; ``--check`` prints nothing else and exits 1 on
+the first problem class found):
+
+  * top level is an object with a ``traceEvents`` list; every "X" event
+    carries numeric ts/dur >= 0, integer pid/tid and an args dict;
+  * every traced uid closes exactly ONE root ``request`` span;
+  * every request-lane span (same args.uid) nests inside its root;
+  * same-name spans on one request lane never overlap (stages are
+    sequential by construction);
+  * every root has at least one child span (a request that produced no
+    admission/stage events never really ran).
+
+The summary table reports per-span-name count / total / p50 / p95, the
+byte flow per tier (wire + streamed chunks, cache spill/fetch, weight
+HBM), and TTFT per request (end of the replay-else-admit stage minus
+root start — matching the engine's host-clock TTFT).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+from typing import Any, Dict, List
+
+EPS_US = 1e-3      # ns -> µs float conversion slack
+
+
+def percentile(values: List[float], q: float) -> float:
+    """Linear-interpolation percentile (numpy default) on a sample."""
+    if not values:
+        return 0.0
+    v = sorted(values)
+    if len(v) == 1:
+        return v[0]
+    pos = (len(v) - 1) * q / 100.0
+    lo = int(pos)
+    hi = min(lo + 1, len(v) - 1)
+    return v[lo] + (v[hi] - v[lo]) * (pos - lo)
+
+
+def load_events(path: str, errors: List[str]) -> List[Dict[str, Any]]:
+    try:
+        with open(path) as f:
+            trace = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        errors.append(f"cannot load {path}: {e}")
+        return []
+    if not isinstance(trace, dict) or \
+            not isinstance(trace.get("traceEvents"), list):
+        errors.append("top level must be an object with a "
+                      "'traceEvents' list")
+        return []
+    spans = []
+    for i, ev in enumerate(trace["traceEvents"]):
+        if not isinstance(ev, dict) or "ph" not in ev or "name" not in ev:
+            errors.append(f"event {i} is not a dict with ph/name")
+            continue
+        if ev["ph"] != "X":
+            continue                      # "M" metadata rows
+        ok = (isinstance(ev.get("ts"), (int, float))
+              and isinstance(ev.get("dur"), (int, float))
+              and ev["dur"] >= 0
+              and isinstance(ev.get("pid"), int)
+              and isinstance(ev.get("tid"), int)
+              and isinstance(ev.get("args"), dict))
+        if not ok:
+            errors.append(f"X event {i} ({ev.get('name')}) lacks valid "
+                          "ts/dur/pid/tid/args")
+            continue
+        spans.append(ev)
+    return spans
+
+
+def validate(spans: List[Dict[str, Any]], errors: List[str]) -> None:
+    roots: Dict[Any, Dict[str, Any]] = {}
+    children: Dict[Any, List[Dict[str, Any]]] = defaultdict(list)
+    for ev in spans:
+        uid = ev["args"].get("uid")
+        if uid is None:
+            continue                      # engine-lane span
+        if ev["name"] == "request":
+            if uid in roots:
+                errors.append(f"uid {uid} closed more than one root "
+                              "'request' span")
+            roots[uid] = ev
+        else:
+            children[uid].append(ev)
+    if not roots:
+        errors.append("trace holds no root 'request' spans")
+    for uid, kids in children.items():
+        root = roots.get(uid)
+        if root is None:
+            errors.append(f"uid {uid} has spans but no root "
+                          "'request' span")
+            continue
+        r0, r1 = root["ts"], root["ts"] + root["dur"]
+        for ev in kids:
+            t0, t1 = ev["ts"], ev["ts"] + ev["dur"]
+            if t0 < r0 - EPS_US or t1 > r1 + EPS_US:
+                errors.append(
+                    f"uid {uid}: span '{ev['name']}' "
+                    f"[{t0:.1f}, {t1:.1f}]us escapes its root "
+                    f"[{r0:.1f}, {r1:.1f}]us")
+        by_name: Dict[str, List] = defaultdict(list)
+        for ev in kids:
+            by_name[ev["name"]].append((ev["ts"], ev["ts"] + ev["dur"]))
+        for name, ivs in by_name.items():
+            ivs.sort()
+            for (a0, a1), (b0, b1) in zip(ivs, ivs[1:]):
+                if b0 < a1 - EPS_US:
+                    errors.append(
+                        f"uid {uid}: '{name}' spans overlap "
+                        f"([{a0:.1f}, {a1:.1f}] vs [{b0:.1f}, {b1:.1f}])")
+    for uid in roots:
+        if not children.get(uid):
+            errors.append(f"uid {uid}: root span has no child spans")
+
+
+def summarize(spans: List[Dict[str, Any]]) -> str:
+    by_name: Dict[str, List[float]] = defaultdict(list)
+    bytes_by = defaultdict(int)
+    roots: Dict[Any, Dict[str, Any]] = {}
+    stage_end: Dict[Any, Dict[str, float]] = defaultdict(dict)
+    for ev in spans:
+        by_name[ev["name"]].append(ev["dur"] / 1e3)      # us -> ms
+        a = ev["args"]
+        if ev["name"] in ("wire", "wire_chunk"):
+            bytes_by["wire"] += int(a.get("wire_bytes", 0))
+        if ev["name"] == "cache_spill":
+            bytes_by["cache_spill"] += int(a.get("bytes", 0))
+        if ev["name"] == "cache_fetch":
+            bytes_by["cache_fetch"] += int(a.get("bytes", 0))
+            bytes_by["cache_remote"] += int(a.get("remote_bytes", 0))
+        if ev["name"] == "decode_window":
+            bytes_by["weight_hbm"] += int(a.get("weight_bytes", 0))
+        uid = a.get("uid")
+        if uid is not None:
+            if ev["name"] == "request":
+                roots[uid] = ev
+            elif ev["name"] in ("admit", "replay"):
+                stage_end[uid][ev["name"]] = ev["ts"] + ev["dur"]
+    lines = [f"{'span':<16}{'count':>7}{'total_ms':>11}"
+             f"{'p50_ms':>9}{'p95_ms':>9}"]
+    for name in sorted(by_name):
+        d = by_name[name]
+        lines.append(f"{name:<16}{len(d):>7}{sum(d):>11.2f}"
+                     f"{percentile(d, 50):>9.2f}{percentile(d, 95):>9.2f}")
+    lines.append("")
+    lines.append("bytes per tier:")
+    for k in ("wire", "cache_spill", "cache_fetch", "cache_remote",
+              "weight_hbm"):
+        lines.append(f"  {k:<13}{bytes_by[k]:>14,} B")
+    ttfts = []
+    for uid, root in roots.items():
+        se = stage_end.get(uid, {})
+        end = se.get("replay", se.get("admit"))
+        if end is not None:
+            ttfts.append((end - root["ts"]) / 1e3)
+    lines.append("")
+    lines.append(f"requests: {len(roots)}  "
+                 f"ttft_ms mean={sum(ttfts) / len(ttfts):.1f} "
+                 f"p50={percentile(ttfts, 50):.1f} "
+                 f"p95={percentile(ttfts, 95):.1f}"
+                 if ttfts else f"requests: {len(roots)}  (no ttft stages)")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", help="Chrome trace-event JSON (--trace-out)")
+    ap.add_argument("--check", action="store_true",
+                    help="validate only; exit 1 on any violation")
+    args = ap.parse_args(argv)
+    errors: List[str] = []
+    spans = load_events(args.trace, errors)
+    if not errors:
+        validate(spans, errors)
+    if errors:
+        for e in errors:
+            print(f"ERROR: {e}", file=sys.stderr)
+        return 1
+    if args.check:
+        print(f"OK: {args.trace} — {len(spans)} spans, "
+              f"{sum(1 for e in spans if e['name'] == 'request')} requests")
+        return 0
+    print(summarize(spans))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

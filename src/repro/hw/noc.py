@@ -59,6 +59,27 @@ class LinkModel:
                 + nbytes * contention / (self.gbps / 8.0))
 
 
+@dataclasses.dataclass
+class MeteredLink:
+    """LinkModel façade that accounts every priced transfer into a
+    telemetry registry under ``<prefix>.bytes`` / ``<prefix>.transfers``
+    / ``<prefix>.model_ns``.  ``registry`` is duck-typed (anything with
+    ``counter(name).inc(n)`` — in practice
+    :class:`repro.serve.telemetry.MetricsRegistry`), so the hardware
+    model stays import-free of the serving stack."""
+    link: LinkModel
+    registry: object
+    prefix: str = "link"
+
+    def transfer_ns(self, nbytes: float, hops: int = 1) -> float:
+        ns = self.link.transfer_ns(nbytes, hops)
+        reg = self.registry
+        reg.counter(f"{self.prefix}.bytes").inc(int(nbytes))
+        reg.counter(f"{self.prefix}.transfers").inc()
+        reg.counter(f"{self.prefix}.model_ns").inc(ns)
+        return ns
+
+
 def _chiplet_of(layer: int) -> Tuple[int, int]:
     idx = layer % (MESH_X * MESH_Y)
     return (idx % MESH_X, idx // MESH_X)

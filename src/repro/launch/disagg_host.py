@@ -126,19 +126,34 @@ def run_decode_host(args) -> int:
 def run_driver(args) -> int:
     from repro.serve import DisaggEngine, ServeEngine, SocketTransport
     from repro.serve.disagg import format_disagg_stats
+    from repro.serve.telemetry import Tracer
     cfg, run = build_cfg_run(args)
     addrs = [a for a in args.decode_addr.split(",") if a]
     transport = SocketTransport()
+    tracer = Tracer(enabled=args.trace_out is not None)
     eng = DisaggEngine(cfg, run, tp=args.tp,
                        n_prefill=args.prefill_replicas,
                        n_slots=args.slots, max_len=args.max_len,
                        seed=args.seed, eos_id=args.eos_id,
                        transport=transport, streaming=args.streaming,
                        decode_addrs=addrs, store_pages=args.store_pages,
-                       compress_weights=args.compress_weights)
+                       compress_weights=args.compress_weights,
+                       tracer=tracer)
     reqs = demo_requests(cfg, args)
     results, st = eng.run(reqs)
+    # fleet metrics fold the remote replicas' METRICS RPC snapshots, so
+    # query them BEFORE the session closes
+    snap = eng.metrics_snapshot() if args.metrics_json else None
     transport.close()
+    if args.trace_out:
+        tracer.write(args.trace_out)
+        print(f"[disagg_host] trace -> {args.trace_out} "
+              f"({len(tracer.events)} spans)")
+    if snap is not None:
+        import json
+        with open(args.metrics_json, "w") as f:
+            json.dump(snap, f, indent=1)
+        print(f"[disagg_host] metrics -> {args.metrics_json}")
     print("[disagg_host] socket:", format_disagg_stats(st))
     if args.check:
         mono = ServeEngine(cfg, run, tp=args.tp, n_slots=args.slots,
@@ -290,6 +305,12 @@ def main(argv=None) -> int:
     ap.add_argument("--check", action="store_true",
                     help="driver: also run the monolithic engine and "
                          "assert identical token streams")
+    ap.add_argument("--trace-out", type=str, default=None,
+                    help="driver: write a Chrome trace-event JSON of the "
+                         "request lifecycle spans here")
+    ap.add_argument("--metrics-json", type=str, default=None,
+                    help="driver: write the fleet-merged metrics snapshot "
+                         "(local registries + per-host METRICS RPC) here")
     args = ap.parse_args(argv)
 
     if args.selftest:

@@ -78,6 +78,13 @@ def main(argv=None) -> int:
                     help="continuous/disagg: comma-separated token ids; "
                          "a slot stops when its stream ends with them "
                          "(stop_reason=stop_string)")
+    ap.add_argument("--trace-out", type=str, default=None,
+                    help="write a Chrome trace-event JSON (Perfetto-"
+                         "loadable) of the request lifecycle spans here "
+                         "(continuous/disagg modes)")
+    ap.add_argument("--metrics-json", type=str, default=None,
+                    help="write the run's metrics-registry snapshot "
+                         "(repro.serve.telemetry) as JSON here")
     args = ap.parse_args(argv)
 
     d, m = (int(x) for x in args.mesh.split("x"))
@@ -139,9 +146,28 @@ def main(argv=None) -> int:
     t0 = time.time()
     out = np.asarray(f(params, prompts, extras))
     dt = time.time() - t0
+    n_tok = B * (N + 1)
     print(f"[serve] steady-state: {B * N / dt:.1f} tok/s")
+    print(f"[serve] stats: {B} requests, {n_tok} tokens in {dt:.2f}s "
+          f"({n_tok / max(dt, 1e-9):.1f} tok/s), "
+          f"decode backend {codec.decode_backend}")
+    if args.metrics_json:
+        from repro.serve.telemetry import MetricsRegistry
+        reg = MetricsRegistry()
+        reg.counter("serve.requests").set(B)
+        reg.counter("serve.tokens").set(n_tok)
+        reg.counter("serve.decode_steps").set(N)
+        reg.gauge("serve.wall_s", agg="max").set(dt)
+        _write_json(args.metrics_json, reg.snapshot())
+        print(f"[serve] metrics -> {args.metrics_json}")
     print("[serve] sample continuations:", out[:2, :12].tolist())
     return 0
+
+
+def _write_json(path: str, obj) -> None:
+    import json
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1)
 
 
 def _serve_continuous(cfg, run, tp: int, args) -> int:
@@ -150,11 +176,13 @@ def _serve_continuous(cfg, run, tp: int, args) -> int:
     compressed page transfer instead of one monolithic engine."""
     from repro.serve import ServeEngine
     from repro.serve.scheduler import demo_serving_setup, format_stats
+    from repro.serve.telemetry import Tracer
     run, max_len, reqs = demo_serving_setup(
         run, cfg.vocab_size, tp, args.prompt_len, args.new_tokens,
         args.requests)
     stops = ([tuple(int(t) for t in args.stop_seq.split(","))]
              if args.stop_seq else None)
+    tracer = Tracer(enabled=args.trace_out is not None)
     if args.disagg:
         from repro.serve.disagg import DisaggEngine, format_disagg_stats
         eng = DisaggEngine(cfg, run, tp=tp,
@@ -163,17 +191,28 @@ def _serve_continuous(cfg, run, tp: int, args) -> int:
                            n_slots=args.slots, max_len=max_len,
                            seed=run.seed, eos_id=args.eos_id,
                            stop_seqs=stops, streaming=args.streaming,
-                           compress_weights=args.compress_weights)
+                           compress_weights=args.compress_weights,
+                           tracer=tracer)
         results, st = eng.run(reqs)
+        snap = eng.metrics_snapshot()
         print("[serve] disagg:", format_disagg_stats(st))
     else:
         eng = ServeEngine(cfg, run, tp=tp, n_slots=args.slots,
                           max_len=max_len, seed=run.seed,
                           eos_id=args.eos_id, stop_seqs=stops,
                           prefix_sharing=not args.no_prefix_sharing,
-                          compress_weights=args.compress_weights)
+                          compress_weights=args.compress_weights,
+                          tracer=tracer)
         results, st = eng.run(reqs)
+        snap = eng.registry.snapshot()
         print("[serve] continuous:", format_stats(st))
+    if args.trace_out:
+        tracer.write(args.trace_out)
+        print(f"[serve] trace -> {args.trace_out} "
+              f"({len(tracer.events)} spans)")
+    if args.metrics_json:
+        _write_json(args.metrics_json, snap)
+        print(f"[serve] metrics -> {args.metrics_json}")
     print("[serve] sample continuations:",
           [(r.tokens[:6], r.stop_reason) for r in results[:2]])
     return 0

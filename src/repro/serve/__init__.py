@@ -3,7 +3,8 @@ LEXI-compressed cache (``engine`` device code, ``scheduler`` loop), and
 disaggregated prefill→decode replicas over compressed page transfer
 (``disagg`` routing, ``transport`` wire format + digest stores,
 ``pagecache`` tiered content-addressed page retention, ``net`` socket
-transport between OS processes) — see docs/ARCHITECTURE.md for the
+transport between OS processes, ``telemetry`` request-lifecycle tracing
++ the unified metrics registry) — see docs/ARCHITECTURE.md for the
 end-to-end walkthrough."""
 from . import engine  # noqa: F401
 from .scheduler import (Request, RequestResult, RequestScheduler,  # noqa: F401
@@ -15,3 +16,5 @@ from .transport import (DigestStore, LoopbackTransport,  # noqa: F401
                         PageTransport, SequenceBlob, TransportStats)
 from .net import (PageHost, RemoteDecodeReplica,  # noqa: F401
                   SocketTransport)
+from .telemetry import (MetricsRegistry, Tracer,  # noqa: F401
+                        summarize_latencies)

@@ -60,6 +60,8 @@ from repro.kernels import ops as kernel_ops
 from repro.models import cache as cache_mod
 from repro.models.ssm import SSMState
 from .scheduler import (Request, RequestResult, ServeEngine, _LoopState)
+from .telemetry import (MetricsRegistry, Tracer, sum_counters,
+                        summarize_latencies)
 from .transport import (LoopbackTransport, PageTransport, SequenceBlob,
                         TransportStats, page_payload)
 
@@ -115,6 +117,10 @@ class DisaggStats:
     latency_p50_s: float
     latency_p95_s: float
     decode_backend: str
+    ttft_mean_s: float = 0.0       # submit -> first token (prefill-side)
+    ttft_p50_s: float = 0.0
+    ttft_p95_s: float = 0.0
+    transfer_mean_s: float = 0.0   # host wall time of one deliver()
 
     @property
     def link_reduction(self) -> float:
@@ -221,7 +227,16 @@ class PrefillReplica:
                 st = {"seq_id": self.transport.new_stream(),
                       "dst": self.pick_dst(), "sent": sent}
                 self._streams[s] = st
+            tr, reg = eng.tracer, self.transport.registry
+            wb0 = reg.value("transport.wire_bytes")
+            t0 = tr.now()
             self.transport.stream_pages(st["dst"], st["seq_id"], entries)
+            if tr.enabled:
+                tr.request_span(
+                    ls.slot_req[s].uid, "wire_chunk", t0=t0, t1=tr.now(),
+                    args={"wire_bytes":
+                          reg.value("transport.wire_bytes") - wb0,
+                          "pages": len(entries), "dst": st["dst"]})
             st["sent"] = [max(v, s0) for v, s0 in zip(valid, sent)]
 
     def admit_step(self) -> Tuple[List[RequestResult], List[Handoff]]:
@@ -238,11 +253,28 @@ class PrefillReplica:
                 self.transport.abort_stream(st["dst"], st["seq_id"])
         handoffs: List[Handoff] = []
         exported = []
+        tr = eng.tracer
         for s in list(ls.live_slots()):
             req = ls.slot_req[s]
             st = self._streams.pop(s, None)
+            # TTFT closes HERE for transferred requests: the first token
+            # was produced at admission/replay on this replica, and the
+            # decode replica's clocks never saw the submit (driver-side
+            # clock throughout, so remote decode composes too)
+            ft = ls.first_tok_t.pop(req.uid, None)
+            sub = eng.scheduler.submit_t.pop(req.uid, None)
+            if ft is not None:
+                ls.ttft_s[req.uid] = ft - (sub if sub is not None
+                                           else ls.admit_t[req.uid])
+            t0 = tr.now()
+            blob = self._export_blob(s)
+            if tr.enabled:
+                tr.request_span(req.uid, "export", t0=t0, t1=tr.now(),
+                                args={"raw_bytes": blob.raw_bytes,
+                                      "length": blob.length,
+                                      "n_cols": blob.n_cols})
             handoffs.append(Handoff(
-                req=req, blob=self._export_blob(s),
+                req=req, blob=blob,
                 admit_t=ls.admit_t[req.uid],
                 dst=st["dst"] if st is not None else None,
                 seq_id=st["seq_id"] if st is not None else None))
@@ -338,15 +370,38 @@ class DecodeReplica:
             self.engine._free_slots(live)
         return len(live)
 
+    def metrics_snapshot(self) -> Dict:
+        """Versioned registry snapshot of this replica's engine — the
+        local counterpart of the socket METRICS RPC
+        (``repro.serve.net.server.PageHost`` answers with exactly this
+        on its own replica)."""
+        return self.engine.sync_metrics(self.ls).snapshot()
+
     def deliver(self, h: Handoff, transport: PageTransport,
                 dst: str) -> None:
         """Carry ``h`` across the transport and import it: serialize (and
         meter) the blob, reconstruct it on the receiving side, scatter it
         into a slot.  The remote counterpart lives in
         ``repro.serve.net.client.RemoteDecodeReplica.deliver``."""
+        tr, reg = self.engine.tracer, transport.registry
+        wb0 = reg.value("transport.wire_bytes")
+        t0 = tr.now()
+        w0 = time.perf_counter()
         data = transport.send(h.blob, dst, seq_id=h.seq_id)
         blob = transport.recv(data, dst, seq_id=h.seq_id)
+        reg.histogram("latency.transfer_s").observe(
+            time.perf_counter() - w0)
+        if tr.enabled:
+            tr.request_span(
+                h.req.uid, "wire", t0=t0, t1=tr.now(),
+                args={"wire_bytes": reg.value("transport.wire_bytes") - wb0,
+                      "raw_bytes": h.blob.raw_bytes, "dst": dst})
+        t0 = tr.now()
         self.import_handoff(dataclasses.replace(h, blob=blob))
+        if tr.enabled:
+            tr.request_span(h.req.uid, "import", t0=t0, t1=tr.now(),
+                            args={"n_cols": blob.n_cols,
+                                  "length": blob.length})
 
     def import_handoff(self, h: Handoff) -> int:
         """Scatter a transferred sequence into a free slot; returns the
@@ -495,10 +550,14 @@ class DisaggEngine:
                  transport: Optional[PageTransport] = None,
                  streaming: bool = False,
                  decode_addrs: Optional[Sequence[str]] = None,
-                 store_pages: int = 4096, compress_weights: bool = False):
+                 store_pages: int = 4096, compress_weights: bool = False,
+                 tracer: Optional[Tracer] = None):
         if n_prefill < 1 or (n_decode < 1 and decode_addrs is None):
             raise ValueError("need at least one replica of each kind")
         self.cfg, self.run_cfg = cfg, run
+        # one tracer is shared by every replica: the root span opened at
+        # a prefill submit closes when the decode side finishes the uid
+        self.tracer = tracer if tracer is not None else Tracer(False)
         self.transport = transport if transport is not None \
             else LoopbackTransport(max_store_pages=store_pages)
         # compress_weights reaches BOTH replica kinds via mk; packing is
@@ -523,7 +582,8 @@ class DisaggEngine:
                 dst = f"decode{i}"
                 self.transport.connect(dst, host or "127.0.0.1", int(port),
                                        fp)
-                self.decodes.append(RemoteDecodeReplica(self.transport, dst))
+                self.decodes.append(RemoteDecodeReplica(
+                    self.transport, dst, tracer=self.tracer, name=dst))
                 self._names.append(dst)
         self.prefills: List[PrefillReplica] = []
 
@@ -532,7 +592,7 @@ class DisaggEngine:
                     key=lambda j: self.decodes[j].free_slots())
             return self._names[i]
 
-        for _ in range(n_prefill):
+        for i in range(n_prefill):
             # In-engine prefix sharing needs overlapping slot residency,
             # and a prefill replica exports + frees every slot at the end
             # of each admission round — its prefix index could never hit.
@@ -540,7 +600,8 @@ class DisaggEngine:
             # addressed page dedup on the wire) and in the decode replicas'
             # prefix indexes (shared pages across imports) instead.
             eng = ServeEngine(cfg, run, params=params,
-                              prefix_sharing=False, **mk)
+                              prefix_sharing=False, tracer=self.tracer,
+                              name=f"prefill{i}", **mk)
             params = eng.params          # share one param set everywhere
             self.prefills.append(PrefillReplica(
                 eng, transport=self.transport, pick_dst=pick_dst,
@@ -551,7 +612,9 @@ class DisaggEngine:
                 # sequences register in the tiered PageCache (auto-disabled
                 # for MoE/MLA per the usual rules inside ServeEngine)
                 eng = ServeEngine(cfg, run, params=params,
-                                  store_pages=store_pages, **mk)
+                                  store_pages=store_pages,
+                                  tracer=self.tracer, name=f"decode{i}",
+                                  **mk)
                 self.decodes.append(DecodeReplica(eng))
                 self._names.append(f"decode{i}")
             for i, d in enumerate(self.decodes):
@@ -630,20 +693,43 @@ class DisaggEngine:
                     results[r.uid] = r
             route_handoffs()    # freed slots admit waiting transfers now
         wall = time.perf_counter() - t0
+        # transferred requests earn their first token on the PREFILL side;
+        # the decode replica that finished them never saw the submit, so
+        # its results carry ttft 0.0 — patch from the prefill ledgers
+        ttfts: Dict[int, float] = {}
+        for p in self.prefills:
+            ttfts.update(p.ls.ttft_s)
+        for uid, r in results.items():
+            if r.ttft_s == 0.0 and uid in ttfts:
+                results[uid] = dataclasses.replace(r, ttft_s=ttfts[uid])
         stats = self._stats(results, wall)
         return [results[r.uid] for r in requests], stats
+
+    def metrics_snapshot(self) -> Dict:
+        """Fleet totals: every replica's registry snapshot (local replicas
+        synced in place, remote ones fetched over the METRICS RPC) merged
+        with the transport's own registry.  The launch CLIs write this as
+        ``--metrics-json``."""
+        snaps = [p.engine.sync_metrics(p.ls).snapshot()
+                 for p in self.prefills]
+        snaps += [d.metrics_snapshot() for d in self.decodes]
+        snaps.append(self.transport.registry.snapshot())
+        return MetricsRegistry.merge(snaps)
 
     def _stats(self, results, wall: float) -> DisaggStats:
         ts: TransportStats = self.transport.stats
         pls = [p.ls for p in self.prefills]
-        dst = [d.decode_stats() for d in self.decodes]
+        dst = sum_counters(d.decode_stats() for d in self.decodes)
         n_tok = sum(len(r.tokens) for r in results.values())
-        lats = sorted(r.latency_s for r in results.values())
-        pct = (lambda q: float(np.percentile(lats, q)) if lats else 0.0)
+        lat = summarize_latencies(
+            [r.latency_s for r in results.values()])
+        ttft = summarize_latencies(
+            [t for l in pls for t in l.ttft_s.values()])
+        xfer = self.transport.registry.values_of("latency.transfer_s")
         return DisaggStats(
             n_requests=len(results), n_tokens=n_tok,
-            decode_steps=sum(d["steps"] for d in dst),
-            n_dispatches=sum(d["dispatches"] for d in dst),
+            decode_steps=dst["steps"],
+            n_dispatches=dst["dispatches"],
             n_admit_dispatches=sum(l.admit_dispatches for l in pls),
             n_replay_dispatches=sum(l.replay_dispatches for l in pls),
             n_prefill_replicas=len(self.prefills),
@@ -657,25 +743,23 @@ class DisaggEngine:
             stream_chunk_bytes=ts.stream_chunk_bytes,
             pages_resent=ts.pages_resent,
             store_evicted=ts.store_evicted,
-            decode_prefix_hits=sum(d["shared_hits"] for d in dst),
-            cache_hot_hits=sum(d.get("cache_hot_hits", 0) for d in dst),
-            cache_spilled_pages=sum(
-                d.get("cache_spilled_pages", 0) for d in dst),
-            cache_spilled_bytes=sum(
-                d.get("cache_spilled_bytes", 0) for d in dst),
-            cache_fetched_pages=sum(
-                d.get("cache_fetched_pages", 0) for d in dst),
-            cache_fetched_bytes=sum(
-                d.get("cache_fetched_bytes", 0) for d in dst),
-            cache_reprefill_cols=sum(
-                d.get("cache_reprefill_cols", 0) for d in dst),
+            decode_prefix_hits=dst["shared_hits"],
+            cache_hot_hits=dst["cache_hot_hits"],
+            cache_spilled_pages=dst["cache_spilled_pages"],
+            cache_spilled_bytes=dst["cache_spilled_bytes"],
+            cache_fetched_pages=dst["cache_fetched_pages"],
+            cache_fetched_bytes=dst["cache_fetched_bytes"],
+            cache_reprefill_cols=dst["cache_reprefill_cols"],
             link_model_ms=ts.model_ns * 1e-6,
             link_model_ms_raw=ts.model_ns_raw * 1e-6,
             wall_s=wall,
             requests_per_s=len(results) / max(wall, 1e-9),
             tokens_per_s=n_tok / max(wall, 1e-9),
-            mean_latency_s=float(np.mean(lats)) if lats else 0.0,
-            latency_p50_s=pct(50), latency_p95_s=pct(95),
+            mean_latency_s=lat["mean"],
+            latency_p50_s=lat["p50"], latency_p95_s=lat["p95"],
+            ttft_mean_s=ttft["mean"], ttft_p50_s=ttft["p50"],
+            ttft_p95_s=ttft["p95"],
+            transfer_mean_s=(sum(xfer) / len(xfer)) if xfer else 0.0,
             decode_backend=kernel_ops.resolve_decode_backend(
                 self.run_cfg.codec))
 

@@ -508,6 +508,15 @@ def empty_paged_state(cfg: ModelConfig, run: RunConfig, n_slots: int,
                       active=jnp.zeros((n_slots,), jnp.bool_))
 
 
+def paged_state_nbytes(state: PagedState) -> int:
+    """Device-HBM footprint of a paged decode state in bytes, computed
+    from array shape metadata only (never a device sync): the per-layer
+    page pools, rings, page tables and recurrent state a decode replica
+    keeps resident.  The telemetry layer reports this as the
+    ``serve.pool_bytes`` gauge (``repro.serve.scheduler.sync_metrics``)."""
+    return int(sum(a.nbytes for a in jax.tree_util.tree_leaves(state)))
+
+
 def paged_decode_block(cfg: ModelConfig, run: RunConfig, p, x: jax.Array,
                        kv: Optional[cache_mod.PagedKV],
                        sst: Optional[SSMState], lengths: jax.Array,

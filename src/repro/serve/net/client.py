@@ -31,9 +31,10 @@ import struct
 import time
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
-from repro.hw.noc import LinkModel
+from repro.hw.noc import LinkModel, MeteredLink
 
 from ..scheduler import RequestResult
+from ..telemetry import ENGINE_LANE, Tracer
 from ..transport import PageTransport, SequenceBlob, pack_chunk
 from . import framing as fr
 
@@ -53,6 +54,9 @@ class SocketTransport(PageTransport):
         self.dedup = dedup
         self.hops = hops
         self.link = link if link is not None else LinkModel()
+        # actual data-plane traffic prices through the meter (link.bytes
+        # / link.model_ns); the bare link stays for raw-bytes baselines
+        self._meter = MeteredLink(self.link, self.registry)
         self.timeout = timeout
         self._socks: Dict[str, socket.socket] = {}
         # local mirror of each receiver's digest-store inventory: fetched
@@ -130,13 +134,13 @@ class SocketTransport(PageTransport):
             self._count_resent(dst, inline)
         self._rpc(dst, fr.MSG_PAGE_CHUNK, data, fr.MSG_CHUNK_OK)
         self._known[dst].update(d for d, _ in inline)
-        st = self.stats
-        st.stream_chunk_bytes += len(data)
-        st.wire_bytes += len(data)
-        st.pages_streamed += len(inline)
-        st.pages_inline += len(inline)
-        st.pages_ref += len(refs)
-        st.model_ns += self.link.transfer_ns(len(data), self.hops)
+        reg = self.registry
+        reg.counter("transport.stream_chunk_bytes").inc(len(data))
+        reg.counter("transport.wire_bytes").inc(len(data))
+        reg.counter("transport.pages_streamed").inc(len(inline))
+        reg.counter("transport.pages_inline").inc(len(inline))
+        reg.counter("transport.pages_ref").inc(len(refs))
+        self._meter.transfer_ns(len(data), self.hops)
 
     def fetch(self, dst: str,
               digests: Sequence[bytes]) -> Dict[bytes, bytes]:
@@ -148,17 +152,17 @@ class SocketTransport(PageTransport):
             dst, fr.MSG_FETCH, fr.pack_inventory(set(digests)),
             fr.MSG_FETCH_OK))
         nbytes = sum(len(p) for p in pages.values())
-        st = self.stats
-        st.pages_fetched += len(pages)
-        st.fetch_bytes += nbytes
-        st.model_ns += self.link.transfer_ns(nbytes, self.hops)
+        reg = self.registry
+        reg.counter("transport.pages_fetched").inc(len(pages))
+        reg.counter("transport.fetch_bytes").inc(nbytes)
+        self._meter.transfer_ns(nbytes, self.hops)
         return pages
 
     def abort_stream(self, dst, seq_id) -> None:
         reply = fr.unpack_json(self._rpc(
             dst, fr.MSG_ABORT, struct.pack("<I", seq_id), fr.MSG_ABORT_OK))
         evicted = int(reply.get("evicted", 0))
-        self.stats.store_evicted += evicted
+        self.registry.counter("transport.store_evicted").inc(evicted)
         if evicted:
             self._known[dst] = self.inventory(dst)   # resync the mirror
 
@@ -189,16 +193,18 @@ class SocketTransport(PageTransport):
         evicted = int(reply.get("evicted", 0))
         if evicted:
             self._known[dst] = self.inventory(dst)   # resync the mirror
-        st = self.stats
-        st.n_transfers += 1
-        st.wire_bytes += len(data)
-        st.wire_bytes_nodedup += len(data) + len(refs) * blob._payload_size()
-        st.raw_bytes += blob.raw_bytes
-        st.pages_inline += len(inline)
-        st.pages_ref += len(refs)
-        st.store_evicted += evicted
-        st.model_ns += self.link.transfer_ns(len(data), self.hops)
-        st.model_ns_raw += self.link.transfer_ns(blob.raw_bytes, self.hops)
+        reg = self.registry
+        reg.counter("transport.transfers").inc()
+        reg.counter("transport.wire_bytes").inc(len(data))
+        reg.counter("transport.wire_bytes_nodedup").inc(
+            len(data) + len(refs) * blob._payload_size())
+        reg.counter("transport.raw_bytes").inc(blob.raw_bytes)
+        reg.counter("transport.pages_inline").inc(len(inline))
+        reg.counter("transport.pages_ref").inc(len(refs))
+        reg.counter("transport.store_evicted").inc(evicted)
+        self._meter.transfer_ns(len(data), self.hops)
+        reg.counter("link.model_ns_raw").inc(
+            self.link.transfer_ns(blob.raw_bytes, self.hops))
         return int(reply["slot"])
 
     # the in-process serialize/parse surface is loopback-only: a socket
@@ -217,6 +223,13 @@ class SocketTransport(PageTransport):
         return fr.unpack_json(
             self._rpc(dst, fr.MSG_STATUS_REQ, b"", fr.MSG_STATUS))
 
+    def metrics(self, dst: str) -> Dict:
+        """Versioned metrics-registry snapshot of the remote replica's
+        engine (``repro.serve.telemetry.MetricsRegistry.snapshot``);
+        fold per-replica snapshots with ``MetricsRegistry.merge``."""
+        return fr.unpack_json(
+            self._rpc(dst, fr.MSG_METRICS_REQ, b"", fr.MSG_METRICS))
+
     def step(self, dst: str) -> List[Dict]:
         return fr.unpack_json(self._rpc(dst, fr.MSG_STEP, b"",
                                         fr.MSG_RESULTS))
@@ -227,9 +240,15 @@ class RemoteDecodeReplica:
     (behind a :class:`SocketTransport` destination).  Presents the same
     surface the disagg router drives on a local ``DecodeReplica``."""
 
-    def __init__(self, transport: SocketTransport, dst: str):
+    def __init__(self, transport: SocketTransport, dst: str,
+                 tracer: Optional[Tracer] = None, name: str = "remote"):
         self.transport = transport
         self.dst = dst
+        # driver-side span recording: the host process's clock is
+        # unrelated, so wire/decode spans for remote replicas are stamped
+        # here, around the RPCs
+        self.tracer = tracer if tracer is not None else Tracer(False)
+        self.name = name
         self._admit_t: Dict[int, float] = {}
 
     def free_slots(self) -> int:
@@ -247,19 +266,45 @@ class RemoteDecodeReplica:
                           "cache_fetched_bytes", "cache_reprefill_cols")}
 
     def deliver(self, h, transport, dst) -> None:
-        self._admit_t[int(h.req.uid)] = h.admit_t
+        uid = int(h.req.uid)
+        self._admit_t[uid] = h.admit_t
+        tr, reg = self.tracer, self.transport.registry
+        wb0 = reg.value("transport.wire_bytes")
+        t0 = tr.now()
+        w0 = time.perf_counter()
         self.transport.deliver(h, self.dst)
+        reg.histogram("latency.transfer_s").observe(
+            time.perf_counter() - w0)
+        tr.request_span(uid, "wire", t0=t0, t1=tr.now(),
+                        args={"wire_bytes":
+                              reg.value("transport.wire_bytes") - wb0,
+                              "raw_bytes": h.blob.raw_bytes,
+                              "dst": self.dst})
 
     def step_window(self) -> List[RequestResult]:
+        tr = self.tracer
+        t0 = tr.now()
+        replies = self.transport.step(self.dst)
+        t1 = tr.now()
+        tr.emit("decode_rpc", cat="dispatch", pid=self.name,
+                tid=ENGINE_LANE, t0=t0, t1=t1,
+                args={"dst": self.dst, "finished": len(replies)})
         now = time.perf_counter()
         out = []
-        for r in self.transport.step(self.dst):
+        for r in replies:
             # the host's clock is unrelated to ours: latency is measured
             # driver-side, admission -> result arrival
-            admit_t = self._admit_t.pop(int(r["uid"]))
+            uid = int(r["uid"])
+            admit_t = self._admit_t.pop(uid)
+            tokens = [int(t) for t in r["tokens"]]
+            tr.request_end(uid, args={"stop_reason": str(r["stop_reason"]),
+                                      "tokens": len(tokens)})
             out.append(RequestResult(
-                uid=int(r["uid"]), prompt_len=int(r["prompt_len"]),
-                tokens=[int(t) for t in r["tokens"]],
+                uid=uid, prompt_len=int(r["prompt_len"]),
+                tokens=tokens,
                 latency_s=now - admit_t,
                 stop_reason=str(r["stop_reason"])))
         return out
+
+    def metrics_snapshot(self) -> Dict:
+        return self.transport.metrics(self.dst)

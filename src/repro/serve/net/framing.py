@@ -53,6 +53,14 @@ host; every request frame gets exactly one response frame):
                                          subset held, digest + payload
                                          (``pack_pages``) — a missing
                                          digest is not an error.
+    METRICS_REQ   → METRICS              versioned metrics-registry
+                                         snapshot of the host replica's
+                                         engine (JSON;
+                                         ``repro.serve.telemetry.
+                                         MetricsRegistry.snapshot`` —
+                                         the driver folds per-replica
+                                         snapshots into fleet totals
+                                         with ``MetricsRegistry.merge``).
     BYE           → BYE_OK               orderly session end.
 """
 
@@ -78,7 +86,8 @@ _HELLO = struct.Struct("<4sHB16s")          # magic, proto, wire, fingerprint
 (MSG_HELLO, MSG_HELLO_OK, MSG_ERROR, MSG_INVENTORY_REQ, MSG_INVENTORY,
  MSG_PAGE_CHUNK, MSG_CHUNK_OK, MSG_ABORT, MSG_ABORT_OK, MSG_SEQ,
  MSG_SEQ_OK, MSG_STEP, MSG_RESULTS, MSG_STATUS_REQ, MSG_STATUS,
- MSG_BYE, MSG_BYE_OK, MSG_FETCH, MSG_FETCH_OK) = range(1, 20)
+ MSG_BYE, MSG_BYE_OK, MSG_FETCH, MSG_FETCH_OK,
+ MSG_METRICS_REQ, MSG_METRICS) = range(1, 22)
 
 
 class FrameError(ConnectionError):

@@ -153,6 +153,9 @@ class PageHost:
                 store_pages=len(self.store),
                 store_capacity=self.store.max_pages,
                 **self.replica.decode_stats()))
+        if msg == fr.MSG_METRICS_REQ:
+            return fr.MSG_METRICS, fr.pack_json(
+                self.replica.metrics_snapshot())
         if msg == fr.MSG_FETCH:
             digests = fr.unpack_inventory(payload)
             return fr.MSG_FETCH_OK, fr.pack_pages(self._fetch_pages(digests))

@@ -88,6 +88,21 @@ class PageCache:
         self.reprefill_cols = 0  # warm columns lost to store eviction
         self.evicted_cols = 0    # hot columns dropped under pool pressure
 
+    def counters(self) -> Dict[str, int]:
+        """Lifetime tier-traffic counters, keyed as they appear in the
+        unified metrics namespace (``cache.<key>`` — see
+        ``repro.serve.telemetry``); ``ServeEngine.sync_metrics`` and the
+        disagg ``decode_stats`` view both read through here."""
+        return {"hot_hits": self.hot_hits,
+                "spilled_pages": self.spilled_pages,
+                "spilled_bytes": self.spilled_bytes,
+                "fetched_pages": self.fetched_pages,
+                "fetched_bytes": self.fetched_bytes,
+                "remote_pages": self.remote_pages,
+                "remote_bytes": self.remote_bytes,
+                "reprefill_cols": self.reprefill_cols,
+                "evicted_cols": self.evicted_cols}
+
     # -- hot tier ----------------------------------------------------------
 
     def __contains__(self, key: bytes) -> bool:

@@ -89,6 +89,7 @@ Constraints (documented, validated in ``submit``):
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from collections import deque
@@ -111,6 +112,8 @@ from . import engine
 from . import transport
 from .digest import chain_keys
 from .pagecache import PageCache
+from .telemetry import (ENGINE_LANE, MetricsRegistry, Tracer,
+                        summarize_latencies)
 
 
 @dataclasses.dataclass
@@ -133,6 +136,9 @@ class RequestResult:
     tokens: List[int]                # generated (incl. EOS/stop seq if hit)
     latency_s: float                 # admit (incl. own prefill) -> finish
     stop_reason: str = "budget"      # budget | eos | stop_string
+    ttft_s: float = 0.0              # submit -> first token (0.0 when the
+                                     # first token was produced in another
+                                     # process, e.g. remote disagg decode)
 
 
 @dataclasses.dataclass
@@ -171,6 +177,14 @@ class ServeStats:
     weight_backend: str = "jax"      # resolved pallas | interpret | jax
     weight_bytes_per_step: int = 0   # stored (packed + raw-leaf) bytes
     weight_raw_bytes_per_step: int = 0   # same store, all-bf16
+    # span-derived latency summaries (telemetry registry histograms;
+    # 0.0 when the stage never ran)
+    ttft_mean_s: float = 0.0         # submit -> first token
+    ttft_p50_s: float = 0.0
+    ttft_p95_s: float = 0.0
+    admit_window_mean_s: float = 0.0   # batched prefill/replay dispatches
+    decode_window_mean_s: float = 0.0  # fused decode dispatches
+    inter_token_mean_s: float = 0.0    # decode-window time per step
 
     @property
     def cache_ratio(self) -> float:
@@ -219,6 +233,13 @@ class _LoopState:
     replay_dispatches: int = 0
     shared_hits: int = 0
     peak_pages: int = 0
+    # telemetry timestamps: first-token wall clocks (popped at finish /
+    # export), computed TTFTs, and per-dispatch window durations — all
+    # O(requests) / O(dispatches), never O(tokens)
+    first_tok_t: Dict[int, float] = dataclasses.field(default_factory=dict)
+    ttft_s: Dict[int, float] = dataclasses.field(default_factory=dict)
+    admit_window_s: List[float] = dataclasses.field(default_factory=list)
+    decode_window_s: List[float] = dataclasses.field(default_factory=list)
 
     def live_slots(self) -> List[int]:
         return [s for s, r in enumerate(self.slot_req) if r is not None]
@@ -239,6 +260,11 @@ class RequestScheduler:
         self.tp = tp
         self.max_len = max_len
         self.queue: deque[Request] = deque()
+        # wired by the owning engine: the root request span opens at
+        # submit, and submit_t feeds TTFT (first token - submit)
+        self.tracer: Tracer = Tracer(False)
+        self.pid = "serve"
+        self.submit_t: Dict[int, float] = {}
 
     def submit(self, req: Request) -> None:
         s = len(req.prompt)
@@ -256,6 +282,12 @@ class RequestScheduler:
         # slot — a malformed override raising mid-loop (first _check_done)
         # would abort run() with the slot's pages still allocated
         _norm_stops(req.stop_seqs)
+        self.submit_t[req.uid] = time.perf_counter()
+        self.tracer.request_begin(
+            req.uid, pid=self.pid,
+            args={"prompt_len": s,
+                  "max_new_tokens": int(req.max_new_tokens)})
+        self.tracer.stage(req.uid, "queue")
         self.queue.append(req)
 
     def pop(self) -> Optional[Request]:
@@ -274,7 +306,8 @@ class ServeEngine:
                  stop_seqs: Optional[Sequence[Sequence[int]]] = None,
                  max_fuse_steps: int = 32, prefix_sharing: bool = True,
                  store_pages: int = 4096, remote_fetch=None,
-                 compress_weights: bool = False):
+                 compress_weights: bool = False,
+                 tracer: Optional[Tracer] = None, name: str = "serve"):
         if cfg.encdec or cfg.frontend != "none":
             raise ValueError("continuous batching covers decoder-only, "
                              "text-frontend architectures")
@@ -312,7 +345,16 @@ class ServeEngine:
                 self.params, self._pspecs, backend=self.weight_backend,
                 tp=tp)
         self._weight_bytes = weights_mod.weight_plane_bytes(self.params)
+        # telemetry: the tracer is shared (a disagg fleet hands every
+        # replica one tracer, distinguished by engine ``name`` = span
+        # pid); the metrics registry is per-engine and always on — its
+        # counters are plain host ints refreshed by ``sync_metrics``
+        self.name = name
+        self.tracer = tracer if tracer is not None else Tracer(False)
+        self.registry = MetricsRegistry()
         self.scheduler = RequestScheduler(tp, max_len)
+        self.scheduler.tracer = self.tracer
+        self.scheduler.pid = name
 
         shard = engine.empty_paged_state(cfg, run, n_slots, max_len, tp)
         self._sspec = jax.tree_util.tree_map(lambda a: P("model"), shard)
@@ -637,12 +679,13 @@ class ServeEngine:
             return 0, [], []
         warm: List[List[bytes]] = []
         m = h
-        for j in range(h, m_cand):
-            payloads = self.cache.fetch_warm(keys[j])
-            if payloads is None:        # gone on every tier: truncate
-                break
-            warm.append(payloads)
-            m += 1
+        with self._cache_fetch_span():
+            for j in range(h, m_cand):
+                payloads = self.cache.fetch_warm(keys[j])
+                if payloads is None:    # gone on every tier: truncate
+                    break
+                warm.append(payloads)
+                m += 1
         if not ok(m):
             return 0, [], []
         return m, keys[:m], warm
@@ -669,11 +712,12 @@ class ServeEngine:
         if any(not self.cache.has_warm(keys[j]) for j in range(h, n)):
             return None
         warm: List[List[bytes]] = []
-        for j in range(h, n):
-            payloads = self.cache.fetch_warm(keys[j])
-            if payloads is None:
-                return None
-            warm.append(payloads)
+        with self._cache_fetch_span():
+            for j in range(h, n):
+                payloads = self.cache.fetch_warm(keys[j])
+                if payloads is None:
+                    return None
+                warm.append(payloads)
         return keys, h, warm, snap
 
     def _register_prefixes(self, slots_prompts) -> None:
@@ -710,12 +754,39 @@ class ServeEngine:
             return blk, 0, codec.k, 0, 0
         return blk, w, codec.k, codec.esc_capacity(n), packing.pad_to_lanes(n)
 
+    @contextlib.contextmanager
+    def _cache_fetch_span(self):
+        """Engine-lane span over a warm/remote fetch burst.  Byte args
+        are deltas of the PageCache counters, so summed trace bytes
+        equal the ``cache.*`` stats counters by construction."""
+        tr = self.tracer
+        if not tr.enabled:
+            yield
+            return
+        c = self.cache
+        t0 = tr.now()
+        p0, b0 = c.fetched_pages, c.fetched_bytes
+        rp0, rb0 = c.remote_pages, c.remote_bytes
+        try:
+            yield
+        finally:
+            if c.fetched_pages != p0 or c.remote_pages != rp0:
+                tr.emit("cache_fetch", cat="cache", pid=self.name,
+                        tid=ENGINE_LANE, t0=t0, t1=tr.now(),
+                        args={"pages": c.fetched_pages - p0,
+                              "bytes": c.fetched_bytes - b0,
+                              "remote_pages": c.remote_pages - rp0,
+                              "remote_bytes": c.remote_bytes - rb0})
+
     def _spill_slots(self, slots: List[int], rows: np.ndarray) -> None:
         """Export and spill every page column whose LAST reference is
         being released — the hot -> warm handoff, run BEFORE the refcount
         drop while the releasing slot's page-table row still addresses
         the pages (an evicted column is in no row, so spilling later
         would be impossible).  Columns already warm skip the export."""
+        tr = self.tracer
+        t0 = tr.now()
+        p0, b0 = self.cache.spilled_pages, self.cache.spilled_bytes
         holds: Dict[bytes, int] = {}
         for s in slots:
             for key in self._slot_keys[s]:
@@ -754,6 +825,11 @@ class ServeEngine:
                             for l in range(self.cfg.n_layers)]
                 self.cache.spill(key, payloads)
                 done.add(key)
+        if tr.enabled and self.cache.spilled_pages != p0:
+            tr.emit("cache_spill", cat="cache", pid=self.name,
+                    tid=ENGINE_LANE, t0=t0, t1=tr.now(),
+                    args={"pages": self.cache.spilled_pages - p0,
+                          "bytes": self.cache.spilled_bytes - b0})
 
     def _free_slots(self, slots: List[int]) -> None:
         """Evict ``slots`` through the tiered PageCache: spill last-copy
@@ -935,11 +1011,21 @@ class ServeEngine:
             if req is None or not ls.done[s]:
                 continue
             now = time.perf_counter()
+            ft = ls.first_tok_t.pop(req.uid, None)
+            sub = self.scheduler.submit_t.pop(req.uid, None)
+            ttft = 0.0
+            if ft is not None:
+                ttft = ft - (sub if sub is not None
+                             else ls.admit_t[req.uid])
+                ls.ttft_s[req.uid] = ttft
             res = RequestResult(
                 uid=req.uid, prompt_len=len(req.prompt),
                 tokens=ls.emitted[req.uid][:req.max_new_tokens],
                 latency_s=now - ls.admit_t[req.uid],
-                stop_reason=ls.reason[s])
+                stop_reason=ls.reason[s], ttft_s=ttft)
+            self.tracer.request_end(
+                req.uid, args={"stop_reason": res.stop_reason,
+                               "tokens": len(res.tokens)})
             ls.results[req.uid] = res
             fresh.append(res)
             ls.slot_req[s] = None
@@ -994,6 +1080,9 @@ class ServeEngine:
         to make room for its own warm import."""
         h = m - len(warm)
         ls.admit_t.setdefault(req.uid, time.perf_counter())
+        self.tracer.stage(req.uid, "admit",
+                          args={"mode": "warm" if warm else "shared",
+                                "cols": m, "warm_cols": len(warm)})
         ids = np.zeros((self.tp, self._maxp), np.int32)
         for c in range(h):
             ids[:, c] = self.cache.acquire(keys[c])
@@ -1028,6 +1117,9 @@ class ServeEngine:
         bit-exact by construction."""
         n, nr = len(keys), len(warm)
         ls.admit_t.setdefault(req.uid, time.perf_counter())
+        self.tracer.stage(req.uid, "admit",
+                          args={"mode": "snapshot", "cols": n,
+                                "warm_cols": nr})
         ids = np.zeros((self.tp, self._maxp), np.int32)
         for c in range(h):
             ids[:, c] = self.cache.acquire(keys[c])
@@ -1056,6 +1148,8 @@ class ServeEngine:
         self._slot_busy[s] = True
         ls.slot_len[s] = n * self.blk_tokens
         ls.emitted[req.uid] = [t]
+        ls.first_tok_t[req.uid] = time.perf_counter()
+        self.tracer.stage_end(req.uid)
         ls.cur[s] = t
         self._check_done(ls, s, req)
 
@@ -1064,16 +1158,25 @@ class ServeEngine:
         """One vmapped-prefill dispatch admits the whole bucket."""
         fn = self._admit_for(trunk, len(batch))
         prompts = np.stack([r.prompt[:trunk] for r in batch])
-        now = time.perf_counter()
+        tr = self.tracer
+        w0 = time.perf_counter()
         for r in batch:
-            ls.admit_t.setdefault(r.uid, now)
+            ls.admit_t.setdefault(r.uid, w0)
+            tr.stage(r.uid, "admit", args={"mode": "cold",
+                                           "bucket": trunk})
         blk = self.run_cfg.codec.cache_block
         self._ensure_free_pages(len(batch) * ((trunk // self.tp) // blk))
+        t0 = tr.now()
         toks, self.state = fn(self.params, self.state,
                               jnp.asarray(prompts, jnp.int32),
                               jnp.asarray(slots, jnp.int32))
         ls.admit_dispatches += 1
         toks = np.asarray(toks)
+        now = time.perf_counter()
+        ls.admit_window_s.append(now - w0)
+        tr.emit("admit_batch", cat="dispatch", pid=self.name,
+                tid=ENGINE_LANE, t0=t0, t1=tr.now(),
+                args={"bucket": trunk, "batch": len(batch)})
         for j, (req, s) in enumerate(zip(batch, slots)):
             ls.slot_req[s] = req
             self._slot_busy[s] = True
@@ -1085,6 +1188,8 @@ class ServeEngine:
             else:
                 t = int(toks[j, 0])
                 ls.emitted[req.uid] = [t]
+                ls.first_tok_t[req.uid] = now
+                tr.stage_end(req.uid)
                 ls.cur[s] = t
                 self._check_done(ls, s, req)
         if self.admit_progress_cb is not None:
@@ -1097,6 +1202,10 @@ class ServeEngine:
         comes from the step consuming its last prompt token."""
         rem = {s: tail for s, tail in replays}
         off = {s: 0 for s in rem}
+        tr = self.tracer
+        for s in rem:
+            tr.stage(ls.slot_req[s].uid, "replay",
+                     args={"tail_tokens": len(rem[s])})
         while rem:
             longest = max(len(rem[s]) - off[s] for s in rem)
             k = self._fuse_steps(longest)   # same policy as decode
@@ -1112,11 +1221,18 @@ class ServeEngine:
                         ls.slot_len[s],
                         ls.slot_len[s] + min(k, len(rem[s]) - off[s]))
                     for s in rem))
+            t0 = tr.now()
+            w0 = time.perf_counter()
             seq, self.state = self._replay_for(k)(
                 self.params, self.state, jnp.asarray(toks),
                 jnp.asarray(feed))
             ls.replay_dispatches += 1
             seq = np.asarray(seq)
+            now = time.perf_counter()
+            ls.admit_window_s.append(now - w0)
+            tr.emit("replay_window", cat="dispatch", pid=self.name,
+                    tid=ENGINE_LANE, t0=t0, t1=tr.now(),
+                    args={"steps": k, "slots": len(rem)})
             for s in list(rem):
                 n_fed = min(k, len(rem[s]) - off[s])
                 off[s] += n_fed
@@ -1125,6 +1241,8 @@ class ServeEngine:
                     req = ls.slot_req[s]
                     t = int(seq[n_fed - 1, s, 0])
                     ls.emitted[req.uid] = [t]
+                    ls.first_tok_t[req.uid] = now
+                    tr.stage_end(req.uid)
                     ls.cur[s] = t
                     self._check_done(ls, s, req)
                     del rem[s]
@@ -1259,11 +1377,24 @@ class ServeEngine:
             self._ensure_free_pages(sum(
                 self._page_growth(ls.slot_len[s], ls.slot_len[s] + n_steps)
                 for s in live))
+        tr = self.tracer
+        t0 = tr.now()
+        w0 = time.perf_counter()
         seq, self.state = self._decode_for(n_steps)(
             self.params, self.state, jnp.asarray(ls.cur))
         ls.steps += n_steps
         ls.dispatches += 1
         seq = np.asarray(seq)                     # (K, n_slots, 1)
+        ls.decode_window_s.append(time.perf_counter() - w0)
+        t1 = tr.now()
+        tr.emit("decode_window", cat="dispatch", pid=self.name,
+                tid=ENGINE_LANE, t0=t0, t1=t1,
+                args={"steps": n_steps, "slots": len(live),
+                      "weight_bytes": n_steps * self._weight_bytes[0]})
+        if tr.enabled:
+            for s in live:
+                tr.request_span(ls.slot_req[s].uid, "decode", t0=t0, t1=t1,
+                                args={"steps": n_steps})
         for t_i in range(n_steps):
             for s in live:
                 req = ls.slot_req[s]
@@ -1276,40 +1407,91 @@ class ServeEngine:
                 self._check_done(ls, s, req)
             self._track_peak(ls)
 
+    def sync_metrics(self, ls: _LoopState,
+                     wall: Optional[float] = None) -> MetricsRegistry:
+        """Refresh this engine's metrics registry from the loop state —
+        absolute values, safe to call repeatedly (the METRICS RPC calls
+        it on every snapshot; ``_stats`` reads through it, which is what
+        makes ``ServeStats`` a view over the registry)."""
+        reg = self.registry
+        c = reg.counter
+        n_tok = sum(len(r.tokens) for r in ls.results.values())
+        c("serve.requests").set(len(ls.results))
+        c("serve.tokens").set(n_tok)
+        c("serve.decode_steps").set(ls.steps)
+        c("serve.decode_dispatches").set(ls.dispatches)
+        c("serve.admit_dispatches").set(ls.admit_dispatches)
+        c("serve.replay_dispatches").set(ls.replay_dispatches)
+        c("serve.admit_compiles").set(self.n_admit_compiles)
+        c("serve.shared_page_hits").set(ls.shared_hits)
+        reg.gauge("serve.peak_pages", agg="max").set(ls.peak_pages)
+        reg.gauge("serve.pool_bytes").set(
+            engine.paged_state_nbytes(self.state))
+        if wall is not None:
+            reg.gauge("serve.wall_s", agg="max").set(wall)
+        for k, v in self.cache.counters().items():
+            c(f"cache.{k}").set(v)
+        reg.gauge("weights.bytes_per_step", agg="max").set(
+            self._weight_bytes[0])
+        reg.gauge("weights.raw_bytes_per_step", agg="max").set(
+            self._weight_bytes[1])
+        reg.gauge("weights.compressed", agg="max").set(
+            int(self.compress_weights))
+        c("weights.hbm_bytes").set(ls.steps * self._weight_bytes[0])
+        reg.histogram("latency.request_s").set_values(
+            [r.latency_s for r in ls.results.values()])
+        reg.histogram("latency.ttft_s").set_values(list(ls.ttft_s.values()))
+        reg.histogram("latency.admit_window_s").set_values(
+            ls.admit_window_s)
+        reg.histogram("latency.decode_window_s").set_values(
+            ls.decode_window_s)
+        return reg
+
     def _stats(self, ls: _LoopState, wall: float) -> ServeStats:
         stored_pb, raw_pb = cache_mod.page_bytes(self.cfg, self.run_cfg)
-        n_tok = sum(len(r.tokens) for r in ls.results.values())
-        lats = sorted(r.latency_s for r in ls.results.values())
-        pct = (lambda q: float(np.percentile(lats, q)) if lats else 0.0)
+        reg = self.sync_metrics(ls, wall)
+        v = reg.value
+        lat = summarize_latencies(reg.values_of("latency.request_s"))
+        ttft = summarize_latencies(reg.values_of("latency.ttft_s"))
+        admitw = summarize_latencies(reg.values_of("latency.admit_window_s"))
+        decw = summarize_latencies(reg.values_of("latency.decode_window_s"))
+        n_req, n_tok = v("serve.requests"), v("serve.tokens")
+        steps = v("serve.decode_steps")
         return ServeStats(
-            n_requests=len(ls.results), n_tokens=n_tok,
-            decode_steps=ls.steps,
-            n_dispatches=ls.dispatches,
-            n_admit_dispatches=ls.admit_dispatches,
-            n_replay_dispatches=ls.replay_dispatches,
-            n_admit_compiles=self.n_admit_compiles,
-            shared_page_hits=ls.shared_hits,
+            n_requests=n_req, n_tokens=n_tok,
+            decode_steps=steps,
+            n_dispatches=v("serve.decode_dispatches"),
+            n_admit_dispatches=v("serve.admit_dispatches"),
+            n_replay_dispatches=v("serve.replay_dispatches"),
+            n_admit_compiles=v("serve.admit_compiles"),
+            shared_page_hits=v("serve.shared_page_hits"),
             wall_s=wall,
-            requests_per_s=len(ls.results) / max(wall, 1e-9),
+            requests_per_s=n_req / max(wall, 1e-9),
             tokens_per_s=n_tok / max(wall, 1e-9),
-            peak_pages=ls.peak_pages,
-            peak_cache_bytes=ls.peak_pages * stored_pb,
-            peak_cache_raw_bytes=ls.peak_pages * raw_pb,
-            mean_latency_s=float(np.mean(lats)) if lats else 0.0,
-            latency_p50_s=pct(50), latency_p95_s=pct(95),
+            peak_pages=v("serve.peak_pages"),
+            peak_cache_bytes=v("serve.peak_pages") * stored_pb,
+            peak_cache_raw_bytes=v("serve.peak_pages") * raw_pb,
+            mean_latency_s=lat["mean"],
+            latency_p50_s=lat["p50"], latency_p95_s=lat["p95"],
             decode_backend=kernel_ops.resolve_decode_backend(
                 self.run_cfg.codec),
-            cache_hot_hits=self.cache.hot_hits,
-            cache_spilled_pages=self.cache.spilled_pages,
-            cache_spilled_bytes=self.cache.spilled_bytes,
-            cache_fetched_pages=self.cache.fetched_pages,
-            cache_fetched_bytes=self.cache.fetched_bytes,
-            cache_reprefill_cols=self.cache.reprefill_cols,
-            cache_evicted_cols=self.cache.evicted_cols,
+            cache_hot_hits=v("cache.hot_hits"),
+            cache_spilled_pages=v("cache.spilled_pages"),
+            cache_spilled_bytes=v("cache.spilled_bytes"),
+            cache_fetched_pages=v("cache.fetched_pages"),
+            cache_fetched_bytes=v("cache.fetched_bytes"),
+            cache_reprefill_cols=v("cache.reprefill_cols"),
+            cache_evicted_cols=v("cache.evicted_cols"),
             weights_compressed=self.compress_weights,
             weight_backend=self.weight_backend,
-            weight_bytes_per_step=self._weight_bytes[0],
-            weight_raw_bytes_per_step=self._weight_bytes[1])
+            weight_bytes_per_step=v("weights.bytes_per_step"),
+            weight_raw_bytes_per_step=v("weights.raw_bytes_per_step"),
+            ttft_mean_s=ttft["mean"], ttft_p50_s=ttft["p50"],
+            ttft_p95_s=ttft["p95"],
+            admit_window_mean_s=admitw["mean"],
+            decode_window_mean_s=decw["mean"],
+            inter_token_mean_s=(sum(ls.decode_window_s) / steps
+                                if steps else 0.0))
 
     def run(self, requests: List[Request]
             ) -> Tuple[List[RequestResult], ServeStats]:

@@ -60,7 +60,9 @@ try:  # ml_dtypes ships with jax; the wire format needs its bfloat16
 except ImportError:  # pragma: no cover - jax always bundles ml_dtypes
     BF16 = np.dtype(np.uint16)
 
-from repro.hw.noc import LinkModel
+from repro.hw.noc import LinkModel, MeteredLink
+
+from .telemetry import MetricsRegistry
 
 # content addressing is shared with the scheduler's prefix index and the
 # tiered PageCache (repro.serve.digest owns both hash conventions); the
@@ -545,6 +547,14 @@ class DigestStore:
 class TransportStats:
     """Cumulative link accounting across transfers (one link / direction).
 
+    Since the telemetry refactor this is a *view*: every field is backed
+    by a ``transport.*`` / ``link.*`` counter in the transport's
+    :class:`~repro.serve.telemetry.MetricsRegistry` (see
+    :meth:`from_registry`); ``PageTransport.stats`` materializes it on
+    read, so the field names every test and bench row keys on are
+    unchanged while the counters themselves live in the unified
+    namespace.
+
     ``wire_bytes`` counts the data plane only — streaming chunks plus the
     closing wire blobs; a socket transport's control frames (hello,
     inventory, acks) are not metered, matching the loopback baseline."""
@@ -571,6 +581,25 @@ class TransportStats:
         the serving-stack analogue of the paper's Table 3 column."""
         return 1.0 - self.wire_bytes / max(self.raw_bytes, 1)
 
+    @classmethod
+    def from_registry(cls, reg: MetricsRegistry) -> "TransportStats":
+        v = reg.value
+        return cls(
+            n_transfers=v("transport.transfers"),
+            wire_bytes=v("transport.wire_bytes"),
+            wire_bytes_nodedup=v("transport.wire_bytes_nodedup"),
+            raw_bytes=v("transport.raw_bytes"),
+            pages_inline=v("transport.pages_inline"),
+            pages_ref=v("transport.pages_ref"),
+            pages_streamed=v("transport.pages_streamed"),
+            stream_chunk_bytes=v("transport.stream_chunk_bytes"),
+            pages_resent=v("transport.pages_resent"),
+            store_evicted=v("transport.store_evicted"),
+            pages_fetched=v("transport.pages_fetched"),
+            fetch_bytes=v("transport.fetch_bytes"),
+            model_ns=float(v("link.model_ns")),
+            model_ns_raw=float(v("link.model_ns_raw")))
+
 
 class PageTransport:
     """Interface of the prefill→decode handoff link.
@@ -587,12 +616,16 @@ class PageTransport:
     over TCP — see ``repro.serve.net.framing``).
     """
 
-    stats: TransportStats
-
     def __init__(self):
-        self.stats = TransportStats()
+        # every byte/latency counter lives here (transport.* / link.*);
+        # ``stats`` below is the compatibility view over it
+        self.registry = MetricsRegistry()
         self._seq_ids = itertools.count(1)
         self._ever_sent: Dict[str, Set[bytes]] = {}
+
+    @property
+    def stats(self) -> TransportStats:
+        return TransportStats.from_registry(self.registry)
 
     def new_stream(self) -> int:
         """Mint a transfer id for a streamed sequence."""
@@ -603,9 +636,10 @@ class PageTransport:
         """Meter inline payloads this link already shipped once: a repeat
         means the receiver's store evicted them (``pages_resent``)."""
         seen = self._ever_sent.setdefault(dst, set())
+        resent = self.registry.counter("transport.pages_resent")
         for digest, _ in inline:
             if digest in seen:
-                self.stats.pages_resent += 1
+                resent.inc()
             seen.add(digest)
 
     def inventory(self, dst: str) -> Set[bytes]:
@@ -657,6 +691,10 @@ class LoopbackTransport(PageTransport):
         self.dedup = dedup
         self.hops = hops
         self.link = link if link is not None else LinkModel()
+        # actual traffic is priced through the meter (-> link.bytes /
+        # link.model_ns); the bare ``self.link`` stays for hypothetical
+        # baselines (model_ns_raw) so they never pollute link bytes
+        self._meter = MeteredLink(self.link, self.registry)
         self.max_store_pages = max_store_pages
         self._stores: Dict[str, DigestStore] = {}
 
@@ -673,13 +711,13 @@ class LoopbackTransport(PageTransport):
         data, inline, refs = pack_chunk(seq_id, entries, known)
         if self.dedup:
             self._count_resent(dst, inline)
-        st = self.stats
-        st.stream_chunk_bytes += len(data)
-        st.wire_bytes += len(data)
-        st.pages_streamed += len(inline)
-        st.pages_inline += len(inline)
-        st.pages_ref += len(refs)
-        st.model_ns += self.link.transfer_ns(len(data), self.hops)
+        reg = self.registry
+        reg.counter("transport.stream_chunk_bytes").inc(len(data))
+        reg.counter("transport.wire_bytes").inc(len(data))
+        reg.counter("transport.pages_streamed").inc(len(inline))
+        reg.counter("transport.pages_inline").inc(len(inline))
+        reg.counter("transport.pages_ref").inc(len(refs))
+        self._meter.transfer_ns(len(data), self.hops)
         for digest, payload in inline:
             store[digest] = payload
         for digest in itertools.chain((d for d, _ in inline), refs):
@@ -688,7 +726,7 @@ class LoopbackTransport(PageTransport):
     def abort_stream(self, dst, seq_id) -> None:
         store = self.store(dst)
         store.release(seq_id)
-        self.stats.store_evicted += store.trim()
+        self.registry.counter("transport.store_evicted").inc(store.trim())
 
     def send(self, blob: SequenceBlob, dst: str,
              seq_id: Optional[int] = None) -> bytes:
@@ -700,15 +738,16 @@ class LoopbackTransport(PageTransport):
         # a ref entry is the inline entry minus its payload, so the
         # dedup-off size is pure arithmetic — no second serialization
         nodedup_len = len(data) + len(refs) * blob._payload_size()
-        st = self.stats
-        st.n_transfers += 1
-        st.wire_bytes += len(data)
-        st.wire_bytes_nodedup += nodedup_len
-        st.raw_bytes += blob.raw_bytes
-        st.pages_inline += len(inline)
-        st.pages_ref += len(refs)
-        st.model_ns += self.link.transfer_ns(len(data), self.hops)
-        st.model_ns_raw += self.link.transfer_ns(blob.raw_bytes, self.hops)
+        reg = self.registry
+        reg.counter("transport.transfers").inc()
+        reg.counter("transport.wire_bytes").inc(len(data))
+        reg.counter("transport.wire_bytes_nodedup").inc(nodedup_len)
+        reg.counter("transport.raw_bytes").inc(blob.raw_bytes)
+        reg.counter("transport.pages_inline").inc(len(inline))
+        reg.counter("transport.pages_ref").inc(len(refs))
+        self._meter.transfer_ns(len(data), self.hops)
+        reg.counter("link.model_ns_raw").inc(
+            self.link.transfer_ns(blob.raw_bytes, self.hops))
         if self.dedup:
             for digest, payload in inline:
                 store[digest] = payload
@@ -722,7 +761,7 @@ class LoopbackTransport(PageTransport):
         blob = SequenceBlob.from_wire(data, store if self.dedup else None)
         if seq_id is not None:
             store.release(seq_id)
-        self.stats.store_evicted += store.trim()
+        self.registry.counter("transport.store_evicted").inc(store.trim())
         return blob
 
     def fetch(self, dst: str,
@@ -730,8 +769,8 @@ class LoopbackTransport(PageTransport):
         store = self.store(dst)
         out = {d: store[d] for d in digests if d in store}
         nbytes = sum(len(p) for p in out.values())
-        st = self.stats
-        st.pages_fetched += len(out)
-        st.fetch_bytes += nbytes
-        st.model_ns += self.link.transfer_ns(nbytes, self.hops)
+        reg = self.registry
+        reg.counter("transport.pages_fetched").inc(len(out))
+        reg.counter("transport.fetch_bytes").inc(nbytes)
+        self._meter.transfer_ns(nbytes, self.hops)
         return out

@@ -1,0 +1,295 @@
+"""Request-lifecycle tracing + unified metrics registry: registry
+snapshot/merge semantics, span-tree invariants on a served mix (every
+submitted request closes exactly one root span; children nest inside it),
+byte accounting by construction (summed trace bytes equal the stats
+counters exactly), Chrome-trace schema round-trip through
+``scripts/trace_summary.py``, the METRICS RPC snapshot merge across two
+socket replicas, and the telemetry-off identity guarantee."""
+
+import dataclasses
+import importlib.util
+import json
+import math
+import pathlib
+import socket
+import threading
+
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.core.collectives import CodecConfig
+from repro.serve import (DecodeReplica, DisaggEngine, PageHost, Request,
+                         ServeEngine, SocketTransport)
+from repro.serve.net import framing as fr
+from repro.serve.telemetry import (SNAPSHOT_VERSION, MetricsRegistry,
+                                   Tracer, sum_counters,
+                                   summarize_latencies)
+
+RNG = np.random.default_rng(23)
+
+CFG = ModelConfig(name="t1", family="dense", n_layers=2, d_model=64,
+                  n_heads=8, n_kv_heads=4, d_ff=128, vocab_size=500,
+                  head_dim=16)
+MAXLEN = 64
+
+
+def _run_cfg():
+    return RunConfig(codec=dataclasses.replace(CodecConfig(cache_block=4),
+                                               decode_backend="jax"))
+
+
+def _requests(n=4):
+    a = RNG.integers(0, 500, (12,)).astype(np.int32)
+    prompts = [a, RNG.integers(0, 500, (9,)).astype(np.int32), a.copy(),
+               RNG.integers(0, 500, (16,)).astype(np.int32)]
+    return [Request(uid=i, prompt=prompts[i % 4], max_new_tokens=3 + i % 3)
+            for i in range(n)]
+
+
+def _load_trace_summary():
+    path = (pathlib.Path(__file__).resolve().parents[1]
+            / "scripts" / "trace_summary.py")
+    spec = importlib.util.spec_from_file_location("trace_summary", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _span_bytes(tracer, names, key):
+    return sum(int(ev["args"].get(key, 0)) for ev in tracer.events
+               if ev["name"] in names)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_kinds_and_values():
+    reg = MetricsRegistry()
+    reg.counter("a.n").inc(3)
+    reg.counter("a.n").inc()
+    reg.gauge("a.peak", agg="max").set(7)
+    reg.histogram("a.lat").observe(0.5)
+    reg.histogram("a.lat").observe(1.5)
+    assert reg.value("a.n") == 4
+    assert reg.value("a.peak") == 7
+    assert reg.value("a.missing", default=-1) == -1
+    assert reg.values_of("a.lat") == [0.5, 1.5]
+    assert reg.values_of("a.n") == []        # not a histogram
+    # one name, one kind
+    with pytest.raises(TypeError):
+        reg.gauge("a.n")
+    with pytest.raises(TypeError):
+        reg.counter("a.lat")
+
+
+def test_snapshot_load_merge():
+    def make(n, peak, lat):
+        r = MetricsRegistry()
+        r.counter("serve.tokens").inc(n)
+        r.gauge("serve.peak_pages", agg="max").set(peak)
+        r.gauge("serve.wall_s", agg="sum").set(n * 0.25)
+        r.histogram("latency.request_s").observe(lat)
+        return r
+
+    s1, s2 = make(10, 4, 0.1).snapshot(), make(6, 9, 0.7).snapshot()
+    assert s1["version"] == SNAPSHOT_VERSION
+    # load() inverts snapshot()
+    back = MetricsRegistry().load(s1)
+    assert back.snapshot() == s1
+    merged = MetricsRegistry.merge([s1, s2])
+    assert merged["version"] == SNAPSHOT_VERSION
+    assert merged["counters"]["serve.tokens"] == 16
+    assert merged["gauges"]["serve.peak_pages"]["value"] == 9      # max
+    assert merged["gauges"]["serve.wall_s"]["value"] == 4.0        # sum
+    assert sorted(merged["hists"]["latency.request_s"]["values"]) == \
+        [0.1, 0.7]
+
+
+def test_latency_and_counter_helpers():
+    vals = [0.4, 0.1, 0.9, 0.2]
+    s = summarize_latencies(vals)
+    assert math.isclose(s["mean"], float(np.mean(vals)))
+    assert math.isclose(s["p50"], float(np.percentile(vals, 50)))
+    assert math.isclose(s["p95"], float(np.percentile(vals, 95)))
+    assert summarize_latencies([]) == {"mean": 0.0, "p50": 0.0, "p95": 0.0}
+    total = sum_counters([{"a": 1, "b": 2}, {"a": 3, "c": 5}])
+    assert total == {"a": 4, "b": 2, "c": 5}
+
+
+# ---------------------------------------------------------------------------
+# span tree + byte accounting (monolithic engine)
+# ---------------------------------------------------------------------------
+
+
+def test_monolithic_span_tree_and_byte_accounting():
+    run = _run_cfg()
+    reqs = _requests()
+    tracer = Tracer(enabled=True)
+    eng = ServeEngine(CFG, run, tp=1, n_slots=2, max_len=MAXLEN, seed=1,
+                     tracer=tracer)
+    results, st = eng.run(reqs)
+    assert len(results) == len(reqs)
+    # every submitted request closed exactly one root span
+    assert tracer.open_requests() == []
+    roots = [ev for ev in tracer.events if ev["name"] == "request"]
+    assert sorted(ev["args"]["uid"] for ev in roots) == \
+        [r.uid for r in reqs]
+    # the structural invariants are the ones trace_summary enforces
+    ts = _load_trace_summary()
+    errors = []
+    spans = [dict(ev, ts=ev["ts"] / 1e3, dur=ev["dur"] / 1e3)
+             for ev in tracer.events]
+    ts.validate(spans, errors)
+    assert errors == []
+    # byte accounting by construction: summed span bytes == counters
+    reg = eng.registry
+    assert st.cache_spilled_bytes > 0
+    assert _span_bytes(tracer, ("cache_spill",), "bytes") == \
+        reg.value("cache.spilled_bytes") == st.cache_spilled_bytes
+    assert _span_bytes(tracer, ("cache_fetch",), "bytes") == \
+        reg.value("cache.fetched_bytes") == st.cache_fetched_bytes
+    assert _span_bytes(tracer, ("decode_window",), "weight_bytes") == \
+        reg.value("weights.hbm_bytes") == \
+        st.decode_steps * st.weight_bytes_per_step
+    # span-derived latency summaries made it into the stats view
+    assert st.ttft_p95_s >= st.ttft_p50_s > 0
+    assert reg.values_of("latency.ttft_s")
+    assert len(reg.values_of("latency.request_s")) == len(reqs)
+
+
+# ---------------------------------------------------------------------------
+# disagg wire accounting + chrome trace round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_disagg_wire_bytes_and_trace_roundtrip(tmp_path):
+    run = _run_cfg()
+    reqs = _requests()
+    tracer = Tracer(enabled=True)
+    eng = DisaggEngine(CFG, run, tp=1, n_prefill=1, n_decode=2, n_slots=2,
+                       max_len=MAXLEN, seed=1, streaming=True,
+                       tracer=tracer)
+    results, st = eng.run(reqs)
+    assert len(results) == len(reqs)
+    assert tracer.open_requests() == []
+    names = {ev["name"] for ev in tracer.events}
+    assert {"request", "admit", "export", "wire", "import",
+            "decode"} <= names
+    assert "wire_chunk" in names            # streaming shipped chunks
+    # trace wire bytes == transport registry == stats, exactly
+    wire = _span_bytes(tracer, ("wire", "wire_chunk"), "wire_bytes")
+    assert wire == eng.transport.registry.value("transport.wire_bytes")
+    assert wire == st.wire_bytes > 0
+    assert st.ttft_p95_s >= st.ttft_p50_s > 0
+    assert all(r.ttft_s > 0 for r in results)
+    # chrome-trace JSON round-trips through the summarizer's checker
+    ts = _load_trace_summary()
+    path = tmp_path / "trace.json"
+    tracer.write(str(path))
+    trace = json.loads(path.read_text())
+    assert {e["ph"] for e in trace["traceEvents"]} == {"M", "X"}
+    assert ts.main([str(path), "--check"]) == 0
+    assert ts.main([str(path)]) == 0        # summary table mode
+    # a duplicated root span is caught
+    bad = dict(trace)
+    root = next(e for e in trace["traceEvents"]
+                if e["ph"] == "X" and e["name"] == "request")
+    bad["traceEvents"] = trace["traceEvents"] + [dict(root)]
+    badp = tmp_path / "bad.json"
+    badp.write_text(json.dumps(bad))
+    assert ts.main([str(badp), "--check"]) == 1
+    assert ts.main([str(tmp_path / "missing.json"), "--check"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# METRICS RPC across two socket replicas
+# ---------------------------------------------------------------------------
+
+
+def _start_host(run, seed=1):
+    eng = ServeEngine(CFG, run, tp=1, n_slots=2, max_len=MAXLEN, seed=seed)
+    fp = fr.config_fingerprint(CFG, run.codec, 1, 2, MAXLEN, seed)
+    host = PageHost(DecodeReplica(eng), fp, max_store_pages=4096)
+    listener = socket.create_server(("127.0.0.1", 0))
+    port = listener.getsockname()[1]
+
+    def serve():
+        try:
+            host.serve_forever(listener, once=True)
+        except OSError:
+            pass
+
+    threading.Thread(target=serve, daemon=True).start()
+    return listener, port
+
+
+def test_metrics_rpc_two_replica_merge():
+    run = _run_cfg()
+    reqs = _requests()
+    l1, p1 = _start_host(run)
+    l2, p2 = _start_host(run)
+    addrs = [f"127.0.0.1:{p1}", f"127.0.0.1:{p2}"]
+    tr = SocketTransport()
+    eng = DisaggEngine(CFG, run, tp=1, n_prefill=1, n_slots=2,
+                       max_len=MAXLEN, seed=1, transport=tr,
+                       streaming=True, decode_addrs=addrs)
+    try:
+        results, st = eng.run(reqs)
+        snaps = [tr.metrics(d) for d in ("decode0", "decode1")]
+        for s in snaps:
+            assert s["version"] == SNAPSHOT_VERSION
+        # both replicas decoded something; the merge sums their counters
+        per = [s["counters"].get("serve.tokens", 0) for s in snaps]
+        assert all(n > 0 for n in per)
+        merged = MetricsRegistry.merge(snaps)
+        assert merged["counters"]["serve.tokens"] == sum(per)
+        # fleet snapshot = prefills + remote replicas + transport registry
+        fleet = eng.metrics_snapshot()
+        assert fleet["version"] == SNAPSHOT_VERSION
+        assert fleet["counters"]["transport.wire_bytes"] == st.wire_bytes
+        assert fleet["counters"]["serve.tokens"] >= sum(per)
+        assert fleet["hists"]["latency.transfer_s"]["values"]
+        assert json.loads(json.dumps(fleet)) == fleet   # JSON-clean
+    finally:
+        tr.close()
+        l1.close()
+        l2.close()
+
+
+# ---------------------------------------------------------------------------
+# telemetry off: identical streams, identical stats, zero cost
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_tracer_identity():
+    run = _run_cfg()
+    reqs = _requests()                   # ONE draw: both engines see the
+    res_off, st_off = ServeEngine(CFG, run, tp=1, n_slots=2,  # same mix
+                                  max_len=MAXLEN, seed=1).run(reqs)
+    tracer = Tracer(enabled=True)
+    eng_on = ServeEngine(CFG, run, tp=1, n_slots=2, max_len=MAXLEN, seed=1,
+                         tracer=tracer)
+    res_on, st_on = eng_on.run(reqs)
+    for a, b in zip(res_off, res_on):
+        assert a.tokens == b.tokens and a.stop_reason == b.stop_reason
+    deterministic = [
+        "n_requests", "n_tokens", "decode_steps", "n_dispatches",
+        "n_admit_dispatches", "n_replay_dispatches", "n_admit_compiles",
+        "shared_page_hits", "peak_pages", "peak_cache_bytes",
+        "peak_cache_raw_bytes", "decode_backend", "cache_hot_hits",
+        "cache_spilled_pages", "cache_spilled_bytes", "cache_fetched_pages",
+        "cache_fetched_bytes", "cache_reprefill_cols", "cache_evicted_cols",
+        "weights_compressed", "weight_backend", "weight_bytes_per_step",
+        "weight_raw_bytes_per_step"]
+    for f in deterministic:
+        assert getattr(st_off, f) == getattr(st_on, f), f
+    # the off tracer records nothing and never reads the clock
+    off = Tracer(enabled=False)
+    assert not off.enabled and off.now() == 0
+    off.request_begin(0, pid="x")
+    off.stage(0, "admit")
+    off.request_end(0)
+    assert off.events == [] and off.open_requests() == []
